@@ -1,0 +1,35 @@
+"""Paper Table 2: ISPD98-like suite."""
+from __future__ import annotations
+
+import sys
+
+from repro.data.hypergraphs import ispd_like, BENCH_ISPD
+from .partition_common import run_methods, norm_avg
+
+METHODS = ("multilevel", "ext_memetic", "impart")
+
+
+def run(quick: bool = False, scale: float = 0.08, out=sys.stdout):
+    designs = list(BENCH_ISPD)[: 2 if quick else 4]
+    scenarios = [(4, 0.08)] if quick else [(4, 0.08), (10, 0.20)]
+    rows = []
+    print("table,design,k,eps,method,cut,wall_s", file=out)
+    for name in designs:
+        hg = ispd_like(name, scale=scale)
+        for k, eps in scenarios:
+            res = run_methods(hg, k, eps, seed=hash(name) % 1000,
+                              alpha=3 if quick else 5,
+                              beta=3 if quick else 5, methods=METHODS)
+            rows.append(res)
+            for m in METHODS:
+                print(f"ispd98,{name},{k},{eps},{m},"
+                      f"{res[m]['cut']:.0f},{res[m]['wall_s']:.1f}",
+                      file=out)
+    na = norm_avg(rows, METHODS)
+    for m in METHODS:
+        print(f"ispd98,NORM_AVG,,,{m},{na[m]:.4f},", file=out)
+    return rows, na
+
+
+if __name__ == "__main__":
+    run(quick="--quick" in sys.argv)

@@ -1,0 +1,72 @@
+"""Kernel microbenchmarks: Pallas (interpret) vs pure-jnp oracle vs the
+CSR segment-sum path.  On CPU the interpret-mode timings are NOT TPU
+timings — the meaningful outputs are the correctness deltas and the
+bytes/flop footprints; wall times are recorded for regression tracking.
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops, ref
+from repro.core import metrics, refine
+from repro.data.hypergraphs import titan_like
+
+
+def _time(fn, reps=3):
+    jax.block_until_ready(fn())  # warmup/compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        jax.block_until_ready(fn())
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def run(quick: bool = False, out=sys.stdout):
+    hg = titan_like("neuron_like", scale=0.02 if quick else 0.05)
+    k = 16
+    rng = np.random.default_rng(0)
+    part = rng.integers(0, k, hg.n).astype(np.int32)
+    pins = jnp.asarray(ops.edge_pin_matrix(hg))
+    hga = hg.arrays()
+    padded = refine.pad_part(part, hga.n_pad)
+    ew = jnp.zeros(pins.shape[0], jnp.float32
+                   ).at[: hg.m].set(jnp.asarray(hg.edge_weights))
+
+    print("table,name,us_per_call,derived", file=out)
+    t_k = _time(lambda: ops.connectivity(pins, jnp.asarray(part), k))
+    t_r = _time(lambda: ref.connectivity_ref(pins, jnp.asarray(part), k))
+    t_csr = _time(lambda: metrics.connectivity_jit(hga, padded, k))
+    same = bool((np.asarray(ops.connectivity(pins, jnp.asarray(part), k))
+                 [: hg.m] ==
+                 np.asarray(metrics.connectivity_jit(hga, padded, k))
+                 [: hg.m]).all())
+    print(f"kernels,connectivity_pallas,{t_k:.0f},exact={same}", file=out)
+    print(f"kernels,connectivity_ref,{t_r:.0f},", file=out)
+    print(f"kernels,connectivity_csr_xla,{t_csr:.0f},", file=out)
+
+    t_c = _time(lambda: ops.cutsize(pins, jnp.asarray(part), ew, k))
+    cut_k = float(ops.cutsize(pins, jnp.asarray(part), ew, k))
+    cut_c = float(metrics.cutsize_jit(hga, padded, k))
+    print(f"kernels,cutsize_pallas,{t_c:.0f},"
+          f"delta={abs(cut_k - cut_c):.1e}", file=out)
+
+    # interpret mode executes the (B, L) grid in Python — keep it tiny
+    # (the TPU grid is sequential hardware DMA; size there is free)
+    table = jnp.asarray(rng.normal(size=(10_000, 128)).astype(np.float32))
+    idx = jnp.asarray(rng.integers(0, 10_000, size=(16, 2)).astype(
+        np.int32))
+    t_e = _time(lambda: ops.embedding_bag(table, idx))
+    t_er = _time(lambda: ref.embedding_bag_ref(table, idx))
+    d = float(jnp.abs(ops.embedding_bag(table, idx)
+                      - ref.embedding_bag_ref(table, idx)).max())
+    print(f"kernels,embedding_bag_pallas,{t_e:.0f},maxerr={d:.1e}",
+          file=out)
+    print(f"kernels,embedding_bag_ref,{t_er:.0f},", file=out)
+
+
+if __name__ == "__main__":
+    run(quick="--quick" in sys.argv)

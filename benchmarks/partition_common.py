@@ -1,0 +1,56 @@
+"""Shared harness for the partition-quality benchmarks (paper Tables 1-2,
+Figures 5-6): one row per (design, k, eps) comparing
+
+  multilevel   — KaHyPar-stand-in, best-of-alpha independent runs
+  ext_memetic  — KaHyPar-E-stand-in (full partitioner per operation)
+  impart       — ours (single multilevel process, integrated operators)
+
+All three get the same effective budget shape the paper uses (population
+size alpha; the external baseline is allocated MORE work per op, mirroring
+the paper giving KaHyPar-E double time).
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+import numpy as np
+
+from repro.core import (ImpartConfig, impart_partition, multilevel_best_of,
+                        external_memetic)
+
+
+def run_methods(hg, k: int, eps: float, seed: int, alpha: int = 5,
+                beta: int = 5, methods=("multilevel", "ext_memetic",
+                                        "impart")) -> Dict[str, Dict]:
+    out = {}
+    if "multilevel" in methods:
+        t0 = time.perf_counter()
+        r = multilevel_best_of(hg, k, eps, seed=seed, repetitions=alpha)
+        out["multilevel"] = {"cut": r.cut,
+                             "wall_s": time.perf_counter() - t0}
+    if "ext_memetic" in methods:
+        t0 = time.perf_counter()
+        r = external_memetic(hg, k, eps, seed=seed, population=alpha,
+                             generations=alpha)
+        out["ext_memetic"] = {"cut": r.cut,
+                              "wall_s": time.perf_counter() - t0}
+    if "impart" in methods:
+        t0 = time.perf_counter()
+        r = impart_partition(hg, ImpartConfig(
+            k=k, eps=eps, alpha=alpha, beta=beta, seed=seed,
+            final_vcycles=0))
+        out["impart"] = {"cut": r.cut, "wall_s": time.perf_counter() - t0,
+                         "trace": r.trace}
+    return out
+
+
+def norm_avg(rows: List[Dict], methods, ref: str = "multilevel") -> Dict:
+    """Geometric mean of cut ratios vs the reference method (the paper's
+    Norm. Avg. row, referenced to KaHyPar)."""
+    out = {}
+    for m in methods:
+        ratios = [r[m]["cut"] / max(r[ref]["cut"], 1e-9) for r in rows
+                  if m in r and ref in r]
+        out[m] = float(np.exp(np.mean(np.log(ratios)))) if ratios else None
+    return out

@@ -1,0 +1,93 @@
+"""Roofline table builder: reads reports/dryrun/*.json, emits the
+EXPERIMENTS.md §Roofline markdown table + reports/roofline.csv."""
+from __future__ import annotations
+
+import csv
+import glob
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.configs.registry import ARCHS                      # noqa: E402
+from repro.launch.analytic import roofline_terms, PEAK_FLOPS  # noqa: E402
+
+
+def load_records(dryrun_dir: str = "reports/dryrun", mesh: str = "single"):
+    recs = []
+    for f in sorted(glob.glob(os.path.join(dryrun_dir, "*.json"))):
+        r = json.load(open(f))
+        if not r.get("ok") or r.get("mesh") != mesh:
+            continue
+        recs.append(r)
+    return recs
+
+
+def build_table(dryrun_dir: str = "reports/dryrun", mesh: str = "single"):
+    rows = []
+    for r in load_records(dryrun_dir, mesh):
+        spec = ARCHS.get(r["arch"])
+        try:
+            t = roofline_terms(r, spec)
+        except Exception:
+            t = roofline_terms(r, None)
+        mem = r.get("memory", {})
+        args_gb = (mem.get("argument_bytes") or 0) / 1e9
+        tmp_gb = (mem.get("temp_bytes") or 0) / 1e9
+        rows.append({
+            "arch": r["arch"], "shape": r["shape"], "kind": r["kind"],
+            "mesh": r["mesh"], "n_devices": r["n_devices"],
+            "dot_flops_dev": r["hlo"]["dot_flops"],
+            "hbm_bytes_dev": r["hlo"]["hbm_bytes"],
+            "wire_bytes_dev": r["hlo"]["wire_bytes"],
+            "t_compute_s": t["t_compute_s"], "t_memory_s": t["t_memory_s"],
+            "t_collective_s": t["t_collective_s"],
+            "dominant": t["dominant"],
+            "model_flops": t.get("model_flops", float("nan")),
+            "useful_ratio": t.get("useful_ratio", float("nan")),
+            "roofline_mfu": t.get("roofline_mfu", float("nan")),
+            "arg_GB_dev": args_gb, "temp_GB_dev": tmp_gb,
+            "compile_s": r.get("compile_s"),
+        })
+    return rows
+
+
+def to_markdown(rows):
+    hdr = ("| arch | shape | t_comp (s) | t_mem (s) | t_coll (s) | bound "
+           "| MODEL_FLOPs | useful/HLO | roofline-MFU | mem/dev (arg+tmp GB) |")
+    sep = "|" + "---|" * 10
+    lines = [hdr, sep]
+    for r in sorted(rows, key=lambda x: (x["arch"], x["shape"])):
+        mf = r["model_flops"]
+        mf_s = f"{mf:.2e}" if mf == mf else "n/a"
+        ur = r["useful_ratio"]
+        ur_s = f"{ur:.2f}" if ur == ur else "n/a"
+        mfu = r["roofline_mfu"]
+        mfu_s = f"{100 * mfu:.1f}%" if mfu == mfu else "n/a"
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['t_compute_s']:.4f} "
+            f"| {r['t_memory_s']:.4f} | {r['t_collective_s']:.4f} "
+            f"| **{r['dominant']}** | {mf_s} | {ur_s} | {mfu_s} "
+            f"| {r['arg_GB_dev']:.2f}+{r['temp_GB_dev']:.2f} |")
+    return "\n".join(lines)
+
+
+def main():
+    os.makedirs("reports", exist_ok=True)
+    for mesh in ("single", "multi"):
+        rows = build_table(mesh=mesh)
+        if not rows:
+            continue
+        path = f"reports/roofline_{mesh}.csv"
+        with open(path, "w", newline="") as f:
+            w = csv.DictWriter(f, fieldnames=list(rows[0].keys()))
+            w.writeheader()
+            w.writerows(rows)
+        print(f"# {mesh}-pod mesh: {len(rows)} cells -> {path}")
+        if mesh == "single":
+            print(to_markdown(rows))
+
+
+if __name__ == "__main__":
+    main()

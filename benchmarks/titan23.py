@@ -1,0 +1,37 @@
+"""Paper Table 1: Titan23-like suite, k in {4, 10}, imbalance 2%/5% of
+|V| (=> eps = k * p, footnote 4 of the paper)."""
+from __future__ import annotations
+
+import sys
+import time
+
+from repro.data.hypergraphs import titan_like, BENCH_TITAN
+from .partition_common import run_methods, norm_avg
+
+METHODS = ("multilevel", "ext_memetic", "impart")
+
+
+def run(quick: bool = False, scale: float = 0.08, out=sys.stdout):
+    designs = list(BENCH_TITAN)[: 2 if quick else 5]
+    scenarios = [(4, 0.08)] if quick else [(4, 0.08), (10, 0.20)]
+    rows = []
+    print("table,design,k,eps,method,cut,wall_s", file=out)
+    for name in designs:
+        hg = titan_like(name, scale=scale)
+        for k, eps in scenarios:
+            res = run_methods(hg, k, eps, seed=hash(name) % 1000,
+                              alpha=3 if quick else 5,
+                              beta=3 if quick else 5, methods=METHODS)
+            rows.append(res)
+            for m in METHODS:
+                print(f"titan23,{name},{k},{eps},{m},"
+                      f"{res[m]['cut']:.0f},{res[m]['wall_s']:.1f}",
+                      file=out)
+    na = norm_avg(rows, METHODS)
+    for m in METHODS:
+        print(f"titan23,NORM_AVG,,,{m},{na[m]:.4f},", file=out)
+    return rows, na
+
+
+if __name__ == "__main__":
+    run(quick="--quick" in sys.argv)

@@ -1,0 +1,45 @@
+"""The paper's technique as the framework's placement engine (DESIGN.md
+§4): IMPart partitions a power-law graph across a device mesh, and we
+measure the halo-exchange volume against random (hash) placement — the
+communication the GNN full-batch trainer would put on the wire per layer.
+
+    PYTHONPATH=src python examples/gnn_partition_pipeline.py
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+
+from repro.apps.placement import partition_graph_for_mesh, halo_volume
+from repro.data.graphs import power_law_graph
+
+
+def main():
+    n, m, devices = 2500, 15000, 16
+    ei = power_law_graph(n, m, seed=3)
+    print(f"graph: {n} nodes, {ei.shape[1]} edges -> {devices} devices")
+
+    res = partition_graph_for_mesh(ei, n, devices, eps=0.06, seed=0,
+                                   quality="fast")
+    feat_bytes = 70 * 4  # gatedgcn hidden dim x f32
+    rng = np.random.default_rng(1)
+    random_assign = rng.integers(0, devices, n).astype(np.int32)
+    v_rand = halo_volume(ei, random_assign, feat_bytes)
+    v_impart = halo_volume(ei, res.assignment, feat_bytes)
+    print(f"cut edges           : {res.cut:.0f} (random {res.random_cut:.0f})")
+    print(f"halo bytes / layer  : {v_impart / 1e6:.2f} MB "
+          f"(random {v_rand / 1e6:.2f} MB)")
+    print(f"communication saved : {100 * (1 - v_impart / v_rand):.1f}% "
+          f"[partitioner wall {res.wall_s:.1f}s]")
+    assert v_impart < v_rand, "IMPart placement must beat hash placement"
+
+    # per-device load balance of the owner-compute assignment
+    loads = np.bincount(res.assignment, minlength=devices)
+    print(f"node load balance   : max/mean = "
+          f"{loads.max() / loads.mean():.3f}")
+
+
+if __name__ == "__main__":
+    main()

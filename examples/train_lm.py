@@ -1,0 +1,94 @@
+"""End-to-end training driver: a small GQA+MoE transformer trained for a
+few hundred steps on the synthetic token stream, with checkpointing, a
+mid-run simulated node failure, and elastic resume.
+
+    PYTHONPATH=src python examples/train_lm.py [--steps 200]
+"""
+import argparse
+import os
+import shutil
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import LMConfig, ShapeSpec, ArchSpec, LM_SHAPES
+from repro.train.steps import build_cell
+from repro.models import transformer
+from repro.optim import adamw
+from repro.checkpoint import CheckpointManager
+from repro.runtime import (Runner, ElasticTrainer, FailureInjector,
+                           StragglerWatchdog)
+from repro.data.lm_data import TokenStream, Prefetcher
+from repro.launch.mesh import make_local_mesh
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    args = ap.parse_args()
+
+    cfg = LMConfig(name="demo-moe", n_layers=4, d_model=128, n_heads=8,
+                   n_kv_heads=4, d_ff=256, vocab=512, moe_experts=4,
+                   moe_top_k=2, microbatches=2, sequence_parallel=False,
+                   dtype="float32")
+    spec = ArchSpec(arch_id="demo", config=cfg, shapes=LM_SHAPES,
+                    smoke_config=cfg)
+    shape = ShapeSpec("demo", "train", (("seq_len", args.seq),
+                                        ("global_batch", args.batch)))
+    opt_cfg = adamw.AdamWConfig(lr=1e-3, weight_decay=0.01)
+    cell = build_cell(spec, shape, multi_pod=False, opt_cfg=opt_cfg,
+                      n_devices=1)
+    step_fn = jax.jit(cell.fn)
+
+    ts = TokenStream(cfg.vocab, args.batch, args.seq, seed=0)
+
+    def batch_fn(step):
+        b = ts.next_batch(step)
+        return {"tokens": jnp.asarray(b["tokens"]),
+                "labels": jnp.asarray(b["labels"])}
+
+    ckpt_dir = "/tmp/repro_example_lm"
+    shutil.rmtree(ckpt_dir, ignore_errors=True)
+    injector = FailureInjector({args.steps // 2: "node"})
+
+    params = transformer.init_params(cfg, jax.random.PRNGKey(0))
+    state0 = {"params": params, "opt": adamw.init(params, opt_cfg)}
+    losses = []
+
+    def make_runner(attempt):
+        ckpt = CheckpointManager(ckpt_dir, keep=2)
+        if ckpt.latest_step() is None:
+            st, start = state0, 0
+        else:
+            st, extra = ckpt.restore(state0)
+            start = extra["data_cursor"]
+            print(f"[elastic] attempt {attempt}: resumed from step {start}")
+        return Runner(step_fn=step_fn, state=st, next_batch=batch_fn,
+                      ckpt=ckpt, step=start, ckpt_every=25,
+                      injector=injector, watchdog=StragglerWatchdog())
+
+    mesh = make_local_mesh()
+    with jax.set_mesh(mesh):
+        t0 = time.perf_counter()
+        trainer = ElasticTrainer(make_runner, max_restarts=2)
+        # probe a few losses manually first for the report
+        st, first = step_fn(state0, batch_fn(0))
+        result = trainer.run(args.steps)
+    final = result["metrics"]
+    print(f"first-step loss : {float(first['loss']):.4f}")
+    print(f"final-step loss : {float(final['loss']):.4f}  "
+          f"(steps={result['final_step']}, restarts={result['restarts']}, "
+          f"wall={time.perf_counter() - t0:.0f}s)")
+    assert float(final["loss"]) < float(first["loss"]), "loss must drop"
+    print("loss decreased through a simulated node failure + elastic "
+          "resume — OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,70 @@
+"""Hillclimb diagnostics: lower a cell, dump the top collectives /
+biggest HBM ops with their loop context."""
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", ""))
+
+import argparse
+import re
+import sys
+
+sys.path.insert(0, "src")
+
+import numpy as np
+from repro.launch.mesh import make_production_mesh
+from repro.launch.hlo_analysis import HloModuleStats, COLLECTIVES
+from repro.configs.registry import get_arch, get_opt
+from repro.train.steps import build_cell
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--top", type=int, default=15)
+    ap.add_argument("--save", default="")
+    args = ap.parse_args()
+
+    spec = get_arch(args.arch)
+    cell = build_cell(spec, spec.shape(args.shape), False,
+                      opt_cfg=get_opt(args.arch), n_devices=256)
+    mesh = make_production_mesh(multi_pod=False)
+    compiled = cell.lower(mesh).compile()
+    text = compiled.as_text()
+    if args.save:
+        open(args.save, "w").write(text)
+    st = HloModuleStats(text)
+    trips = cell.static.get("trips", [])
+
+    rows = []
+
+    def walk(comp, mult, depth, path):
+        for rec in st.comp_instrs.get(comp, []):
+            op, line = rec["op"], rec["line"]
+            if op == "while":
+                mb = re.search(r"body=%?([\w\.\-]+)", line)
+                t = trips[depth] if depth < len(trips) else 1
+                if mb and mb.group(1) in st.comp_instrs:
+                    walk(mb.group(1), mult * t, depth + 1,
+                         path + f">L{depth}x{t}")
+                continue
+            if op in COLLECTIVES:
+                kind, rb, wire = st._collective_wire(rec, comp)
+                meta = re.search(r'op_name="([^"]*)"', line)
+                rows.append((wire * mult, kind, rb, mult, path,
+                             (meta.group(1) if meta else "")[:110]))
+
+    walk(st.entry, 1.0, 0, "entry")
+    rows.sort(reverse=True)
+    total = sum(r[0] for r in rows)
+    print(f"total scaled wire: {total:.3e} B/device "
+          f"({total / 50e9:.1f}s at 50GB/s), {len(rows)} collective sites")
+    for wire, kind, rb, mult, path, meta in rows[: args.top]:
+        print(f"  {wire:.3e}B  {kind:20s} rb={rb:.2e} x{mult:.0f} "
+              f"[{path}]\n      {meta}")
+
+
+if __name__ == "__main__":
+    main()

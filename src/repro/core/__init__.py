@@ -1,0 +1,29 @@
+"""IMPart core: memetics-integrated multi-level hypergraph partitioning.
+
+Public API:
+  Hypergraph, HypergraphArrays      — data structures
+  impart_partition, ImpartConfig    — the paper's algorithm
+  multilevel_partition, external_memetic — baselines
+  make_population_step              — distributed (shard_map) population
+"""
+from .hypergraph import Hypergraph, HypergraphArrays, contract, project_partition
+from .coarsen import coarsen, recombination_thresholds, Hierarchy, Level
+from .initial_partition import initial_partition
+from .impart import impart_partition, ImpartConfig, ImpartResult
+from .baselines import (multilevel_partition, multilevel_best_of,
+                        external_memetic, MultilevelResult)
+from .recombine import recombine, ring_recombination, overlay_clustering
+from .mutate import mutate_population, similarity_sets
+from .vcycle import vcycle
+from .population import make_population_step, population_step_fn
+from . import metrics, refine, ilp
+
+__all__ = [
+    "Hypergraph", "HypergraphArrays", "contract", "project_partition",
+    "coarsen", "recombination_thresholds", "Hierarchy", "Level",
+    "initial_partition", "impart_partition", "ImpartConfig", "ImpartResult",
+    "multilevel_partition", "multilevel_best_of", "external_memetic",
+    "MultilevelResult", "recombine", "ring_recombination",
+    "overlay_clustering", "mutate_population", "similarity_sets", "vcycle",
+    "make_population_step", "population_step_fn", "metrics", "refine", "ilp",
+]

@@ -1,0 +1,231 @@
+"""Coarsening: level-parallel heavy-edge matching (host numpy).
+
+TPU adaptation note (see DESIGN.md §3): KaHyPar's n-level scheme removes a
+single vertex pair per level — inherently sequential.  We use the standard
+scalable alternative (Mt-KaHyPar-style): per round, every vertex picks its
+best-rated partner, mutual pairs whose combined weight fits the cluster cap
+are contracted, and the round repeats until the contraction limit.  The
+paper's beta recombination thresholds are applied over this level schedule
+with the exact geometric formula from Sec. 3.1.1.
+
+Rating (heavy-edge, weight-normalised, as in hMETIS/KaHyPar):
+    r(u, v) = sum_{e ⊇ {u,v}} w_e / (|e| - 1)  /  (c(u) * c(v))
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Tuple
+
+import numpy as np
+
+from .hypergraph import Hypergraph, contract
+
+
+@dataclasses.dataclass
+class Level:
+    """One coarsening level: the coarse hypergraph plus the mapping from
+    the finer level's vertices onto it."""
+    hg: Hypergraph
+    cluster_id: np.ndarray  # [n_finer] -> [0, hg.n)
+
+
+@dataclasses.dataclass
+class Hierarchy:
+    """levels[0] is the original hypergraph (cluster_id = identity)."""
+    levels: List[Level]
+
+    @property
+    def coarsest(self) -> Hypergraph:
+        return self.levels[-1].hg
+
+    @property
+    def original(self) -> Hypergraph:
+        return self.levels[0].hg
+
+    def sizes(self) -> List[int]:
+        return [lv.hg.n for lv in self.levels]
+
+    def project_to_level(self, part_coarse: np.ndarray, from_level: int,
+                         to_level: int) -> np.ndarray:
+        """Project a partition at ``from_level`` down to finer ``to_level``
+        (to_level < from_level)."""
+        part = np.asarray(part_coarse)
+        for li in range(from_level, to_level, -1):
+            part = part[self.levels[li].cluster_id]
+        return part
+
+
+# --------------------------------------------------------------------------
+# pair generation + rating
+# --------------------------------------------------------------------------
+def _candidate_pairs(hg: Hypergraph, max_edge_size: int = 512,
+                     max_stride: int = 4,
+                     restrict_part: Optional[np.ndarray] = None
+                     ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Vectorised pair candidates with heavy-edge ratings.
+
+    For each edge we emit pin pairs at strides 1..min(|e|-1, max_stride):
+    full coverage for small edges, a structured sample for large ones.
+    Edges above ``max_edge_size`` are skipped for rating (standard
+    practice — huge nets carry almost no locality signal).
+    """
+    sizes = hg.edge_sizes()
+    eids = hg.pin_edge_ids()
+    pins = hg.pins
+    ok_edge = sizes <= max_edge_size
+    rating_unit = np.where(
+        sizes > 1, hg.edge_weights / np.maximum(sizes - 1, 1), 0.0
+    ).astype(np.float64)
+
+    us, vs, rs = [], [], []
+    p = len(pins)
+    if p == 0:
+        z = np.zeros(0, np.int64)
+        return z, z, np.zeros(0, np.float64)
+    offs = np.repeat(hg.edge_offsets[:-1], sizes)  # start offset per pin
+    idx = np.arange(p, dtype=np.int64)
+    local = idx - offs
+    for d in range(1, max_stride + 1):
+        sel = (local + d < sizes[eids]) & ok_edge[eids]
+        if not sel.any():
+            continue
+        u = pins[idx[sel]]
+        v = pins[idx[sel] + d]
+        r = rating_unit[eids[sel]]
+        us.append(u)
+        vs.append(v)
+        rs.append(r)
+    if not us:
+        z = np.zeros(0, np.int64)
+        return z, z, np.zeros(0, np.float64)
+    u = np.concatenate(us).astype(np.int64)
+    v = np.concatenate(vs).astype(np.int64)
+    r = np.concatenate(rs)
+    if restrict_part is not None:  # partition-aware (V-cycle) coarsening
+        same = restrict_part[u] == restrict_part[v]
+        u, v, r = u[same], v[same], r[same]
+    # aggregate duplicate pairs
+    lo = np.minimum(u, v)
+    hi = np.maximum(u, v)
+    keep = lo != hi
+    lo, hi, r = lo[keep], hi[keep], r[keep]
+    if len(lo) == 0:
+        z = np.zeros(0, np.int64)
+        return z, z, np.zeros(0, np.float64)
+    key = lo * hg.n + hi
+    order = np.argsort(key, kind="stable")
+    key_s, lo_s, hi_s, r_s = key[order], lo[order], hi[order], r[order]
+    new_grp = np.ones(len(key_s), bool)
+    new_grp[1:] = key_s[1:] != key_s[:-1]
+    grp = np.cumsum(new_grp) - 1
+    n_grp = grp[-1] + 1
+    agg = np.zeros(n_grp, np.float64)
+    np.add.at(agg, grp, r_s)
+    first = np.nonzero(new_grp)[0]
+    lo_u, hi_u = lo_s[first], hi_s[first]
+    # normalise by cluster weights (prefer merging light vertices)
+    cw = hg.vertex_weights.astype(np.float64)
+    agg = agg / np.maximum(cw[lo_u] * cw[hi_u], 1e-12)
+    return lo_u, hi_u, agg
+
+
+def _mutual_match(n: int, u: np.ndarray, v: np.ndarray, r: np.ndarray,
+                  weights: np.ndarray, max_cluster_weight: float,
+                  rng: np.random.Generator) -> np.ndarray:
+    """Best-partner mutual matching.  Returns cluster_id [n] (renumbered)."""
+    partner = np.full(n, -1, np.int64)
+    if len(u):
+        # both directions; random jitter breaks rating ties reproducibly
+        uu = np.concatenate([u, v])
+        vv = np.concatenate([v, u])
+        rr = np.concatenate([r, r]) * (1.0 + 1e-9 * rng.random(2 * len(u)))
+        # weight-cap filter
+        okw = weights[uu] + weights[vv] <= max_cluster_weight
+        uu, vv, rr = uu[okw], vv[okw], rr[okw]
+        if len(uu):
+            order = np.lexsort((-rr, uu))
+            uu_s, vv_s = uu[order], vv[order]
+            first = np.ones(len(uu_s), bool)
+            first[1:] = uu_s[1:] != uu_s[:-1]
+            partner[uu_s[first]] = vv_s[first]
+    matched_to = np.full(n, -1, np.int64)
+    has = partner >= 0
+    cand = np.nonzero(has)[0]
+    mutual = cand[(partner[partner[cand]] == cand) & (partner[cand] != cand)]
+    # each mutual pair appears twice; keep u < partner[u]
+    pairs = mutual[mutual < partner[mutual]]
+    matched_to[pairs] = partner[pairs]
+    cluster = np.arange(n, dtype=np.int64)
+    cluster[matched_to[pairs]] = pairs  # partner joins the smaller id
+    # second chance: unmatched vertex whose best partner stayed single
+    single = (cluster == np.arange(n)) & ~np.isin(np.arange(n), pairs)
+    cand2 = np.nonzero(single & has)[0]
+    tgt = partner[cand2]
+    tgt_single = (cluster[tgt] == tgt) & ~np.isin(tgt, pairs)
+    okw2 = weights[cand2] + weights[tgt] <= max_cluster_weight
+    take = tgt_single & okw2 & (tgt != cand2)
+    # conflicts (two vertices picking the same single target): keep first
+    cand2, tgt = cand2[take], tgt[take]
+    if len(cand2):
+        order = np.argsort(tgt, kind="stable")
+        cand2, tgt = cand2[order], tgt[order]
+        first = np.ones(len(tgt), bool)
+        first[1:] = tgt[1:] != tgt[:-1]
+        # target must not itself be a source
+        src_set = np.zeros(n, bool)
+        src_set[cand2[first]] = True
+        sel = first & ~src_set[tgt]
+        cluster[cand2[sel]] = tgt[sel]
+    # renumber densely
+    _, dense = np.unique(cluster, return_inverse=True)
+    return dense.astype(np.int32)
+
+
+# --------------------------------------------------------------------------
+# the coarsener
+# --------------------------------------------------------------------------
+def coarsen(hg: Hypergraph, k: int, *, contraction_limit_factor: int = 64,
+            max_rounds: int = 64, min_shrink: float = 0.02,
+            seed: int = 0, restrict_part: Optional[np.ndarray] = None,
+            max_cluster_frac: float = 1.0) -> Hierarchy:
+    """Build the multilevel hierarchy down to ~contraction_limit_factor * k
+    vertices.  ``restrict_part`` enables partition-aware (V-cycle)
+    coarsening: only same-block vertices may merge."""
+    rng = np.random.default_rng(seed)
+    target = max(contraction_limit_factor * k, 8)
+    total_w = hg.total_weight
+    # cluster weight cap: keep coarsest vertices refinable (KaHyPar-style)
+    c_max = max_cluster_frac * max(
+        total_w / target * 4.0, float(hg.vertex_weights.max())
+    )
+    levels = [Level(hg=hg, cluster_id=np.arange(hg.n, dtype=np.int32))]
+    cur = hg
+    cur_part = None if restrict_part is None else np.asarray(restrict_part)
+    for _ in range(max_rounds):
+        if cur.n <= target:
+            break
+        u, v, r = _candidate_pairs(cur, restrict_part=cur_part)
+        cluster = _mutual_match(cur.n, u, v, r, cur.vertex_weights,
+                                c_max, rng)
+        n_new = int(cluster.max()) + 1 if len(cluster) else 0
+        if n_new >= cur.n * (1.0 - min_shrink):
+            break  # stalled
+        # do not overshoot far below the target
+        coarse, cmap = contract(cur, cluster, n_new)
+        levels.append(Level(hg=coarse, cluster_id=cmap))
+        if cur_part is not None:
+            # block id of each cluster = block of any member (same by constr.)
+            newp = np.zeros(n_new, cur_part.dtype)
+            newp[cmap] = cur_part
+            cur_part = newp
+        cur = coarse
+    return Hierarchy(levels=levels)
+
+
+def recombination_thresholds(n: int, n_c: int, beta: int) -> np.ndarray:
+    """Paper Sec. 3.1.1: geometric schedule over the uncoarsening
+    trajectory: { n_c^(1-i/beta) * n^(i/beta) : i = 1..beta }."""
+    i = np.arange(1, beta + 1, dtype=np.float64)
+    return np.power(float(max(n_c, 1)), 1.0 - i / beta) * np.power(
+        float(max(n, 1)), i / beta
+    )

@@ -1,0 +1,311 @@
+"""Hypergraph data structures.
+
+Two representations:
+
+* :class:`Hypergraph` — host-side numpy CSR (pins per edge + dual
+  incidence).  Used for the irregular structure work: coarsening,
+  contraction, level hierarchies, clustered-hypergraph construction.
+* :class:`HypergraphArrays` — a JAX pytree of fixed-shape padded arrays.
+  Used by every jitted numeric routine (metrics, gains, refinement,
+  device-side recombination).  Padding sentinel for pins is ``n`` (one
+  past the last vertex) and ``m`` for edges, so one extra "ghost" row
+  absorbs all padded contributions.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional, Tuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+
+# --------------------------------------------------------------------------
+# Host-side hypergraph
+# --------------------------------------------------------------------------
+@dataclasses.dataclass
+class Hypergraph:
+    """CSR hypergraph.  ``pins[edge_offsets[e]:edge_offsets[e+1]]`` are the
+    vertices of hyperedge ``e``."""
+
+    n: int
+    m: int
+    pins: np.ndarray            # [P] int32 vertex ids
+    edge_offsets: np.ndarray    # [m+1] int64
+    vertex_weights: np.ndarray  # [n] float32
+    edge_weights: np.ndarray    # [m] float32
+
+    # dual incidence, built lazily: edges incident to each vertex
+    _incident: Optional[np.ndarray] = None       # [P] int32 edge ids
+    _vertex_offsets: Optional[np.ndarray] = None  # [n+1] int64
+
+    # ---------------------------------------------------------------- util
+    @property
+    def num_pins(self) -> int:
+        return int(self.pins.shape[0])
+
+    @property
+    def total_weight(self) -> float:
+        return float(self.vertex_weights.sum())
+
+    def edge_sizes(self) -> np.ndarray:
+        return np.diff(self.edge_offsets).astype(np.int32)
+
+    def pin_edge_ids(self) -> np.ndarray:
+        """Edge id of every pin (repeat-interleaved)."""
+        return np.repeat(
+            np.arange(self.m, dtype=np.int32), self.edge_sizes()
+        )
+
+    def dual(self) -> Tuple[np.ndarray, np.ndarray]:
+        """(incident, vertex_offsets): edges incident to each vertex."""
+        if self._incident is None:
+            order = np.argsort(self.pins, kind="stable")
+            self._incident = self.pin_edge_ids()[order].astype(np.int32)
+            counts = np.bincount(self.pins, minlength=self.n)
+            self._vertex_offsets = np.concatenate(
+                [[0], np.cumsum(counts)]
+            ).astype(np.int64)
+        return self._incident, self._vertex_offsets
+
+    def validate(self) -> None:
+        assert self.edge_offsets.shape == (self.m + 1,)
+        assert self.edge_offsets[0] == 0 and self.edge_offsets[-1] == len(self.pins)
+        assert self.vertex_weights.shape == (self.n,)
+        assert self.edge_weights.shape == (self.m,)
+        if len(self.pins):
+            assert self.pins.min() >= 0 and self.pins.max() < self.n
+        assert (np.diff(self.edge_offsets) >= 1).all()
+
+    # ------------------------------------------------------------ factory
+    @staticmethod
+    def from_edge_lists(edges, n=None, vertex_weights=None, edge_weights=None):
+        """Build from a list of pin lists."""
+        edges = [np.asarray(e, dtype=np.int32) for e in edges]
+        m = len(edges)
+        pins = (
+            np.concatenate(edges) if m else np.zeros((0,), dtype=np.int32)
+        ).astype(np.int32)
+        sizes = np.array([len(e) for e in edges], dtype=np.int64)
+        offsets = np.concatenate([[0], np.cumsum(sizes)]).astype(np.int64)
+        if n is None:
+            n = int(pins.max()) + 1 if len(pins) else 0
+        vw = (
+            np.ones(n, np.float32)
+            if vertex_weights is None
+            else np.asarray(vertex_weights, np.float32)
+        )
+        ew = (
+            np.ones(m, np.float32)
+            if edge_weights is None
+            else np.asarray(edge_weights, np.float32)
+        )
+        hg = Hypergraph(n=n, m=m, pins=pins, edge_offsets=offsets,
+                        vertex_weights=vw, edge_weights=ew)
+        hg.validate()
+        return hg
+
+    def with_edge_weights(self, new_weights: np.ndarray) -> "Hypergraph":
+        hg = Hypergraph(
+            n=self.n, m=self.m, pins=self.pins,
+            edge_offsets=self.edge_offsets,
+            vertex_weights=self.vertex_weights,
+            edge_weights=np.asarray(new_weights, np.float32),
+        )
+        hg._incident, hg._vertex_offsets = self._incident, self._vertex_offsets
+        return hg
+
+    def arrays(self, pad_pins: Optional[int] = None,
+               pad_edges: Optional[int] = None,
+               pad_vertices: Optional[int] = None) -> "HypergraphArrays":
+        return HypergraphArrays.from_host(self, pad_pins, pad_edges, pad_vertices)
+
+
+# --------------------------------------------------------------------------
+# Device-side padded arrays (pytree)
+# --------------------------------------------------------------------------
+def _round_up(x: int, mult: int) -> int:
+    return ((max(x, 1) + mult - 1) // mult) * mult
+
+
+def _round_pow2(x: int, floor: int = 256) -> int:
+    """Next power of two (>= floor) — buckets shapes so that the jitted
+    per-level routines hit the compile cache across levels and designs."""
+    x = max(x, floor)
+    return 1 << (x - 1).bit_length()
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class HypergraphArrays:
+    """Fixed-shape padded hypergraph for jitted code.
+
+    Shapes: ``pin_vertex``/``pin_edge`` are [P_pad]; padded pins point to
+    the ghost vertex ``n_pad - 1`` (zero weight) and ghost edge
+    ``m_pad - 1`` (zero weight), so segment reductions stay exact without
+    masks.
+    """
+
+    pin_vertex: jnp.ndarray      # [P_pad] int32, padded -> n_pad - 1
+    pin_edge: jnp.ndarray        # [P_pad] int32, padded -> m_pad - 1
+    vertex_weights: jnp.ndarray  # [n_pad] f32, ghost = 0
+    edge_weights: jnp.ndarray    # [m_pad] f32, ghost/pad = 0
+    edge_sizes: jnp.ndarray      # [m_pad] int32 true pin counts, pad = 0
+    # true (unpadded) counts.  These are pytree LEAVES (traced scalars),
+    # not static aux — so jitted routines cache on the padded shapes only
+    # and all pow2-bucketed levels share one compilation.
+    n: jnp.ndarray | int
+    m: jnp.ndarray | int
+
+    # -- pytree plumbing ---------------------------------------------------
+    def tree_flatten(self):
+        leaves = (self.pin_vertex, self.pin_edge, self.vertex_weights,
+                  self.edge_weights, self.edge_sizes, self.n, self.m)
+        return leaves, ()
+
+    @classmethod
+    def tree_unflatten(cls, aux, leaves):
+        del aux
+        return cls(*leaves)
+
+    # -- derived sizes -------------------------------------------------------
+    @property
+    def n_pad(self) -> int:
+        return int(self.vertex_weights.shape[0])
+
+    @property
+    def m_pad(self) -> int:
+        return int(self.edge_weights.shape[0])
+
+    @property
+    def p_pad(self) -> int:
+        return int(self.pin_vertex.shape[0])
+
+    @property
+    def total_weight(self) -> jnp.ndarray:
+        return self.vertex_weights.sum()
+
+    # -- construction --------------------------------------------------------
+    @staticmethod
+    def from_host(hg: Hypergraph, pad_pins=None, pad_edges=None,
+                  pad_vertices=None) -> "HypergraphArrays":
+        p = hg.num_pins
+        p_pad = pad_pins if pad_pins is not None else _round_pow2(p + 1)
+        m_pad = (pad_edges if pad_edges is not None
+                 else _round_pow2(hg.m + 1))
+        n_pad = (pad_vertices if pad_vertices is not None
+                 else _round_pow2(hg.n + 1))
+        assert p_pad >= p and m_pad >= hg.m + 1 and n_pad >= hg.n + 1
+
+        pin_vertex = np.full(p_pad, n_pad - 1, np.int32)
+        pin_vertex[:p] = hg.pins
+        pin_edge = np.full(p_pad, m_pad - 1, np.int32)
+        pin_edge[:p] = hg.pin_edge_ids()
+        vw = np.zeros(n_pad, np.float32)
+        vw[: hg.n] = hg.vertex_weights
+        ew = np.zeros(m_pad, np.float32)
+        ew[: hg.m] = hg.edge_weights
+        es = np.zeros(m_pad, np.int32)
+        es[: hg.m] = hg.edge_sizes()
+        return HypergraphArrays(
+            pin_vertex=jnp.asarray(pin_vertex),
+            pin_edge=jnp.asarray(pin_edge),
+            vertex_weights=jnp.asarray(vw),
+            edge_weights=jnp.asarray(ew),
+            edge_sizes=jnp.asarray(es),
+            n=hg.n, m=hg.m,
+        )
+
+
+# --------------------------------------------------------------------------
+# Contraction (host): the workhorse of coarsening / overlay clustering
+# --------------------------------------------------------------------------
+def contract(hg: Hypergraph, cluster_id: np.ndarray, n_new: int,
+             merge_parallel: bool = True) -> Tuple[Hypergraph, np.ndarray]:
+    """Contract vertices by ``cluster_id`` (maps old vertex -> [0, n_new)).
+
+    Returns (coarse hypergraph, cluster_id) — the mapping is returned so
+    callers can stack level mappings.  Within-edge duplicate pins are
+    removed; single-pin edges are dropped; parallel edges merged (weights
+    summed) when ``merge_parallel``.
+    """
+    cluster_id = np.asarray(cluster_id, np.int32)
+    assert cluster_id.shape == (hg.n,)
+    new_vw = np.zeros(n_new, np.float32)
+    np.add.at(new_vw, cluster_id, hg.vertex_weights)
+
+    pins = cluster_id[hg.pins].astype(np.int64)
+    eids = hg.pin_edge_ids().astype(np.int64)
+    # sort pins within each edge: lexicographic (edge, pin)
+    key = eids * n_new + pins
+    order = np.argsort(key, kind="stable")
+    key_s = key[order]
+    pins_s = pins[order]
+    eids_s = eids[order]
+    # drop duplicate (edge, pin) pairs
+    keep = np.ones(len(key_s), bool)
+    keep[1:] = key_s[1:] != key_s[:-1]
+    pins_d = pins_s[keep]
+    eids_d = eids_s[keep]
+    # new sizes per original edge
+    sizes = np.bincount(eids_d, minlength=hg.m)
+    multi = sizes >= 2  # single-pin edges vanish
+    keep_pin = multi[eids_d]
+    pins_d = pins_d[keep_pin]
+    eids_d = eids_d[keep_pin]
+    kept_edges = np.nonzero(multi)[0]
+    ew = hg.edge_weights[kept_edges]
+    sizes_k = sizes[kept_edges]
+    # re-index edges densely
+    offsets = np.concatenate([[0], np.cumsum(sizes_k)]).astype(np.int64)
+
+    if merge_parallel and len(kept_edges):
+        # hash each edge's sorted pin tuple
+        import hashlib  # noqa: F401  (we use a cheap poly hash instead)
+        h1 = np.zeros(len(kept_edges), np.uint64)
+        h2 = np.zeros(len(kept_edges), np.uint64)
+        seg = np.repeat(np.arange(len(kept_edges)), sizes_k)
+        p64 = pins_d.astype(np.uint64)
+        # two independent polynomial hashes over the (sorted) pin sequence
+        # position-weighted so ordering matters (already sorted per edge)
+        pos = (np.arange(len(pins_d), dtype=np.uint64)
+               - np.repeat(offsets[:-1], sizes_k).astype(np.uint64))
+        a1 = (p64 + np.uint64(0x9E3779B97F4A7C15)) * (pos * np.uint64(2) + np.uint64(1))
+        a2 = (p64 ^ np.uint64(0xC2B2AE3D27D4EB4F)) * (pos + np.uint64(0x165667B19E3779F9))
+        np.add.at(h1, seg, a1 * (a1 >> np.uint64(31)))
+        np.add.at(h2, seg, a2 ^ (a2 << np.uint64(7)))
+        combo = h1 ^ (h2 << np.uint64(1)) ^ np.asarray(sizes_k, np.uint64)
+        uniq, inv = np.unique(combo, return_inverse=True)
+        if len(uniq) < len(kept_edges):
+            # merge groups (hash collisions across different edges are
+            # astronomically unlikely at these sizes; weights just sum)
+            new_ew = np.zeros(len(uniq), np.float32)
+            np.add.at(new_ew, inv, ew)
+            # representative = first occurrence of each group, kept in
+            # original edge order so pins stay aligned
+            first_idx = np.full(len(uniq), len(kept_edges), np.int64)
+            np.minimum.at(first_idx, inv, np.arange(len(kept_edges)))
+            rep_mask = np.zeros(len(kept_edges), bool)
+            rep_mask[first_idx] = True
+            pins_d = pins_d[rep_mask[seg]]
+            rep_order = np.nonzero(rep_mask)[0]
+            sizes_k = sizes_k[rep_order]
+            ew = new_ew[inv[rep_order]]
+            offsets = np.concatenate([[0], np.cumsum(sizes_k)]).astype(np.int64)
+
+    coarse = Hypergraph(
+        n=n_new, m=len(sizes_k) if len(kept_edges) else 0,
+        pins=pins_d.astype(np.int32),
+        edge_offsets=offsets,
+        vertex_weights=new_vw,
+        edge_weights=np.asarray(ew, np.float32),
+    )
+    coarse.validate()
+    return coarse, cluster_id
+
+
+def project_partition(part_coarse: np.ndarray, cluster_id: np.ndarray) -> np.ndarray:
+    """Project a coarse partition vector through a contraction mapping."""
+    return np.asarray(part_coarse)[np.asarray(cluster_id)]

@@ -1,0 +1,136 @@
+"""IMPart: the memetics-integrated multi-level driver (paper Fig. 3).
+
+One coarsening hierarchy; alpha solutions uncoarsen *together*; at the
+beta geometric thresholds (Sec. 3.1.1) a ring-recombination round runs,
+followed by the diversity-enhancement mutation; every member is refined
+at every level.  Best member wins.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import List, Optional
+
+import numpy as np
+
+from .hypergraph import Hypergraph
+from .coarsen import coarsen, recombination_thresholds, Hierarchy
+from .initial_partition import initial_partition
+from . import refine as refine_mod
+from . import metrics
+from .recombine import ring_recombination
+from .mutate import mutate_population
+from .vcycle import vcycle
+
+
+@dataclasses.dataclass
+class ImpartConfig:
+    k: int
+    eps: float = 0.08
+    alpha: int = 7               # population size (paper: 7)
+    beta: int = 7                # recombination rounds (paper: 7)
+    similarity_threshold: float = 20.0  # t (paper: 20)
+    mutation_mu: float = 0.1     # reweight scale (paper: 0.1)
+    seed: int = 0
+    fm_node_limit: int = 4096
+    contraction_limit_factor: int = 64
+    final_vcycles: int = 1
+    lp_iters: int = 16
+    time_budget_s: Optional[float] = None  # equal-time comparisons
+    mutation_enabled: bool = True
+    recombination_enabled: bool = True
+
+
+@dataclasses.dataclass
+class ImpartResult:
+    part: np.ndarray
+    cut: float
+    population_cuts: List[float]
+    # trajectory: (n_at_level, [cut per member], event) for Fig. 5 plots
+    trace: List[tuple]
+    wall_s: float
+    levels: List[int]
+
+
+def _refine_member(hga, part, k, eps, cfg: ImpartConfig):
+    part, cut = refine_mod.lp_refine(hga, part, k, eps,
+                                     max_iters=cfg.lp_iters)
+    if int(hga.n) <= cfg.fm_node_limit:
+        part, cut = refine_mod.fm_refine(hga, part, k, eps)
+    return np.asarray(part), cut
+
+
+def impart_partition(hg: Hypergraph, cfg: ImpartConfig) -> ImpartResult:
+    t0 = time.perf_counter()
+    k, eps = cfg.k, cfg.eps
+    hier = coarsen(hg, k, seed=cfg.seed,
+                   contraction_limit_factor=cfg.contraction_limit_factor)
+    coarsest = hier.coarsest
+    n, n_c = hg.n, coarsest.n
+    thresholds = recombination_thresholds(n, n_c, cfg.beta)
+
+    # alpha diverse initial solutions (distinct seeds, like the paper's
+    # seeds -1..5)
+    parts: List[np.ndarray] = []
+    cuts: List[float] = []
+    for i in range(cfg.alpha):
+        p, c = initial_partition(coarsest, k, eps, seed=cfg.seed * 101 + i,
+                                 tries_per_strategy=1)
+        parts.append(p)
+        cuts.append(c)
+
+    trace: List[tuple] = [(n_c, list(cuts), "init")]
+    next_thr = 0
+    num_levels = len(hier.levels)
+
+    for li in range(num_levels - 1, -1, -1):
+        lv = hier.levels[li]
+        if li < num_levels - 1:
+            cmap = hier.levels[li + 1].cluster_id
+            parts = [p[cmap] for p in parts]
+        hga = lv.hg.arrays()
+        # refine every member at this level
+        for a in range(cfg.alpha):
+            parts[a], cuts[a] = _refine_member(hga, parts[a], k, eps, cfg)
+            parts[a] = parts[a][: lv.hg.n]
+        trace.append((lv.hg.n, list(cuts), "refine"))
+
+        # fire the geometric-threshold recombination rounds
+        while (next_thr < cfg.beta and lv.hg.n >= thresholds[next_thr] - 1e-9
+               and cfg.recombination_enabled):
+            parts, cuts = ring_recombination(
+                lv.hg, parts, cuts, k, eps,
+                seed=cfg.seed * 31 + next_thr)
+            trace.append((lv.hg.n, list(cuts), f"recombine@{next_thr}"))
+            if cfg.mutation_enabled:
+                parts, cuts = mutate_population(
+                    lv.hg, parts, cuts, k, eps,
+                    threshold=cfg.similarity_threshold,
+                    mu=cfg.mutation_mu, seed=cfg.seed * 17 + next_thr)
+                trace.append((lv.hg.n, list(cuts), f"mutate@{next_thr}"))
+            next_thr += 1
+        if cfg.time_budget_s and time.perf_counter() - t0 > cfg.time_budget_s:
+            # fast-forward: project straight to the finest level and refine
+            for lj in range(li - 1, -1, -1):
+                cmapj = hier.levels[lj + 1].cluster_id
+                parts = [p[cmapj] for p in parts]
+            hga0 = hier.original.arrays()
+            for a in range(cfg.alpha):
+                parts[a], cuts[a] = refine_mod.lp_refine(
+                    hga0, parts[a], k, eps, max_iters=4)
+                parts[a] = np.asarray(parts[a])[: hg.n]
+            trace.append((hg.n, list(cuts), "budget-exhausted"))
+            break
+
+    best = int(np.argmin(cuts))
+    part, cut = parts[best][: hg.n], cuts[best]
+    for v in range(cfg.final_vcycles):
+        if cfg.time_budget_s and time.perf_counter() - t0 > cfg.time_budget_s:
+            break
+        part, cut = vcycle(hg, part, k, eps, seed=cfg.seed * 997 + v)
+        trace.append((hg.n, [cut], f"final-vcycle@{v}"))
+
+    return ImpartResult(
+        part=np.asarray(part, np.int32), cut=float(cut),
+        population_cuts=[float(c) for c in cuts], trace=trace,
+        wall_s=time.perf_counter() - t0, levels=hier.sizes())

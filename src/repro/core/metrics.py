@@ -1,0 +1,132 @@
+"""Partition quality metrics, all jit-friendly fixed-shape JAX.
+
+Everything is computed from flat pin arrays with segment reductions.
+Partition vectors are int32 ``[n_pad]``; the ghost vertex (``n_pad - 1``)
+must carry a valid block id (any) and zero weight, so it never affects
+weights; ghost pins point at the ghost edge (zero weight), so they never
+affect cut terms.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .hypergraph import HypergraphArrays
+
+
+def block_weights(hga: HypergraphArrays, part: jnp.ndarray, k: int) -> jnp.ndarray:
+    """[k] total vertex weight per block."""
+    return jax.ops.segment_sum(hga.vertex_weights, part, num_segments=k)
+
+
+def pins_in_block(hga: HypergraphArrays, part: jnp.ndarray, k: int) -> jnp.ndarray:
+    """Phi [m_pad, k]: for each edge, how many of its pins are in block j."""
+    pin_parts = part[hga.pin_vertex]                      # [P]
+    flat = hga.pin_edge.astype(jnp.int32) * k + pin_parts
+    counts = jax.ops.segment_sum(
+        jnp.ones_like(flat, jnp.int32), flat, num_segments=hga.m_pad * k
+    )
+    return counts.reshape(hga.m_pad, k)
+
+
+def connectivity(hga: HypergraphArrays, part: jnp.ndarray, k: int) -> jnp.ndarray:
+    """lambda(e) [m_pad]: number of distinct blocks spanned by each edge."""
+    phi = pins_in_block(hga, part, k)
+    return (phi > 0).sum(axis=-1).astype(jnp.int32)
+
+
+def cutsize(hga: HypergraphArrays, part: jnp.ndarray, k: int) -> jnp.ndarray:
+    """Sum of weights of edges spanning >= 2 blocks (the paper's objective)."""
+    lam = connectivity(hga, part, k)
+    return jnp.where(lam > 1, hga.edge_weights, 0.0).sum()
+
+
+def km1(hga: HypergraphArrays, part: jnp.ndarray, k: int) -> jnp.ndarray:
+    """(lambda - 1) connectivity objective (KaHyPar's other metric)."""
+    lam = connectivity(hga, part, k)
+    return (jnp.maximum(lam - 1, 0).astype(jnp.float32) * hga.edge_weights).sum()
+
+
+def balance_cap(total_weight, k: int, eps: float) -> jnp.ndarray:
+    """The paper's constraint: W_i <= (1+eps) * ceil(W/k)."""
+    return (1.0 + eps) * jnp.ceil(total_weight / k)
+
+
+def is_balanced(hga: HypergraphArrays, part: jnp.ndarray, k: int, eps: float):
+    bw = block_weights(hga, part, k)
+    return (bw <= balance_cap(hga.total_weight, k, eps) + 1e-4).all()
+
+
+def imbalance(hga: HypergraphArrays, part: jnp.ndarray, k: int) -> jnp.ndarray:
+    bw = block_weights(hga, part, k)
+    avg = hga.total_weight / k
+    return bw.max() / jnp.maximum(avg, 1e-9) - 1.0
+
+
+# --------------------------------------------------------------------------
+# FM move gains
+# --------------------------------------------------------------------------
+def gain_matrix(hga: HypergraphArrays, part: jnp.ndarray, k: int,
+                phi: jnp.ndarray | None = None) -> jnp.ndarray:
+    """Full [n_pad, k] cut-size gain matrix.
+
+    gain[v, j] = reduction in cut if v moves from part[v] to j
+               = sum_{e in I(v)} w_e * ( [Phi(e,j) == |e|-1]  (becomes internal)
+                                        - [Phi(e,part[v]) == |e|] (was internal) )
+    gain[v, part[v]] == 0 by construction.
+    """
+    if phi is None:
+        phi = pins_in_block(hga, part, k)                  # [m_pad, k]
+    sizes = hga.edge_sizes[:, None]                        # [m_pad, 1]
+    w = hga.edge_weights[:, None]                          # [m_pad, 1]
+    becomes_internal = jnp.where(phi == sizes - 1, w, 0.0)  # [m_pad, k]
+    was_internal = jnp.where((phi == sizes) & (sizes > 0), w, 0.0).sum(-1)  # [m_pad]
+
+    per_pin_gain = becomes_internal[hga.pin_edge]          # [P, k]
+    per_pin_loss = was_internal[hga.pin_edge]              # [P]
+    g = jax.ops.segment_sum(per_pin_gain, hga.pin_vertex,
+                            num_segments=hga.n_pad)        # [n_pad, k]
+    l = jax.ops.segment_sum(per_pin_loss, hga.pin_vertex,
+                            num_segments=hga.n_pad)        # [n_pad]
+    g = g - l[:, None]
+    # moving to your own block is never a move
+    g = g.at[jnp.arange(hga.n_pad), part].set(0.0)
+    return g
+
+
+# --------------------------------------------------------------------------
+# Similarity metrics between partitions (paper Sec. 3.2)
+# --------------------------------------------------------------------------
+def node_distance(part_a: jnp.ndarray, part_b: jnp.ndarray,
+                  valid_n: int | None = None) -> jnp.ndarray:
+    """Hamming distance d_v — susceptible to partition isomorphism."""
+    neq = (part_a != part_b).astype(jnp.int32)
+    if valid_n is not None:
+        neq = neq * (jnp.arange(part_a.shape[0]) < valid_n)
+    return neq.sum()
+
+
+def edge_distance(hga: HypergraphArrays, part_a: jnp.ndarray,
+                  part_b: jnp.ndarray, k: int) -> jnp.ndarray:
+    """Label-invariant d_e: L1 distance between connectivity vectors."""
+    la = connectivity(hga, part_a, k)
+    lb = connectivity(hga, part_b, k)
+    valid = jnp.arange(hga.m_pad) < hga.m
+    return jnp.where(valid, jnp.abs(la - lb), 0).sum()
+
+
+def cut_edge_indicator(hga: HypergraphArrays, part: jnp.ndarray, k: int):
+    """[m_pad] 1.0 where the edge is cut (used by mutation reweighting)."""
+    lam = connectivity(hga, part, k)
+    return (lam > 1).astype(jnp.float32)
+
+
+# Convenient jitted entry points (k is static)
+cutsize_jit = jax.jit(cutsize, static_argnums=2)
+km1_jit = jax.jit(km1, static_argnums=2)
+connectivity_jit = jax.jit(connectivity, static_argnums=2)
+gain_matrix_jit = jax.jit(gain_matrix, static_argnums=2)
+edge_distance_jit = jax.jit(edge_distance, static_argnums=3)
+block_weights_jit = jax.jit(block_weights, static_argnums=2)

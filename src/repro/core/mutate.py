@@ -1,0 +1,73 @@
+"""Mutation / diversity enhancement (paper Sec. 3.2).
+
+After a recombination round: sort offspring by cut (ascending); for each
+offspring S_j, M(S_j) = { better offspring S_i : d_e(S_i, S_j) < t }.
+Non-empty M(S_j) => S_j is re-partitioned on a reweighted hypergraph
+
+    w'_e = w_e * (1 + mu * C_{M(S_j)}(e)),   mu = 0.1, t = 20  (paper)
+
+where C counts how many members of M(S_j) cut e — edges the similar set
+already cuts become expensive, steering S_j into unexplored cut
+structures.  The re-partition is an in-framework V-cycle (the paper calls
+the base partitioner here; staying inside the single multilevel process is
+exactly IMPart's point).
+"""
+from __future__ import annotations
+
+from typing import List, Tuple
+
+import numpy as np
+
+from .hypergraph import Hypergraph
+from . import metrics
+from . import refine as refine_mod
+from .vcycle import vcycle
+
+
+def similarity_sets(hga, parts: List[np.ndarray], cuts: List[float], k: int,
+                    threshold: float) -> List[List[int]]:
+    """M(S_j) for each offspring, computed with the label-invariant
+    edge-based metric d_e (paper Eq. 2)."""
+    alpha = len(parts)
+    order = np.argsort(cuts, kind="stable")  # ascending cut = best first
+    padded = [refine_mod.pad_part(p, hga.n_pad) for p in parts]
+    msets: List[List[int]] = [[] for _ in range(alpha)]
+    for pos_j in range(alpha):
+        j = int(order[pos_j])
+        for pos_i in range(pos_j):
+            i = int(order[pos_i])
+            d = float(metrics.edge_distance_jit(hga, padded[i], padded[j], k))
+            if d < threshold:
+                msets[j].append(i)
+    return msets
+
+
+def mutate_population(hg: Hypergraph, parts: List[np.ndarray],
+                      cuts: List[float], k: int, eps: float,
+                      threshold: float = 20.0, mu: float = 0.1,
+                      seed: int = 0) -> Tuple[List[np.ndarray], List[float]]:
+    """Apply the mutation operator to every offspring with a non-empty
+    similarity set.  Returns the updated population."""
+    hga = hg.arrays()
+    msets = similarity_sets(hga, parts, cuts, k, threshold)
+    new_parts = [p.copy() for p in parts]
+    new_cuts = list(cuts)
+    for j, mset in enumerate(msets):
+        if not mset:
+            continue
+        # C(e): how many similar offspring cut edge e
+        c_e = np.zeros(hg.m, np.float64)
+        for i in mset:
+            lam = np.asarray(metrics.connectivity_jit(
+                hga, refine_mod.pad_part(parts[i], hga.n_pad), k))[: hg.m]
+            c_e += (lam > 1)
+        w_prime = hg.edge_weights * (1.0 + mu * c_e)
+        reweighted = hg.with_edge_weights(w_prime.astype(np.float32))
+        # V-cycle on the reweighted hypergraph, warm from S_j; report true cut
+        mutated, _ = vcycle(reweighted, parts[j], k, eps,
+                            seed=seed * 7919 + j)
+        true_cut = float(metrics.cutsize_jit(
+            hga, refine_mod.pad_part(mutated, hga.n_pad), k))
+        new_parts[j] = mutated
+        new_cuts[j] = true_cut
+    return new_parts, new_cuts

@@ -1,0 +1,188 @@
+"""Distributed population step: IMPart's ring topology mapped onto the
+device mesh (DESIGN.md §3, §6).
+
+Layout (production mesh):
+  * population axis  = ("pod", "data")  — one solution per (pod, data)
+    slot; the paper's ring (Fig. 1c) is realised with ``jax.lax.ppermute``
+    over "data" (intra-island ring over ICI) and over "pod" (inter-island
+    migration over DCN) — an island-model scale-out of the paper's alpha=7
+    ring.
+  * pin-parallel axis = "model" — the flat pin arrays are sharded over
+    "model"; every gain/Phi computation is a local segment-sum followed by
+    one ``psum`` over "model".
+
+Everything here is fixed-shape and jit/shard_map-compatible: this is the
+entry point the multi-pod dry-run lowers.
+
+Operators (device-side adaptations, see DESIGN.md for fidelity notes):
+  * refinement  — ``rounds`` balanced label-prop sweeps (= host lp_round).
+  * recombination — *greedy binary recombination*: each vertex may adopt
+    its ring partner's label when that single move has positive gain and
+    keeps balance.  Elitism keeps the pre-recombination solution if the
+    parallel round regressed.
+  * mutation    — if the edge-distance to the other ring neighbour is
+    below the threshold, one sweep runs with the paper's reweighted gains
+    w'_e = w_e * (1 + mu * cut_e(neighbour)).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from .hypergraph import HypergraphArrays
+from .refine import accept_moves, NEG
+
+
+# --------------------------------------------------------------------------
+# shard-aware metric helpers (pins sharded over `pin_axis`)
+# --------------------------------------------------------------------------
+def _phi(h: HypergraphArrays, part, k: int, pin_axis: str):
+    pin_parts = part[h.pin_vertex]
+    flat = h.pin_edge.astype(jnp.int32) * k + pin_parts
+    counts = jax.ops.segment_sum(
+        jnp.ones_like(flat, jnp.int32), flat, num_segments=h.m_pad * k
+    ).reshape(h.m_pad, k)
+    return jax.lax.psum(counts, pin_axis)
+
+
+def _gains(h: HypergraphArrays, part, phi, edge_weights, k: int,
+           pin_axis: str):
+    sizes = h.edge_sizes[:, None]
+    w = edge_weights[:, None]
+    becomes_internal = jnp.where(phi == sizes - 1, w, 0.0)
+    was_internal = jnp.where((phi == sizes) & (sizes > 0), w, 0.0).sum(-1)
+    g = jax.ops.segment_sum(becomes_internal[h.pin_edge], h.pin_vertex,
+                            num_segments=h.n_pad)
+    l = jax.ops.segment_sum(was_internal[h.pin_edge], h.pin_vertex,
+                            num_segments=h.n_pad)
+    g = jax.lax.psum(g, pin_axis) - jax.lax.psum(l, pin_axis)[:, None]
+    return g.at[jnp.arange(h.n_pad), part].set(0.0)
+
+
+def _cut(phi, edge_weights, k: int):
+    lam = (phi > 0).sum(-1)
+    return jnp.where(lam > 1, edge_weights, 0.0).sum()
+
+
+def _connectivity(phi):
+    return (phi > 0).sum(-1).astype(jnp.int32)
+
+
+# --------------------------------------------------------------------------
+# the per-device step body
+# --------------------------------------------------------------------------
+def _sweep(h: HypergraphArrays, part, k, cap, frac, pin_axis,
+           edge_weights=None, target_override=None):
+    """One balanced parallel-move sweep (optionally toward fixed targets,
+    optionally with reweighted gains)."""
+    ew = h.edge_weights if edge_weights is None else edge_weights
+    phi = _phi(h, part, k, pin_axis)
+    gains = _gains(h, part, phi, ew, k, pin_axis)
+    valid = (jnp.arange(h.n_pad) < h.n) & (h.vertex_weights > 0)
+    if target_override is None:
+        own = jax.nn.one_hot(part, k, dtype=bool)
+        tgt = jnp.argmax(jnp.where(own, NEG, gains), -1).astype(jnp.int32)
+    else:
+        tgt = target_override
+    g = jnp.take_along_axis(gains, tgt[:, None], -1)[:, 0]
+    propose = valid & (g > 1e-9) & (tgt != part)
+    bw = jax.ops.segment_sum(h.vertex_weights, part, num_segments=k)
+    return accept_moves(part, tgt, g, propose, h.vertex_weights, bw,
+                        cap, frac, k)
+
+
+def population_step_fn(h: HypergraphArrays, part: jnp.ndarray, *,
+                       k: int, eps: float, refine_rounds: int,
+                       ring_axis: str, ring_n: int,
+                       pod_axis: str | None, pod_n: int,
+                       pin_axis: str, sim_threshold: float,
+                       mu: float = 0.1) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Body executed per device (inside shard_map).  ``part`` is this
+    device's solution [n_pad]; pins in ``h`` are the local shard."""
+    cap = (1.0 + eps) * jnp.ceil(h.vertex_weights.sum() / k)
+
+    # ---- 1. local refinement sweeps ------------------------------------
+    for r in range(refine_rounds):
+        part = _sweep(h, part, k, cap, jnp.float32(0.5 + 0.5 / (r + 1)),
+                      pin_axis)
+
+    my_cut = _cut(_phi(h, part, k, pin_axis), h.edge_weights, k)
+
+    # ---- 2. ring recombination (greedy binary, paper Fig. 1c) ----------
+    fwd = [(i, (i + 1) % ring_n) for i in range(ring_n)]
+    partner = jax.lax.ppermute(part, ring_axis, fwd)
+    pre = part
+    for _ in range(2):
+        part = _sweep(h, part, k, cap, jnp.float32(1.0), pin_axis,
+                      target_override=partner)
+    new_cut = _cut(_phi(h, part, k, pin_axis), h.edge_weights, k)
+    part = jnp.where(new_cut <= my_cut, part, pre)  # elitism
+    cur_cut = jnp.minimum(new_cut, my_cut)
+
+    # ---- 3. inter-island migration over the pod axis -------------------
+    if pod_axis is not None and pod_n > 1:
+        mig = jax.lax.ppermute(
+            part, pod_axis, [(i, (i + 1) % pod_n) for i in range(pod_n)])
+        part_m = _sweep(h, part, k, cap, jnp.float32(1.0), pin_axis,
+                        target_override=mig)
+        mig_cut = _cut(_phi(h, part_m, k, pin_axis), h.edge_weights, k)
+        part = jnp.where(mig_cut <= cur_cut, part_m, part)
+
+    # ---- 4. mutation: diversity vs the *other* ring neighbour ----------
+    bwd = [((i + 1) % ring_n, i) for i in range(ring_n)]
+    other = jax.lax.ppermute(part, ring_axis, bwd)
+    phi_o = _phi(h, other, k, pin_axis)
+    phi_s = _phi(h, part, k, pin_axis)
+    d_e = jnp.abs(_connectivity(phi_o) - _connectivity(phi_s)).sum()
+    too_similar = d_e < sim_threshold
+    cut_ind = ((_connectivity(phi_o) > 1)
+               & (jnp.arange(h.m_pad) < h.m)).astype(jnp.float32)
+    w_mut = h.edge_weights * (1.0 + mu * cut_ind)
+    part_mut = _sweep(h, part, k, cap, jnp.float32(1.0), pin_axis,
+                      edge_weights=w_mut)
+    part = jnp.where(too_similar, part_mut, part)
+
+    final_cut = _cut(_phi(h, part, k, pin_axis), h.edge_weights, k)
+    return part, final_cut
+
+
+# --------------------------------------------------------------------------
+# shard_map wrapper + sharding specs (used by launch/dryrun.py)
+# --------------------------------------------------------------------------
+def make_population_step(mesh, *, n: int, m: int, k: int, eps: float = 0.03,
+                         refine_rounds: int = 4,
+                         sim_threshold: float = 20.0,
+                         pin_axis: str = "model",
+                         ring_axis: str = "data"):
+    """Build the jitted multi-device population step.
+
+    Call signature of the returned fn:
+      (pin_vertex[Pp], pin_edge[Pp], vertex_weights[n_pad],
+       edge_weights[m_pad], edge_sizes[m_pad], parts[POP, n_pad])
+        -> (parts[POP, n_pad], cuts[POP])
+    with POP == prod of population-axis sizes; pins sharded over
+    ``pin_axis`` (their padded length must divide by its size).
+    """
+    pod = "pod" if "pod" in mesh.axis_names else None
+    pop_axes = (pod, ring_axis) if pod else (ring_axis,)
+    ring_n = mesh.shape[ring_axis]
+    pod_n = mesh.shape[pod] if pod else 1
+
+    def body(pv, pe, vw, ew, es, parts):
+        h = HypergraphArrays(pin_vertex=pv, pin_edge=pe, vertex_weights=vw,
+                             edge_weights=ew, edge_sizes=es, n=n, m=m)
+        part, cut = population_step_fn(
+            h, parts[0], k=k, eps=eps, refine_rounds=refine_rounds,
+            ring_axis=ring_axis, ring_n=ring_n, pod_axis=pod, pod_n=pod_n,
+            pin_axis=pin_axis, sim_threshold=sim_threshold)
+        return part[None], cut[None]
+
+    in_specs = (P(pin_axis), P(pin_axis), P(None), P(None), P(None),
+                P(pop_axes, None))
+    out_specs = (P(pop_axes, None), P(pop_axes))
+    fn = jax.shard_map(body, mesh=mesh, in_specs=in_specs,
+                       out_specs=out_specs, check_vma=False)
+    return jax.jit(fn)

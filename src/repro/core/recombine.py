@@ -1,0 +1,112 @@
+"""Recombination operator (paper Sec. 3.1.2).
+
+Two parents S_a, S_b at the current level -> overlay clustering (vertices
+agreeing in both parents collapse) -> clustered hypergraph -> solve:
+
+* ``n' * k < ILP_EXACT``   : exact branch & bound (paper: Gurobi exact),
+  budgeted — falls back to its incumbent (= warm start or better).
+* ``n' * k < ILP_APPROX``  : iterated local search (warm-started FM +
+  perturbation restarts) — paper: ILP at 1% optimality gap.
+* otherwise                : V-cycle on the current-level hypergraph
+  (paper: KaHyPar V-cycle), warm-started from the better parent.
+
+The offspring is never worse than the better parent (warm start + FM
+passes are monotone; elitism guards the V-cycle path).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import numpy as np
+
+from .hypergraph import Hypergraph, contract
+from . import refine as refine_mod
+from . import metrics
+from . import ilp as ilp_mod
+from .vcycle import vcycle, _pad_part
+
+ILP_EXACT = 600     # paper threshold: provably-optimal region
+ILP_APPROX = 1000   # paper threshold: 1%-gap region
+EXACT_N_LIMIT = 26  # B&B practical vertex limit within budget
+
+
+def overlay_clustering(part_a: np.ndarray, part_b: np.ndarray, k: int
+                       ) -> Tuple[np.ndarray, int]:
+    """cluster id per vertex = dense id of the (S_a(v), S_b(v)) pair."""
+    combo = np.asarray(part_a, np.int64) * k + np.asarray(part_b, np.int64)
+    _, dense = np.unique(combo, return_inverse=True)
+    return dense.astype(np.int32), int(dense.max()) + 1
+
+
+def _ils_clustered(chg: Hypergraph, k: int, eps: float, warm: np.ndarray,
+                   seed: int, restarts: int = 6, kick: float = 0.15
+                   ) -> Tuple[np.ndarray, float]:
+    """Iterated local search on the clustered hypergraph."""
+    rng = np.random.default_rng(seed)
+    hga = chg.arrays()
+    part, cut = refine_mod.fm_refine(hga, warm, k, eps)
+    best, best_cut = part.copy(), cut
+    for _ in range(restarts):
+        cand = best[: chg.n].copy()
+        nk = max(1, int(kick * chg.n))
+        idx = rng.choice(chg.n, size=nk, replace=False)
+        cand[idx] = rng.integers(0, k, size=nk)
+        cand = refine_mod.rebalance(chg.vertex_weights, cand, k, eps, rng)
+        cand, c = refine_mod.fm_refine(hga, cand, k, eps)
+        if c < best_cut - 1e-9:
+            best, best_cut = cand.copy(), c
+    return best, best_cut
+
+
+def recombine(hg: Hypergraph, part_a: np.ndarray, part_b: np.ndarray,
+              cut_a: float, cut_b: float, k: int, eps: float, seed: int = 0
+              ) -> Tuple[np.ndarray, float]:
+    """Produce one offspring from two parents at the current level."""
+    part_a = np.asarray(part_a, np.int32)[: hg.n]
+    part_b = np.asarray(part_b, np.int32)[: hg.n]
+    better, better_cut = (part_a, cut_a) if cut_a <= cut_b else (part_b, cut_b)
+
+    cid, n_prime = overlay_clustering(part_a, part_b, k)
+    if n_prime <= k:  # parents identical up to relabeling: nothing to merge
+        return better.copy(), better_cut
+
+    chg, _ = contract(hg, cid, n_prime)
+    # warm start: block of each cluster under the better parent
+    first_member = np.zeros(n_prime, np.int64)
+    first_member[cid[::-1]] = np.arange(hg.n - 1, -1, -1)
+    warm = better[first_member].astype(np.int32)
+
+    metric = n_prime * k
+    if metric < ILP_EXACT and n_prime <= EXACT_N_LIMIT:
+        cpart, _ = ilp_mod.solve_exact(chg, k, eps, warm_start=warm,
+                                       node_budget=400_000)
+    elif metric < ILP_APPROX:
+        cpart, _ = _ils_clustered(chg, k, eps, warm, seed, restarts=6)
+    elif n_prime <= 40 * k:  # still small: cheap ILS with fewer restarts
+        cpart, _ = _ils_clustered(chg, k, eps, warm, seed, restarts=2)
+    else:
+        # too large to treat as a clustered instance: V-cycle the level
+        off, off_cut = vcycle(hg, better, k, eps, seed=seed)
+        return off, off_cut
+
+    offspring = cpart[cid]
+    hga = hg.arrays()
+    off_cut = float(metrics.cutsize_jit(
+        hga, refine_mod.pad_part(offspring, hga.n_pad), k))
+    if off_cut <= better_cut + 1e-9:
+        return offspring, off_cut
+    return better.copy(), better_cut  # elitism
+
+
+def ring_recombination(hg: Hypergraph, parts: list, cuts: list, k: int,
+                       eps: float, seed: int = 0) -> Tuple[list, list]:
+    """Paper's circular pairing: (1,2), (2,3), ..., (alpha, 1)."""
+    alpha = len(parts)
+    new_parts, new_cuts = [], []
+    for i in range(alpha):
+        j = (i + 1) % alpha
+        off, c = recombine(hg, parts[i], parts[j], cuts[i], cuts[j],
+                           k, eps, seed=seed * 1009 + i)
+        new_parts.append(off)
+        new_cuts.append(c)
+    return new_parts, new_cuts

@@ -1,0 +1,239 @@
+"""Refinement: two-tier scheme (DESIGN.md §3).
+
+* ``lp_refine`` — balanced label-propagation sweeps.  Every vertex scores
+  all k destination blocks at once (vectorised gain matrix), proposals are
+  accepted in global gain order subject to per-block capacity, computed
+  with sorted prefix sums — no sequential loop.  Used on large/fine levels.
+* ``fm_refine`` — classic one-move-at-a-time FM with negative-gain
+  hill-climbing and best-prefix rollback, expressed as a ``lax.scan``.
+  Used on coarse levels (small n) where move quality matters most.
+
+Both guarantee: the returned partition never violates the balance cap and
+never has a larger cut than the input.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .hypergraph import HypergraphArrays
+from . import metrics
+
+NEG = -1e30
+
+
+def pad_part(part, n_pad: int) -> jnp.ndarray:
+    """Pad a length-n partition vector to n_pad (pad block = 0; padded
+    vertices have zero weight and no pins, so the value is inert)."""
+    part = jnp.asarray(part, jnp.int32)
+    if part.shape[0] == n_pad:
+        return part
+    return jnp.concatenate(
+        [part, jnp.zeros(n_pad - part.shape[0], jnp.int32)])
+
+
+# --------------------------------------------------------------------------
+# label propagation round (jitted)
+# --------------------------------------------------------------------------
+def accept_moves(part: jnp.ndarray, target: jnp.ndarray, gain: jnp.ndarray,
+                 propose: jnp.ndarray, vertex_weights: jnp.ndarray,
+                 bw: jnp.ndarray, cap: jnp.ndarray, frac: jnp.ndarray,
+                 k: int) -> jnp.ndarray:
+    """Balanced parallel-move acceptance (shared by lp_round and the
+    distributed population step).
+
+    Proposals (vertex -> target block, expected gain) are ranked by gain;
+    the top ``frac`` are kept; per-target-block capacity is enforced with
+    a prefix sum over the sorted proposal weights — no sequential loop.
+    """
+    n_pad = part.shape[0]
+    order = jnp.argsort(jnp.where(propose, -gain, -NEG))
+    ranks = jnp.zeros(n_pad, jnp.int32).at[order].set(
+        jnp.arange(n_pad, dtype=jnp.int32))
+    keep_n = jnp.ceil(frac * propose.sum()).astype(jnp.int32)
+    propose = propose & (ranks < keep_n)
+
+    w_sorted = jnp.where(propose, vertex_weights, 0.0)[order]
+    tgt_sorted = jnp.where(propose, target, k)[order]  # k = "no move"
+    tgt_oh = jax.nn.one_hot(tgt_sorted, k + 1, dtype=w_sorted.dtype)
+    pref = jnp.cumsum(tgt_oh * w_sorted[:, None], axis=0)    # [n_pad, k+1]
+    fits_sorted = (pref[:, :k] <= (cap - bw)[None, :] + 1e-6)
+    fit_own = jnp.take_along_axis(
+        fits_sorted, jnp.minimum(tgt_sorted, k - 1)[:, None], axis=-1)[:, 0]
+    accept_sorted = fit_own & (tgt_sorted < k)
+    accept = jnp.zeros(n_pad, bool).at[order].set(accept_sorted)
+    return jnp.where(accept, target, part)
+
+
+@partial(jax.jit, static_argnames=("k",))
+def lp_round(hga: HypergraphArrays, part: jnp.ndarray, k: int,
+             cap: jnp.ndarray, frac: jnp.ndarray,
+             edge_weight_override: jnp.ndarray | None = None
+             ) -> jnp.ndarray:
+    """One parallel move round; returns the new partition.
+
+    ``frac`` in (0,1]: accept only the top fraction of positive-gain
+    proposals (the host halves it on conflict-induced regressions).
+    ``edge_weight_override`` lets mutation bias gains without touching the
+    real weights.
+    """
+    h = hga
+    if edge_weight_override is not None:
+        h = HypergraphArrays(hga.pin_vertex, hga.pin_edge,
+                             hga.vertex_weights, edge_weight_override,
+                             hga.edge_sizes, hga.n, hga.m)
+    n_pad = h.n_pad
+    gains = metrics.gain_matrix(h, part, k)                   # [n_pad, k]
+    own = jax.nn.one_hot(part, k, dtype=bool)
+    gains = jnp.where(own, NEG, gains)
+    best_j = jnp.argmax(gains, axis=-1).astype(jnp.int32)
+    best_g = jnp.take_along_axis(gains, best_j[:, None], axis=-1)[:, 0]
+
+    valid = (jnp.arange(n_pad) < h.n) & (h.vertex_weights > 0)
+    propose = valid & (best_g > 1e-9)
+    bw = metrics.block_weights(h, part, k)
+    return accept_moves(part, best_j, best_g, propose, h.vertex_weights,
+                        bw, cap, frac, k)
+
+
+def lp_refine(hga: HypergraphArrays, part: np.ndarray, k: int, eps: float,
+              max_iters: int = 24, patience: int = 3,
+              edge_weight_override=None) -> Tuple[np.ndarray, float]:
+    """Host loop around ``lp_round`` with regression-safe acceptance."""
+    cap = metrics.balance_cap(hga.total_weight, k, eps)
+    part = pad_part(part, hga.n_pad)
+    cut = float(metrics.cutsize_jit(hga, part, k))
+    stall = 0
+    for _ in range(max_iters):
+        frac = 1.0
+        improved = False
+        for _attempt in range(5):
+            cand = lp_round(hga, part, k, cap, jnp.float32(frac),
+                            edge_weight_override)
+            c = float(metrics.cutsize_jit(hga, cand, k))
+            if c < cut - 1e-6:
+                part, cut, improved = cand, c, True
+                break
+            frac *= 0.25
+        if not improved:
+            stall += 1
+            if stall >= patience:
+                break
+        else:
+            stall = 0
+    return np.asarray(part), cut
+
+
+# --------------------------------------------------------------------------
+# sequential FM (scan) for coarse levels
+# --------------------------------------------------------------------------
+@partial(jax.jit, static_argnames=("k", "steps"))
+def _fm_pass(hga: HypergraphArrays, part: jnp.ndarray, k: int,
+             cap: jnp.ndarray, steps: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """One FM pass: up to ``steps`` single moves (negative gains allowed),
+    returns the best prefix (partition + its cut)."""
+    n_pad = hga.n_pad
+    valid = (jnp.arange(n_pad) < hga.n) & (hga.vertex_weights > 0)
+    phi0 = metrics.pins_in_block(hga, part, k)
+    bw0 = metrics.block_weights(hga, part, k)
+    cut0 = metrics.cutsize(hga, part, k)
+
+    def step(carry, _):
+        part, phi, bw, locked, cur_cut, best_cut, best_part = carry
+        gains = metrics.gain_matrix(hga, part, k, phi=phi)    # [n_pad, k]
+        own = jax.nn.one_hot(part, k, dtype=bool)
+        feasible = (bw[None, :] + hga.vertex_weights[:, None]) <= cap + 1e-6
+        score = jnp.where(own | ~feasible, NEG, gains)
+        score = jnp.where((locked | ~valid)[:, None], NEG, score)
+        flat = jnp.argmax(score)
+        v = (flat // k).astype(jnp.int32)
+        j = (flat % k).astype(jnp.int32)
+        g = score.reshape(-1)[flat]
+        do = g > NEG / 2  # any feasible move at all?
+
+        b = part[v]
+        d = jax.ops.segment_sum(
+            (hga.pin_vertex == v).astype(jnp.int32), hga.pin_edge,
+            num_segments=hga.m_pad)                            # [m_pad]
+        delta = (jax.nn.one_hot(j, k, dtype=phi.dtype)
+                 - jax.nn.one_hot(b, k, dtype=phi.dtype))      # [k]
+        phi_new = phi + d[:, None] * delta[None, :]
+        bw_new = bw + hga.vertex_weights[v] * delta
+        part_new = part.at[v].set(j)
+        cut_new = cur_cut - g
+
+        part = jnp.where(do, part_new, part)
+        phi = jnp.where(do, phi_new, phi)
+        bw = jnp.where(do, bw_new, bw)
+        locked = locked.at[v].set(jnp.where(do, True, locked[v]))
+        cur_cut = jnp.where(do, cut_new, cur_cut)
+        better = do & (cur_cut < best_cut - 1e-9)
+        best_cut = jnp.where(better, cur_cut, best_cut)
+        best_part = jnp.where(better, part, best_part)
+        return (part, phi, bw, locked, cur_cut, best_cut, best_part), None
+
+    locked0 = jnp.zeros(n_pad, bool)
+    init = (part, phi0, bw0, locked0, cut0, cut0, part)
+    (_, _, _, _, _, best_cut, best_part), _ = jax.lax.scan(
+        step, init, None, length=steps)
+    return best_part, best_cut
+
+
+def fm_refine(hga: HypergraphArrays, part: np.ndarray, k: int, eps: float,
+              max_passes: int = 8, step_budget: int | None = None
+              ) -> Tuple[np.ndarray, float]:
+    """Repeated FM passes until no pass improves the cut."""
+    cap = metrics.balance_cap(hga.total_weight, k, eps)
+    part = pad_part(part, hga.n_pad)
+    cut = float(metrics.cutsize_jit(hga, part, k))
+    # shape-derived so all pow2-bucketed levels share one compilation
+    steps = step_budget or int(min(hga.n_pad, 1024))
+    for _ in range(max_passes):
+        cand, c = _fm_pass(hga, part, k, cap, steps)
+        c = float(c)
+        if c < cut - 1e-6:
+            part, cut = cand, c
+        else:
+            break
+    return np.asarray(part), cut
+
+
+# --------------------------------------------------------------------------
+# combined per-level refinement + balance safety net
+# --------------------------------------------------------------------------
+def refine(hga: HypergraphArrays, part: np.ndarray, k: int, eps: float,
+           fm_node_limit: int = 4096, **kw) -> Tuple[np.ndarray, float]:
+    part, cut = lp_refine(hga, part, k, eps, **kw)
+    if int(hga.n) <= fm_node_limit:
+        part, cut = fm_refine(hga, part, k, eps)
+    return part, cut
+
+
+def rebalance(hg_vertex_weights: np.ndarray, part: np.ndarray, k: int,
+              eps: float, rng: np.random.Generator | None = None
+              ) -> np.ndarray:
+    """Host safety net: greedily move the lightest vertices out of
+    overfull blocks into the lightest feasible blocks."""
+    rng = rng or np.random.default_rng(0)
+    part = np.asarray(part).copy()
+    w = np.asarray(hg_vertex_weights, np.float64)
+    n = len(part)
+    total = w.sum()
+    cap = (1.0 + eps) * np.ceil(total / k)
+    bw = np.zeros(k)
+    np.add.at(bw, part[:n], w)
+    for b in range(k):
+        while bw[b] > cap + 1e-6:
+            members = np.nonzero(part == b)[0]
+            v = members[np.argmin(w[members])]
+            tgt = int(np.argmin(bw))
+            if tgt == b:
+                break
+            part[v] = tgt
+            bw[b] -= w[v]
+            bw[tgt] += w[v]
+    return part

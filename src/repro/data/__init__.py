@@ -1,0 +1,2 @@
+from .hypergraphs import (titan_like, ispd_like, random_hypergraph,
+                          BENCH_TITAN, BENCH_ISPD)

@@ -1,0 +1,98 @@
+"""Jit'd public wrappers around the Pallas kernels + host layout helpers.
+
+The partitioner's CSR arrays are re-blocked once per level into the padded
+matrix layouts the kernels want (pins[M, S], incident[N, D]).  On this CPU
+container every kernel runs with ``interpret=True`` (the Pallas
+interpreter executes the kernel body faithfully); on TPU, flip
+``INTERPRET`` to False — the call sites are unchanged.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core.hypergraph import Hypergraph, _round_pow2
+from . import ref
+from .connectivity import connectivity_pallas, cutsize_pallas
+from .gain import gain_gather_pallas
+from .embedding_bag import embedding_bag_pallas
+
+INTERPRET = True  # CPU container; set False on real TPU
+
+
+# --------------------------------------------------------------------------
+# host layout converters
+# --------------------------------------------------------------------------
+def edge_pin_matrix(hg: Hypergraph, block_m: int = 512,
+                    lane_pad: int = 8) -> np.ndarray:
+    """CSR -> padded [M_pad, S_pad] pin matrix (pad = -1)."""
+    sizes = hg.edge_sizes()
+    s_pad = max(int(_round_pow2(int(sizes.max()) if hg.m else 1, lane_pad)), lane_pad)
+    m_pad = ((hg.m + block_m - 1) // block_m) * block_m
+    out = np.full((m_pad, s_pad), -1, np.int32)
+    rows = hg.pin_edge_ids()
+    cols = (np.arange(hg.num_pins, dtype=np.int64)
+            - np.repeat(hg.edge_offsets[:-1], sizes))
+    out[rows, cols] = hg.pins
+    return out
+
+
+def vertex_incidence_matrix(hg: Hypergraph, block_n: int = 256,
+                            lane_pad: int = 8) -> np.ndarray:
+    """dual CSR -> padded [N_pad, D_pad] incident-edge matrix (pad = -1)."""
+    incident, voff = hg.dual()
+    deg = np.diff(voff)
+    d_pad = max(int(_round_pow2(int(deg.max()) if hg.n else 1, lane_pad)), lane_pad)
+    n_pad = ((hg.n + block_n - 1) // block_n) * block_n
+    out = np.full((n_pad, d_pad), -1, np.int32)
+    rows = np.repeat(np.arange(hg.n), deg)
+    cols = np.arange(len(incident), dtype=np.int64) - np.repeat(voff[:-1], deg)
+    out[rows, cols] = incident
+    return out
+
+
+# --------------------------------------------------------------------------
+# public ops (kernel or oracle, same signature)
+# --------------------------------------------------------------------------
+def connectivity(pins: jnp.ndarray, part: jnp.ndarray, k: int,
+                 use_kernel: bool = True) -> jnp.ndarray:
+    if use_kernel and k <= 32:
+        return connectivity_pallas(pins, part, k, interpret=INTERPRET)
+    return ref.connectivity_ref(pins, part, k)
+
+
+def cutsize(pins: jnp.ndarray, part: jnp.ndarray, edge_weights: jnp.ndarray,
+            k: int, use_kernel: bool = True) -> jnp.ndarray:
+    if use_kernel and k <= 32:
+        return cutsize_pallas(pins, part, edge_weights, k,
+                              interpret=INTERPRET)
+    return ref.cutsize_ref(pins, part, edge_weights, k)
+
+
+def edge_terms(phi: jnp.ndarray, edge_sizes: jnp.ndarray,
+               edge_weights: jnp.ndarray):
+    """Per-edge FM terms from Phi (stage 1 of the gain pipeline)."""
+    sizes = edge_sizes[:, None]
+    w = edge_weights[:, None]
+    becomes_internal = jnp.where(phi == sizes - 1, w, 0.0)
+    was_internal = jnp.where((phi == sizes) & (sizes > 0), w, 0.0).sum(-1)
+    return becomes_internal, was_internal
+
+
+def gain_gather(incident: jnp.ndarray, becomes_internal: jnp.ndarray,
+                was_internal: jnp.ndarray, use_kernel: bool = True
+                ) -> jnp.ndarray:
+    if use_kernel:
+        return gain_gather_pallas(incident, becomes_internal, was_internal,
+                                  interpret=INTERPRET)
+    return ref.gain_gather_ref(incident, becomes_internal, was_internal)
+
+
+def embedding_bag(table: jnp.ndarray, indices: jnp.ndarray,
+                  combiner: str = "sum", use_kernel: bool = True
+                  ) -> jnp.ndarray:
+    if use_kernel:
+        return embedding_bag_pallas(table, indices, combiner=combiner,
+                                    interpret=INTERPRET)
+    return ref.embedding_bag_ref(table, indices, combiner=combiner)

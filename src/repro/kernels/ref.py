@@ -1,0 +1,57 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness ground truth
+used by the per-kernel allclose test sweeps).
+
+Layouts match the kernels: hyperedges as a padded pin matrix
+``pins[M, S]`` (pad = -1), partition ids ``part[N]``, ``k`` blocks.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def connectivity_ref(pins: jnp.ndarray, part: jnp.ndarray, k: int
+                     ) -> jnp.ndarray:
+    """lambda(e) for each edge: number of distinct blocks among the
+    (valid) pins.  pins: [M, S] int32, pad = -1.  Returns [M] int32."""
+    valid = pins >= 0
+    p = part[jnp.clip(pins, 0, part.shape[0] - 1)]          # [M, S]
+    onehot = jax.nn.one_hot(p, k, dtype=jnp.int32) * valid[..., None]
+    present = (onehot.sum(axis=1) > 0)                       # [M, k]
+    return present.sum(axis=-1).astype(jnp.int32)
+
+
+def cutsize_ref(pins: jnp.ndarray, part: jnp.ndarray,
+                edge_weights: jnp.ndarray, k: int) -> jnp.ndarray:
+    lam = connectivity_ref(pins, part, k)
+    return jnp.where(lam > 1, edge_weights, 0.0).sum()
+
+
+def gain_gather_ref(incident: jnp.ndarray, becomes_internal: jnp.ndarray,
+                    was_internal: jnp.ndarray) -> jnp.ndarray:
+    """FM gain assembly: for each vertex, sum the per-edge gain rows of
+    its incident edges.
+
+    incident: [N, D] int32 edge ids, pad = -1
+    becomes_internal: [M, k] f32 ;  was_internal: [M] f32
+    returns gains [N, k] f32  ==  sum_e bi[e] - sum_e wi[e]
+    """
+    valid = (incident >= 0)[..., None]
+    idx = jnp.clip(incident, 0, becomes_internal.shape[0] - 1)
+    bi = becomes_internal[idx] * valid                       # [N, D, k]
+    wi = was_internal[idx] * valid[..., 0]                   # [N, D]
+    return bi.sum(axis=1) - wi.sum(axis=1, keepdims=True)
+
+
+def embedding_bag_ref(table: jnp.ndarray, indices: jnp.ndarray,
+                      combiner: str = "sum") -> jnp.ndarray:
+    """EmbeddingBag: gather + segment-reduce over the bag dimension.
+
+    table: [R, D] ; indices: [B, L] int32, pad = -1 ; returns [B, D].
+    """
+    valid = (indices >= 0)[..., None]                        # [B, L, 1]
+    rows = table[jnp.clip(indices, 0, table.shape[0] - 1)]   # [B, L, D]
+    out = (rows * valid).sum(axis=1)
+    if combiner == "mean":  # fixed-length-bag mean: pads count (see kernel)
+        out = out / indices.shape[1]
+    return out

@@ -1,0 +1,121 @@
+"""Analytic MODEL_FLOPS per cell: first-principles *useful* work per step
+(6·N·D-style accounting), the numerator of the roofline-MFU score and the
+denominator of the remat/redundancy-waste ratio.
+
+Conventions: train = 3x forward (fwd + 2x bwd); embedding gathers are not
+FLOPs; causal attention = half the full score matrix; MoE counts only the
+top-k activated experts.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+from repro.configs.base import ArchSpec, LMConfig, GNNConfig, DLRMConfig
+
+
+def _lm_fwd_flops(cfg: LMConfig, tokens: int, seq: int) -> float:
+    # matmul params actually multiplied per token (embed gather excluded,
+    # lm_head included)
+    n_eff = cfg.active_param_count() - cfg.vocab * cfg.d_model
+    attn = 2.0 * cfg.n_layers * cfg.n_heads * cfg.d_head * seq * tokens * 0.5
+    return 2.0 * n_eff * tokens + attn
+
+
+def model_flops(spec: ArchSpec, shape_name: str) -> float:
+    """Global useful FLOPs for one step of (arch x shape)."""
+    shape = spec.shape(shape_name)
+    p = shape.p()
+    cfg = spec.config
+
+    if isinstance(cfg, LMConfig):
+        b, s = int(p["global_batch"]), int(p["seq_len"])
+        if shape.kind == "train":
+            return 3.0 * _lm_fwd_flops(cfg, b * s, s)
+        if shape.kind == "prefill":
+            return _lm_fwd_flops(cfg, b * s, s)
+        # decode: one token against an s-token cache
+        n_eff = cfg.active_param_count() - cfg.vocab * cfg.d_model
+        attn = 4.0 * cfg.n_layers * cfg.n_heads * cfg.d_head * s * b
+        return 2.0 * n_eff * b + attn
+
+    if isinstance(cfg, GNNConfig):
+        h = cfg.d_hidden
+        if shape.kind == "molecule":
+            n = int(p["batch"]) * int(p["n_nodes"])
+            e = int(p["batch"]) * int(p["n_edges"])
+        elif shape.kind == "minibatch":
+            # fanout regime: encode MLP on every sampled node + pooling
+            # (pooling adds are not matmul FLOPs); sage adds 2 matmul hops
+            r = int(p["batch_nodes"])
+            f1, f2 = p["fanout"]
+            n_eff = r * (1 + f1 + f1 * f2)
+            h = cfg.d_hidden
+            fwd = 2.0 * n_eff * cfg.d_feat * h \
+                + 2.0 * r * (h * h + h * cfg.n_classes)
+            if cfg.name == "graphsage-reddit":
+                fwd += 4.0 * (r + r * f1) * h * h
+            return 3.0 * fwd
+        else:
+            n, e = int(p["n_nodes"]), int(p["n_edges"])
+        d_feat = int(p.get("d_feat", cfg.d_feat))
+        per_layer = {
+            "gatedgcn": 2.0 * h * h * (4 * e + n),
+            "gin-tu": 4.0 * n * h * h,
+            "meshgraphnet": 8.0 * e * h * h + 6.0 * n * h * h,
+            "graphsage-reddit": 4.0 * n * h * h,
+        }[cfg.name]
+        io = 2.0 * n * d_feat * h + 2.0 * n * (h * h + h * cfg.n_classes)
+        layers = cfg.n_layers if shape.kind != "minibatch" else min(
+            cfg.n_layers, 2)
+        fwd = per_layer * layers + io
+        return 3.0 * fwd  # all GNN shapes are training cells
+
+    if isinstance(cfg, DLRMConfig):
+        nf = cfg.n_sparse + 1
+        bot = 2.0 * sum(a * b_ for a, b_ in zip(
+            (cfg.n_dense,) + cfg.bot_mlp[:-1], cfg.bot_mlp))
+        inter = 2.0 * nf * nf * cfg.embed_dim
+        top_in = nf * (nf - 1) // 2 + cfg.bot_mlp[-1]
+        top = 2.0 * sum(a * b_ for a, b_ in zip(
+            (top_in,) + cfg.top_mlp[:-1], cfg.top_mlp))
+        per_ex = bot + inter + top
+        if shape.kind == "train_batch":
+            return 3.0 * int(p["batch"]) * per_ex
+        if shape.kind == "serve_batch":
+            return float(int(p["batch"]) * per_ex)
+        # retrieval: two-tower dot
+        return bot + 2.0 * int(p["n_candidates"]) * cfg.embed_dim
+
+    raise ValueError(type(cfg))
+
+
+# v5e hardware constants (per chip)
+PEAK_FLOPS = 197e12       # bf16
+HBM_BW = 819e9            # bytes/s
+LINK_BW = 50e9            # bytes/s per ICI link (conservative single-link)
+HBM_PER_CHIP = 16e9
+
+
+def roofline_terms(rec: Dict, spec: ArchSpec | None = None) -> Dict:
+    """rec = one dry-run JSON record -> the three per-device time terms."""
+    hlo = rec["hlo"]
+    n_dev = rec["n_devices"]
+    t_compute = hlo["dot_flops"] / PEAK_FLOPS
+    t_memory = hlo["hbm_bytes"] / HBM_BW
+    t_coll = hlo["wire_bytes"] / LINK_BW
+    bound = max(t_compute, t_memory, t_coll)
+    dominant = ("compute" if bound == t_compute else
+                "memory" if bound == t_memory else "collective")
+    out = {
+        "t_compute_s": t_compute, "t_memory_s": t_memory,
+        "t_collective_s": t_coll, "dominant": dominant, "bound_s": bound,
+    }
+    if spec is not None:
+        mf = model_flops(spec, rec["shape"])
+        out["model_flops"] = mf
+        hlo_total = hlo["dot_flops"] * n_dev
+        out["useful_ratio"] = mf / hlo_total if hlo_total else float("nan")
+        # the score: useful flops / (chips * peak * bound-time)
+        out["roofline_mfu"] = (mf / (n_dev * PEAK_FLOPS * bound)
+                               if bound > 0 else float("nan"))
+    return out

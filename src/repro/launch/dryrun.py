@@ -1,0 +1,262 @@
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell on
+the production mesh with 512 placeholder host devices, record
+memory_analysis / cost_analysis / per-collective wire bytes.
+
+MUST be the first import in the process: jax locks the device count on
+first init, so the XLA_FLAGS override below precedes every other import.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch <id> --shape <name> \
+      [--mesh single|multi|both] [--out reports/dryrun]
+  PYTHONPATH=src python -m repro.launch.dryrun --all
+  PYTHONPATH=src python -m repro.launch.dryrun --population   # IMPart step
+"""
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", ""))
+
+import argparse          # noqa: E402
+import dataclasses       # noqa: E402
+import json              # noqa: E402
+import re                # noqa: E402
+import sys               # noqa: E402
+import time              # noqa: E402
+import traceback         # noqa: E402
+
+import jax               # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np       # noqa: E402
+
+from repro.launch.mesh import make_production_mesh       # noqa: E402
+from repro.launch.hlo_analysis import analyze_hlo        # noqa: E402
+from repro.configs.registry import ARCHS, get_arch, get_opt  # noqa: E402
+from repro.train.steps import build_cell                 # noqa: E402
+
+
+# --------------------------------------------------------------------------
+# HLO collective accounting
+# --------------------------------------------------------------------------
+_DTYPE_BYTES = {"pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2,
+                "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+                "f64": 8, "c64": 8, "c128": 16}
+
+_COLL_RE = re.compile(
+    r"=\s+(?:\(([^)]*)\)|(\w+)\[([\d,]*)\][^ ]*)\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"[^\n]*")
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]<=")
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    if dtype not in _DTYPE_BYTES:
+        return 0
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+def collective_stats(hlo_text: str):
+    """Per-collective wire-byte estimate from SPMD-partitioned HLO (shapes
+    are per-partition => bytes are per-device).  Ring algorithm cost
+    model: AR 2(g-1)/g * full, AG (g-1)/g * full, RS (g-1)/g * full (full
+    = result * g), A2A (g-1)/g, permute 1x."""
+    per_kind = {}
+    total_wire = 0.0
+    count = 0
+    for mm in _COLL_RE.finditer(hlo_text):
+        tuple_part, dtype, dims, kind = mm.groups()
+        if tuple_part:  # tuple-shaped collective: sum element shapes
+            rb = sum(_shape_bytes(d, s)
+                     for d, s in _SHAPE_RE.findall(tuple_part))
+        else:
+            rb = _shape_bytes(dtype, dims)
+        line = mm.group(0)
+        g = 2
+        mg = _GROUPS_RE.search(line)
+        if mg:
+            g = max(len(mg.group(1).split(",")), 1)
+        else:
+            mi = _GROUPS_IOTA_RE.search(line)
+            if mi:
+                g = max(int(mi.group(2)), 1)
+        if kind == "all-reduce":
+            wire = 2.0 * rb * (g - 1) / g
+        elif kind == "all-gather":
+            wire = rb * (g - 1) / g
+        elif kind == "reduce-scatter":
+            wire = rb * (g - 1)          # result is the scattered shard
+        elif kind == "all-to-all":
+            wire = rb * (g - 1) / g
+        else:
+            wire = float(rb)
+        d = per_kind.setdefault(kind, {"count": 0, "result_bytes": 0.0,
+                                       "wire_bytes": 0.0})
+        d["count"] += 1
+        d["result_bytes"] += float(rb)
+        d["wire_bytes"] += wire
+        total_wire += wire
+        count += 1
+    return {"per_kind": per_kind, "wire_bytes_per_device": total_wire,
+            "n_collectives": count}
+
+
+# --------------------------------------------------------------------------
+# the dry run for one cell
+# --------------------------------------------------------------------------
+def run_cell(arch_id: str, shape_name: str, multi_pod: bool,
+             smoke: bool = False) -> dict:
+    spec = get_arch(arch_id)
+    shape = spec.shape(shape_name)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_dev = int(np.prod(list(mesh.shape.values())))
+    t0 = time.perf_counter()
+    cell = build_cell(spec, shape, multi_pod, opt_cfg=get_opt(arch_id),
+                      n_devices=n_dev)
+    lowered = cell.lower(mesh)
+    t_lower = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    compiled = lowered.compile()
+    t_compile = time.perf_counter() - t0
+
+    mem = compiled.memory_analysis()
+    mem_d = {
+        "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+        "output_bytes": getattr(mem, "output_size_in_bytes", None),
+        "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+        "peak_bytes": getattr(mem, "peak_memory_in_bytes", None),
+        "alias_bytes": getattr(mem, "alias_size_in_bytes", None),
+    }
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    cost_d = {k: float(v) for k, v in ca.items()
+              if isinstance(v, (int, float)) and k in
+              ("flops", "bytes accessed", "transcendentals",
+               "bytes accessed output", "optimal_seconds")}
+
+    trips = cell.static.get("trips", [])
+    hlo = analyze_hlo(compiled.as_text(), trips)
+    rec = {
+        "arch": arch_id, "shape": shape_name,
+        "mesh": "multi" if multi_pod else "single",
+        "kind": cell.kind,
+        "n_devices": n_dev, "trips": trips,
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "memory": mem_d, "cost_raw": cost_d, "hlo": hlo,
+        "ok": True,
+    }
+    return rec
+
+
+def run_population(multi_pod: bool, n: int = 1 << 20, m: int = 1 << 21,
+                   k: int = 32) -> dict:
+    """Dry-run the distributed IMPart population step (the paper's core
+    as a first-class multi-pod citizen)."""
+    from repro.core.population import make_population_step
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_dev = int(np.prod(list(mesh.shape.values())))
+    pop = (mesh.shape["pod"] * mesh.shape["data"] if multi_pod
+           else mesh.shape["data"])
+    p_pad = 4 * m
+    n_pad, m_pad = n + 1, m + 1
+    step = make_population_step(mesh, n=n, m=m, k=k, refine_rounds=2)
+    sds = lambda shape, dt: jax.ShapeDtypeStruct(shape, dt)
+    t0 = time.perf_counter()
+    with jax.set_mesh(mesh):
+        lowered = step.lower(
+            sds((p_pad,), jnp.int32), sds((p_pad,), jnp.int32),
+            sds((n_pad,), jnp.float32), sds((m_pad,), jnp.float32),
+            sds((m_pad,), jnp.int32), sds((pop, n_pad), jnp.int32))
+        t_lower = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        compiled = lowered.compile()
+    t_compile = time.perf_counter() - t0
+    mem = compiled.memory_analysis()
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return {
+        "arch": "impart-population", "shape": f"n{n}_m{m}_k{k}",
+        "mesh": "multi" if multi_pod else "single",
+        "kind": "population_step", "n_devices": n_dev,
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "memory": {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "peak_bytes": getattr(mem, "peak_memory_in_bytes", None),
+        },
+        "cost_raw": {k_: float(v) for k_, v in ca.items()
+                     if isinstance(v, (int, float))
+                     and k_ in ("flops", "bytes accessed")},
+        "hlo": analyze_hlo(compiled.as_text(), []),
+        "ok": True,
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--mesh", default="both",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--population", action="store_true")
+    ap.add_argument("--out", default="reports/dryrun")
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+
+    cells = []
+    if args.population:
+        for mp in meshes:
+            cells.append(("__population__", "", mp))
+    elif args.all:
+        for aid, spec in ARCHS.items():
+            for sh in spec.shapes:
+                for mp in meshes:
+                    cells.append((aid, sh.name, mp))
+    else:
+        for mp in meshes:
+            cells.append((args.arch, args.shape, mp))
+
+    failures = 0
+    for aid, shn, mp in cells:
+        tag = f"{aid}__{shn}__{'multi' if mp else 'single'}".replace(
+            "/", "_")
+        path = os.path.join(args.out, tag + ".json")
+        try:
+            if aid == "__population__":
+                rec = run_population(mp)
+                path = os.path.join(
+                    args.out,
+                    f"impart-population____{'multi' if mp else 'single'}"
+                    ".json")
+            else:
+                rec = run_cell(aid, shn, mp)
+            print(f"[dryrun] OK   {tag} compile={rec['compile_s']}s "
+                  f"dotflops/dev={rec['hlo']['dot_flops']:.3e} "
+                  f"hbm/dev={rec['hlo']['hbm_bytes']:.3e}B "
+                  f"wire/dev={rec['hlo']['wire_bytes']:.3e}B")
+        except Exception as e:
+            failures += 1
+            rec = {"arch": aid, "shape": shn,
+                   "mesh": "multi" if mp else "single", "ok": False,
+                   "error": f"{type(e).__name__}: {e}",
+                   "traceback": traceback.format_exc()[-2000:]}
+            print(f"[dryrun] FAIL {tag}: {type(e).__name__}: {str(e)[:200]}")
+        with open(path, "w") as f:
+            json.dump(rec, f, indent=1)
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

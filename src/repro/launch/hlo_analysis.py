@@ -1,0 +1,297 @@
+"""Static HLO analysis for the roofline (DESIGN.md §7, EXPERIMENTS.md).
+
+XLA's ``compiled.cost_analysis()`` counts every ``while`` body exactly
+once — a ~100x undercount for scanned-layer models.  This module parses
+the SPMD-partitioned HLO text (shapes are per-partition => every number
+is per-device), rebuilds the computation call graph, and scales each
+while body by its trip count (supplied by the cell builder, which knows
+the scan structure: [microbatches, layers, ...] outermost-first).
+
+Per-device outputs:
+  * dot_flops     — 2*M*N*K summed over ``dot`` ops, loop-scaled
+  * hbm_bytes     — sum of (result + operand) bytes per top-level
+                    instruction, loop-scaled.  Fusions count only their
+                    boundary buffers (internal intermediates stay in
+                    registers/cache), which is exactly the HBM model.
+  * collectives   — wire bytes per kind with a ring cost model,
+                    loop-scaled.
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict, List, Tuple
+
+_DTYPE_BYTES = {"pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2,
+                "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+                "f64": 8, "c64": 8, "c128": 16, "token": 0}
+
+_COMP_HEADER = re.compile(
+    r"^(ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\)\s*->\s*.+\{\s*$")
+_INSTR = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(.+?)\s+([\w\-]+)\((.*)$")
+_SHAPE = re.compile(r"(\w+)\[([\d,]*)\]")
+_BODY = re.compile(r"body=%?([\w\.\-]+)")
+_CALLS = re.compile(r"calls=%?([\w\.\-]+)")
+_BRANCHES = re.compile(r"branch_computations=\{([^}]*)\}")
+_GROUPS = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_GROUPS_IOTA = re.compile(r"replica_groups=\[(\d+),(\d+)\]<=")
+
+_SKIP_OPS = {"parameter", "constant", "tuple", "get-tuple-element",
+             "bitcast", "copy", "copy-start", "copy-done", "after-all",
+             "partition-id", "replica-id", "iota", "broadcast",
+             "reshape", "transpose", "while", "conditional", "call"}
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+
+def _shape_list_bytes(sig: str) -> int:
+    return sum(_bytes(d, s) for d, s in _SHAPE.findall(sig))
+
+
+def _bytes(dtype: str, dims: str) -> int:
+    if dtype not in _DTYPE_BYTES:
+        return 0
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+class HloModuleStats:
+    def __init__(self, text: str):
+        self.comp_instrs: Dict[str, List[dict]] = {}
+        self.entry = None
+        self._parse(text)
+
+    def _parse(self, text: str):
+        cur = None
+        for line in text.splitlines():
+            mh = _COMP_HEADER.match(line)
+            if mh:
+                cur = mh.group(2)
+                self.comp_instrs[cur] = []
+                if mh.group(1):
+                    self.entry = cur
+                continue
+            if line.strip() == "}":
+                continue
+            if cur is None:
+                continue
+            mi = _INSTR.match(line)
+            if not mi:
+                continue
+            name, sig, op, rest = mi.groups()
+            rec = {"name": name, "op": op, "line": line,
+                   "result_bytes": _shape_list_bytes(sig)}
+            self.comp_instrs[cur].append(rec)
+
+    # -- helpers ----------------------------------------------------------
+    def _shape_table(self, comp: str) -> Dict[str, int]:
+        return {r["name"]: r["result_bytes"]
+                for r in self.comp_instrs.get(comp, [])}
+
+    def _operands_bytes(self, comp: str, line: str, table) -> int:
+        # operand names appear as %name inside the parens
+        call = line.split("(", 2)[-1]
+        names = re.findall(r"%([\w\.\-]+)", call.split("),")[0])
+        return sum(table.get(nm, 0) for nm in names)
+
+    def _dot_flops(self, comp: str, rec: dict, table) -> float:
+        # dot flops = 2 * prod(result dims) * K, K from lhs contracting dims
+        line = rec["line"]
+        shapes = _SHAPE.findall(line.split("dot(")[0])
+        if not shapes:
+            return 0.0
+        res_elems = 1
+        for d in shapes[0][1].split(","):
+            if d:
+                res_elems *= int(d)
+        # operand shapes: look up the first operand's dims
+        call = line.split("dot(", 1)[1]
+        names = re.findall(r"%([\w\.\-]+)", call)
+        mcon = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", line)
+        if not names or not mcon:
+            return 2.0 * res_elems  # degenerate
+        lhs = names[0]
+        lhs_rec = next((r for r in self.comp_instrs.get(comp, [])
+                        if r["name"] == lhs), None)
+        k = 1
+        if lhs_rec:
+            ms = _SHAPE.findall(lhs_rec["line"].split("=")[1].split("(")[0])
+            if ms:
+                dims = [int(x) for x in ms[0][1].split(",") if x]
+                for ci in mcon.group(1).split(","):
+                    if ci and int(ci) < len(dims):
+                        k *= dims[int(ci)]
+        return 2.0 * res_elems * k
+
+    def _collective_wire(self, rec: dict, comp: str | None = None
+                         ) -> Tuple[str, float, float]:
+        """TPU-fidelity wire model.  Two XLA:CPU artifacts are corrected
+        (verified against the partitioned HLO, see EXPERIMENTS.md §Perf):
+
+        * XLA:CPU emits NO reduce-scatter — would-be RS ops appear as
+          all-reduce followed only by (dynamic-)slice consumers.  Cost
+          those at the ring-RS rate, (g-1)/g x full, not 2x.
+        * XLA:CPU upcasts bf16 dots to f32, so weight/activation buffers
+          are gathered post-convert at 4 B/elem.  A collective whose
+          operand is a convert-from-bf16 is costed at 2 B/elem (TPU
+          gathers the bf16 buffer).
+        """
+        line = rec["line"]
+        rb = rec["result_bytes"]
+        g = 2
+        mg = _GROUPS.search(line)
+        if mg:
+            g = max(len(mg.group(1).split(",")), 1)
+        else:
+            mi = _GROUPS_IOTA.search(line)
+            if mi:
+                g = max(int(mi.group(2)), 1)
+        kind = rec["op"]
+
+        if comp is not None and self._operand_is_bf16_convert(comp, line):
+            rb = rb / 2.0
+        if kind == "all-reduce" and comp is not None:
+            slicey, converty = self._slice_consumers(
+                comp, rec["name"], rb=rb, g=g)
+            if slicey:
+                # would-be reduce-scatter (XLA:CPU lowers RS as AR+slice)
+                kind = "all-reduce(rs)"
+                if converty:   # scattered shard is stored in bf16
+                    rb = rb / 2.0
+                wire = rb * (g - 1) / g
+                return kind, float(rb), wire
+        if kind == "all-reduce":
+            wire = 2.0 * rb * (g - 1) / g
+        elif kind == "all-reduce":
+            wire = 2.0 * rb * (g - 1) / g
+        elif kind == "all-gather":
+            wire = rb * (g - 1) / g
+        elif kind == "reduce-scatter":
+            wire = rb * (g - 1)
+        elif kind == "all-to-all":
+            wire = rb * (g - 1) / g
+        else:
+            wire = float(rb)
+        return kind, float(rb), wire
+
+    def _slice_consumers(self, comp: str, name: str,
+                         depth: int = 0, rb: float = 0.0, g: int = 16):
+        """(all_consumers_slice_like, any_consumer_converts_to_bf16).
+        Slice-like = slice / dynamic-slice / a fusion that slices: either
+        named after a slice root, or producing exactly 1/g (or 1/2g with
+        a bf16 convert) of the collective's bytes — the fused form of the
+        reduce-scatter XLA:CPU cannot emit."""
+        users = [r for r in self.comp_instrs.get(comp, [])
+                 if f"%{name}" in r["line"].split("=", 1)[-1]
+                 and r["name"] != name]
+        if not users:
+            return False, False
+        converty = False
+
+        def _fraction(out_bytes, target):
+            return target > 0 and abs(out_bytes - target) / target < 0.02
+
+        for r in users:
+            if r["op"] in ("dynamic-slice", "slice"):
+                continue
+            if r["op"] == "fusion":
+                if "slice" in r["name"]:
+                    converty = converty or ("convert" in r["name"]
+                                            or "bf16[" in r["line"][:200])
+                    continue
+                if rb and _fraction(r["result_bytes"], rb / g):
+                    continue
+                if rb and _fraction(r["result_bytes"], rb / (2 * g)):
+                    converty = True
+                    continue
+            if r["op"] == "get-tuple-element" and depth < 2:
+                ok, cv = self._slice_consumers(comp, r["name"], depth + 1,
+                                               rb=rb, g=g)
+                if ok:
+                    converty = converty or cv
+                    continue
+            return False, False
+        return True, converty
+
+    def _operand_is_bf16_convert(self, comp: str, line: str) -> bool:
+        """True when a collective's operand came through a bf16->f32
+        convert (XLA:CPU upcast); TPU would move the bf16 buffer."""
+        call = line.split("(", 2)[-1]
+        names = re.findall(r"%([\w\.\-]+)", call.split("),")[0])
+        table = {r["name"]: r for r in self.comp_instrs.get(comp, [])}
+        for nm in names:
+            rec = table.get(nm)
+            if rec is None:
+                continue
+            if rec["op"] == "convert" or (rec["op"] == "fusion"
+                                          and "convert" in rec["name"]):
+                # producer-of-producer dtype
+                call2 = rec["line"].split("(", 2)[-1]
+                srcs = re.findall(r"%([\w\.\-]+)",
+                                  call2.split("),")[0])
+                for s2 in srcs:
+                    r2 = table.get(s2)
+                    if r2 is not None and r2["line"].split("=", 1)[-1]\
+                            .strip().startswith("bf16["):
+                        return True
+        return False
+
+    # -- the loop-scaled walk ----------------------------------------------
+    def analyze(self, trips: List[int] | None = None) -> dict:
+        trips = list(trips or [])
+        out = {
+            "dot_flops": 0.0, "hbm_bytes": 0.0,
+            "collectives": {}, "wire_bytes": 0.0,
+            "n_collectives_static": 0,
+        }
+
+        def walk(comp: str, mult: float, depth: int):
+            table = self._shape_table(comp)
+            for rec in self.comp_instrs.get(comp, []):
+                op = rec["op"]
+                line = rec["line"]
+                if op == "while":
+                    mb = _BODY.search(line)
+                    t = trips[depth] if depth < len(trips) else 1
+                    if mb and mb.group(1) in self.comp_instrs:
+                        walk(mb.group(1), mult * t, depth + 1)
+                    continue
+                if op in ("call", "conditional"):
+                    for m2 in list(_CALLS.finditer(line)):
+                        walk(m2.group(1), mult, depth)
+                    mb2 = _BRANCHES.search(line)
+                    if mb2:
+                        for nm in re.findall(r"%([\w\.\-]+)", mb2.group(1)):
+                            walk(nm, mult, depth)
+                    continue
+                if op in COLLECTIVES:
+                    kind, rb, wire = self._collective_wire(rec, comp)
+                    d = out["collectives"].setdefault(
+                        kind, {"count": 0.0, "wire_bytes": 0.0})
+                    d["count"] += mult
+                    d["wire_bytes"] += wire * mult
+                    out["wire_bytes"] += wire * mult
+                    out["n_collectives_static"] += 1
+                    out["hbm_bytes"] += mult * (
+                        rb + self._operands_bytes(comp, line, table))
+                    continue
+                if op == "dot":
+                    out["dot_flops"] += mult * self._dot_flops(
+                        comp, rec, table)
+                if op in _SKIP_OPS:
+                    continue
+                out["hbm_bytes"] += mult * (
+                    rec["result_bytes"]
+                    + self._operands_bytes(comp, line, table))
+
+        if self.entry:
+            walk(self.entry, 1.0, 0)
+        return out
+
+
+def analyze_hlo(text: str, trips: List[int] | None = None) -> dict:
+    return HloModuleStats(text).analyze(trips)

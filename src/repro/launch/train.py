@@ -1,0 +1,125 @@
+"""Training launcher: ``python -m repro.launch.train --arch <id> [...]``.
+
+On this CPU container it trains the smoke-sized config of the chosen
+arch; on a real pod the same launcher takes ``--full`` and the production
+mesh.  Wires together: step builders, data pipeline, checkpoint manager,
+straggler watchdog, elastic restart.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ShapeSpec
+from repro.configs.registry import ARCHS, SMOKES, get_opt
+from repro.train.steps import build_cell
+from repro.optim import adamw
+from repro.checkpoint import CheckpointManager
+from repro.runtime import Runner, StragglerWatchdog
+from repro.launch.mesh import make_local_mesh
+
+
+def make_batch_fn(arch_id, cfg, batch, seq):
+    fam = cfg.family
+    if fam == "lm":
+        from repro.data.lm_data import TokenStream
+        ts = TokenStream(cfg.vocab, batch, seq, seed=0)
+
+        def fn(step):
+            b = ts.next_batch(step)
+            return {"tokens": jnp.asarray(b["tokens"]),
+                    "labels": jnp.asarray(b["labels"])}
+        return fn
+    if fam == "gnn":
+        from repro.data.graphs import full_graph_batch
+        from repro.models import gnn as gnn_mod
+
+        def fn(step):
+            return jax.tree.map(jnp.asarray, full_graph_batch(
+                256, 1024, cfg.d_feat, cfg.n_classes, seed=step,
+                need_edge_feat=gnn_mod._edge_feat_dim(cfg)))
+        return fn
+    from repro.data.recsys import click_batch
+
+    def fn(step):
+        return jax.tree.map(jnp.asarray, click_batch(cfg, batch, seed=step))
+    return fn
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=20)
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--full", action="store_true",
+                    help="use the full (pod-scale) config, not the smoke")
+    args = ap.parse_args()
+
+    spec = ARCHS[args.arch]
+    cfg = spec.config if args.full else SMOKES[args.arch]
+    spec = dataclasses.replace(spec, config=cfg)
+    fam = cfg.family
+    if fam == "lm":
+        shape = ShapeSpec("cli", "train", (("seq_len", args.seq),
+                                           ("global_batch", args.batch)))
+    elif fam == "gnn":
+        shape = ShapeSpec("cli", "full_graph",
+                          (("n_nodes", 256), ("n_edges", 1024),
+                           ("d_feat", cfg.d_feat)))
+    else:
+        shape = ShapeSpec("cli", "train_batch", (("batch", args.batch),))
+
+    opt_cfg = get_opt(args.arch)
+    cell = build_cell(spec, shape, multi_pod=False, opt_cfg=opt_cfg,
+                      n_devices=1)
+    mesh = make_local_mesh()
+
+    # init or resume
+    if fam == "lm":
+        from repro.models import transformer
+        params = transformer.init_params(cfg, jax.random.PRNGKey(0))
+    elif fam == "gnn":
+        from repro.models import gnn
+        params = gnn.init_params(cfg, jax.random.PRNGKey(0),
+                                 d_feat=cfg.d_feat,
+                                 n_classes=cfg.n_classes)
+    else:
+        from repro.models import dlrm
+        params = dlrm.init_params(cfg, jax.random.PRNGKey(0))
+    state = {"params": params, "opt": adamw.init(params, opt_cfg)}
+
+    ckpt = CheckpointManager(args.ckpt_dir, keep=3)
+    start = 0
+    if args.resume and ckpt.latest_step() is not None:
+        state, extra = ckpt.restore(state)
+        start = extra.get("data_cursor", 0)
+        print(f"[train] resumed from step {start}")
+
+    batch_fn = make_batch_fn(args.arch, cfg, args.batch, args.seq)
+    step_fn = jax.jit(cell.fn)
+    wd = StragglerWatchdog()
+    with jax.set_mesh(mesh):
+        runner = Runner(step_fn=step_fn, state=state, next_batch=batch_fn,
+                        ckpt=ckpt, step=start,
+                        ckpt_every=args.ckpt_every, watchdog=wd,
+                        on_metrics=lambda m: print(f"[train] {m}"))
+        t0 = time.perf_counter()
+        result = runner.run_until(args.steps)
+    m = result["metrics"]
+    print(f"[train] {args.arch}: step {result['final_step']} "
+          f"loss={float(m['loss']):.4f} "
+          f"wall={time.perf_counter() - t0:.1f}s "
+          f"stragglers={len(wd.reports)}")
+
+
+if __name__ == "__main__":
+    main()

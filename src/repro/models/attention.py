@@ -1,0 +1,157 @@
+"""Attention: blocked flash attention with a custom O(S)-memory VJP
+(forward + backward both scan over KV blocks, recomputing scores — no
+[S, S] residual is ever stored), and flash-decode for serving.
+
+This is what lets train_4k fit: the naive autodiff of an online-softmax
+scan stores per-block probability residuals (= the full quadratic score
+matrix at backward time); the custom VJP stores only (out, LSE) rows.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def _repeat_kv(k: jnp.ndarray, n_rep: int) -> jnp.ndarray:
+    """[B, S, KV, dh] -> [B, S, KV * n_rep, dh] (GQA head sharing)."""
+    if n_rep == 1:
+        return k
+    b, s, h, d = k.shape
+    return jnp.broadcast_to(k[:, :, :, None, :], (b, s, h, n_rep, d)
+                            ).reshape(b, s, h * n_rep, d)
+
+
+def _blocked(x: jnp.ndarray, nb: int) -> jnp.ndarray:
+    """[B, S, H, dh] -> [nb, B, S/nb, H, dh]."""
+    b, s, h, d = x.shape
+    return x.reshape(b, nb, s // nb, h, d).transpose(1, 0, 2, 3, 4)
+
+
+def _fwd(q, k, v, causal: bool, block_kv: int):
+    b, sq, h, dh = q.shape
+    skv = k.shape[1]
+    nb = max(skv // block_kv, 1)
+    bkv = skv // nb
+    kb, vb = _blocked(k, nb), _blocked(v, nb)
+    scale = 1.0 / jnp.sqrt(jnp.float32(dh))
+    q32 = q.astype(jnp.float32)
+    q_pos = jnp.arange(sq)
+
+    def step(carry, blk):
+        acc, m, l = carry
+        kblk, vblk, bi = blk
+        s = jnp.einsum("bqhd,bkhd->bhqk", q32,
+                       kblk.astype(jnp.float32)) * scale
+        if causal:
+            k_pos = bi * bkv + jnp.arange(bkv)
+            s = jnp.where((q_pos[:, None] >= k_pos[None, :])[None, None],
+                          s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(-1))
+        p = jnp.exp(s - m_new[..., None])
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + p.sum(-1)
+        acc_new = acc * alpha[..., None] + jnp.einsum(
+            "bhqk,bkhd->bhqd", p, vblk.astype(jnp.float32))
+        return (acc_new, m_new, l_new), None
+
+    acc0 = jnp.zeros((b, h, sq, dh), jnp.float32)
+    m0 = jnp.full((b, h, sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, h, sq), jnp.float32)
+    (acc, m, l), _ = jax.lax.scan(step, (acc0, m0, l0),
+                                  (kb, vb, jnp.arange(nb)))
+    lse = m + jnp.log(jnp.maximum(l, 1e-30))                 # [B, H, Sq]
+    out = (acc / jnp.maximum(l[..., None], 1e-30))           # [B, H, Sq, dh]
+    return out.transpose(0, 2, 1, 3).astype(q.dtype), lse
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(3, 4))
+def _flash(q, k, v, causal: bool, block_kv: int):
+    return _fwd(q, k, v, causal, block_kv)[0]
+
+
+def _flash_fwd(q, k, v, causal, block_kv):
+    out, lse = _fwd(q, k, v, causal, block_kv)
+    return out, (q, k, v, out, lse)
+
+
+def _flash_bwd(causal, block_kv, res, dout):
+    q, k, v, out, lse = res
+    b, sq, h, dh = q.shape
+    skv = k.shape[1]
+    nb = max(skv // block_kv, 1)
+    bkv = skv // nb
+    kb, vb = _blocked(k, nb), _blocked(v, nb)
+    scale = 1.0 / jnp.sqrt(jnp.float32(dh))
+    q32 = q.astype(jnp.float32)
+    do = dout.astype(jnp.float32).transpose(0, 2, 1, 3)      # [B, H, Sq, dh]
+    o32 = out.astype(jnp.float32).transpose(0, 2, 1, 3)
+    delta = (do * o32).sum(-1)                               # [B, H, Sq]
+    q_pos = jnp.arange(sq)
+
+    def step(dq, blk):
+        kblk, vblk, bi = blk
+        s = jnp.einsum("bqhd,bkhd->bhqk", q32,
+                       kblk.astype(jnp.float32)) * scale
+        if causal:
+            k_pos = bi * bkv + jnp.arange(bkv)
+            s = jnp.where((q_pos[:, None] >= k_pos[None, :])[None, None],
+                          s, NEG_INF)
+        p = jnp.exp(s - lse[..., None])                      # [B, H, Sq, bkv]
+        dv_blk = jnp.einsum("bhqk,bhqd->bkhd", p, do)
+        dp = jnp.einsum("bhqd,bkhd->bhqk", do, vblk.astype(jnp.float32))
+        ds = p * (dp - delta[..., None]) * scale
+        dq = dq + jnp.einsum("bhqk,bkhd->bqhd", ds,
+                             kblk.astype(jnp.float32))
+        dk_blk = jnp.einsum("bhqk,bqhd->bkhd", ds, q32)
+        return dq, (dk_blk, dv_blk)
+
+    dq0 = jnp.zeros((b, sq, h, dh), jnp.float32)
+    dq, (dkb, dvb) = jax.lax.scan(step, dq0, (kb, vb, jnp.arange(nb)))
+    dk = dkb.transpose(1, 0, 2, 3, 4).reshape(b, skv, h, dh)
+    dv = dvb.transpose(1, 0, 2, 3, 4).reshape(b, skv, h, dh)
+    return dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype)
+
+
+_flash.defvjp(_flash_fwd, _flash_bwd)
+
+
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                    causal: bool = True, block_kv: int = 1024
+                    ) -> jnp.ndarray:
+    """q: [B, Sq, H, dh]; k, v: [B, Skv, KV, dh], H % KV == 0.
+    GQA gradient note: k/v are materially repeated to H heads; the repeat
+    is differentiated by XLA (broadcast -> reduce-sum), so dk/dv correctly
+    sum over the query-head group."""
+    n_rep = q.shape[2] // k.shape[2]
+    k = _repeat_kv(k, n_rep)
+    v = _repeat_kv(v, n_rep)
+    block_kv = min(block_kv, k.shape[1])
+    return _flash(q, k, v, causal, block_kv)
+
+
+def decode_attention(q: jnp.ndarray, k_cache: jnp.ndarray,
+                     v_cache: jnp.ndarray, cache_len: jnp.ndarray
+                     ) -> jnp.ndarray:
+    """One-token attention against a (possibly seq-sharded) KV cache.
+
+    q: [B, 1, H, dh];  caches: [B, S, KV, dh];  cache_len: [] int32.
+    Written as plain einsum + masked softmax: with the cache's S dim
+    sharded over "model", XLA lowers the max/sum reductions into the
+    flash-decode partial-softmax combine (one all-reduce each).
+    """
+    b, _, h, dh = q.shape
+    n_rep = h // k_cache.shape[2]
+    k = _repeat_kv(k_cache, n_rep).astype(jnp.float32)
+    v = _repeat_kv(v_cache, n_rep).astype(jnp.float32)
+    scale = 1.0 / jnp.sqrt(jnp.float32(dh))
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32), k) * scale
+    mask = jnp.arange(k.shape[1]) < cache_len
+    s = jnp.where(mask[None, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", p, v)
+    return out.astype(q.dtype)

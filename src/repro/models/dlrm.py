@@ -1,0 +1,138 @@
+"""DLRM (MLPerf config): bottom MLP -> EmbeddingBag lookups -> dot-product
+feature interaction -> top MLP.
+
+JAX has no EmbeddingBag or CSR sparse: the lookup is built from
+``jnp.take`` + bag reduction (and the Pallas kernel in
+``repro/kernels/embedding_bag.py`` is the TPU-fused form of the same op —
+the XLA path here is what the dry-run lowers, the kernel is benchmarked
+against it).
+
+Sharding: all 26 tables are concatenated into ONE [R_total, D] array and
+row-sharded over the flattened ("data","model") axes — the standard
+hash-bucket row sharding.  Lookups become a sharded gather (XLA emits the
+collective); batch is data-parallel.
+
+The paper's technique hooks in here: ``repro.apps.placement`` builds a
+row-co-access hypergraph and IMPart produces a locality-aware row
+placement to replace the hash placement (§Perf).
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import DLRMConfig
+from .layers import mlp_params, mlp_apply, dtype_of
+
+from .layers import constrain as CONSTRAIN
+
+
+def table_offsets(cfg: DLRMConfig) -> np.ndarray:
+    return np.concatenate([[0], np.cumsum(cfg.table_sizes)]).astype(np.int64)
+
+
+def padded_total_rows(cfg: DLRMConfig, mult: int = 512) -> int:
+    t = cfg.total_rows
+    return ((t + mult - 1) // mult) * mult
+
+
+def init_params(cfg: DLRMConfig, key: jax.Array) -> Dict:
+    dt = dtype_of(cfg.dtype)
+    ks = jax.random.split(key, 4)
+    bot = (cfg.n_dense,) + cfg.bot_mlp
+    n_feat = cfg.n_sparse + 1
+    inter_dim = (n_feat * (n_feat - 1)) // 2 + cfg.bot_mlp[-1] \
+        if cfg.interaction == "dot" else n_feat * cfg.embed_dim
+    top = (inter_dim,) + cfg.top_mlp
+    return {
+        "tables": jax.random.normal(
+            ks[0], (padded_total_rows(cfg), cfg.embed_dim), jnp.float32
+        ).astype(dt) * 0.01,
+        "bot": mlp_params(ks[1], bot, dt, prefix="bot"),
+        "top": mlp_params(ks[2], top, dt, prefix="top"),
+    }
+
+
+def param_specs(cfg: DLRMConfig, dp: Tuple[str, ...]) -> Dict:
+    dummy = jax.eval_shape(lambda k: init_params(cfg, k),
+                           jax.random.PRNGKey(0))
+    specs = jax.tree.map(lambda x: P(), dummy)
+    specs["tables"] = P((*dp, "model"), None)   # row-sharded everywhere
+    return specs
+
+
+def _interact(dense_emb: jnp.ndarray, sparse_emb: jnp.ndarray,
+              interaction: str) -> jnp.ndarray:
+    """dense_emb [B, D]; sparse_emb [B, S, D] -> interaction features."""
+    feats = jnp.concatenate([dense_emb[:, None, :], sparse_emb], axis=1)
+    if interaction == "dot":
+        z = jnp.einsum("bid,bjd->bij", feats, feats)
+        n = feats.shape[1]
+        iu, ju = jnp.triu_indices(n, k=1)
+        flat = z[:, iu, ju]                         # [B, n(n-1)/2]
+        return jnp.concatenate([dense_emb, flat], axis=-1)
+    return feats.reshape(feats.shape[0], -1)
+
+
+def forward(params: Dict, batch: Dict, cfg: DLRMConfig,
+            dp: Tuple[str, ...] = ("data",)) -> jnp.ndarray:
+    """batch: dense [B, n_dense] f32, sparse_idx [B, n_sparse] int32
+    (already offset into the concatenated table).  Returns logits [B]."""
+    dense = batch["dense"]
+    idx = batch["sparse_idx"]
+    dense_emb = mlp_apply(params["bot"], dense, len(cfg.bot_mlp),
+                          prefix="bot", final_act=True)
+    rows = jnp.take(params["tables"], idx, axis=0)   # [B, S, D] sharded gather
+    rows = CONSTRAIN(rows, P(dp, None, None))
+    feats = _interact(dense_emb, rows, cfg.interaction)
+    logits = mlp_apply(params["top"], feats, len(cfg.top_mlp), prefix="top")
+    return logits[..., 0]
+
+
+def _bce(logits, labels):
+    y = labels.astype(jnp.float32)
+    z = logits.astype(jnp.float32)
+    return jnp.mean(jnp.maximum(z, 0) - z * y + jnp.log1p(jnp.exp(-jnp.abs(z))))
+
+
+def loss_fn(params: Dict, batch: Dict, cfg: DLRMConfig,
+            dp: Tuple[str, ...] = ("data",)) -> jnp.ndarray:
+    logits = forward(params, batch, cfg, dp)
+    return _bce(logits, batch["labels"])
+
+
+def loss_from_rows(other_params: Dict, rows: jnp.ndarray, batch: Dict,
+                   cfg: DLRMConfig, dp: Tuple[str, ...] = ("data",)
+                   ) -> jnp.ndarray:
+    """Loss with the gathered embedding rows as an EXPLICIT argument, so
+    autodiff yields a [B, S, D] row gradient instead of a dense
+    [188M, D] table gradient — the enabler for the sparse
+    (touched-rows-only) optimizer update (§Roofline: the dense AdamW
+    sweep over every row dominates the DLRM train cell)."""
+    dense_emb = mlp_apply(other_params["bot"], batch["dense"],
+                          len(cfg.bot_mlp), prefix="bot", final_act=True)
+    feats = _interact(dense_emb, rows, cfg.interaction)
+    logits = mlp_apply(other_params["top"], feats, len(cfg.top_mlp),
+                       prefix="top")[..., 0]
+    return _bce(logits, batch["labels"])
+
+
+def retrieval_scores(params: Dict, batch: Dict, cfg: DLRMConfig,
+                     dp: Tuple[str, ...] = ("data",)) -> jnp.ndarray:
+    """retrieval_cand: score ONE query against n_candidates items with a
+    batched two-tower dot product (no per-candidate MLP loop).
+
+    batch: dense [1, n_dense], sparse_idx [1, n_sparse],
+           cand_idx [n_cand] int32 rows into the item table.
+    """
+    dense_emb = mlp_apply(params["bot"], batch["dense"], len(cfg.bot_mlp),
+                          prefix="bot", final_act=True)        # [1, D]
+    user_rows = jnp.take(params["tables"], batch["sparse_idx"], axis=0)
+    user_vec = dense_emb + user_rows.sum(axis=1)               # [1, D]
+    cand = jnp.take(params["tables"], batch["cand_idx"], axis=0)  # [C, D]
+    cand = CONSTRAIN(cand, P((*dp, "model"), None))
+    return (cand @ user_vec[0]).astype(jnp.float32)            # [C]

@@ -1,0 +1,281 @@
+"""Transformer LM: GQA + RoPE + SwiGLU (+ optional MoE), layers stacked
+and scanned (compact HLO, fast 512-device compiles), remat per layer,
+Megatron-style sequence-parallel residual stream.
+
+Functional API (used by train/serve steps and the dry-run):
+  init_params(cfg, key)            -> params pytree (or eval_shape for SDS)
+  param_specs(cfg, dp_axes)        -> matching PartitionSpec pytree
+  loss_fn(params, batch, cfg)      -> scalar CE loss
+  init_cache / cache_specs         -> decode KV cache
+  decode_step(params, cache, toks, pos, cfg) -> (logits, cache)
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import LMConfig
+from .layers import (rms_norm, init_dense, apply_rope, cross_entropy,
+                     dtype_of, with_grad_sharding)
+from .attention import flash_attention, decode_attention
+from .moe import moe_ffn, moe_ffn_grouped
+
+from .layers import constrain as CONSTRAIN
+
+
+# --------------------------------------------------------------------------
+# parameters
+# --------------------------------------------------------------------------
+def init_params(cfg: LMConfig, key: jax.Array) -> Dict:
+    dt = dtype_of(cfg.dtype)
+    l, d, f, v = cfg.n_layers, cfg.d_model, cfg.d_ff, cfg.vocab
+    hq = cfg.n_heads * cfg.d_head
+    hkv = cfg.n_kv_heads * cfg.d_head
+    ks = jax.random.split(key, 12)
+    layers = {
+        "ln1": jnp.ones((l, d), dt),
+        "ln2": jnp.ones((l, d), dt),
+        # fused QKV: one dot, one backward cotangent (§Perf B it.2)
+        "wqkv": init_dense(ks[0], (l, d, hq + 2 * hkv), dt),
+        "wo": init_dense(ks[3], (l, hq, d), dt),
+    }
+    if cfg.moe_experts:
+        e = cfg.moe_experts
+        layers.update({
+            "router": init_dense(ks[4], (l, d, e), jnp.float32),
+            "we1": init_dense(ks[5], (l, e, d, f), dt),
+            "we3": init_dense(ks[6], (l, e, d, f), dt),
+            "we2": init_dense(ks[7], (l, e, f, d), dt),
+        })
+    else:
+        layers.update({
+            # fused up|gate projection (§Perf B it.2)
+            "w13": init_dense(ks[5], (l, d, 2 * f), dt),
+            "w2": init_dense(ks[7], (l, f, d), dt),
+        })
+    return {
+        "embed": init_dense(ks[8], (v, d), dt, scale=1.0),
+        "lm_head": init_dense(ks[9], (d, v), dt),
+        "final_norm": jnp.ones((d,), dt),
+        "layers": layers,
+    }
+
+
+def param_specs(cfg: LMConfig, dp: Tuple[str, ...]) -> Dict:
+    """PartitionSpecs: FSDP over `dp` (ZeRO-3 weight sharding) + TP over
+    "model" (heads / d_ff / vocab); MoE experts over "model" when the
+    expert count divides it (EP), else TP inside each expert."""
+    tp = "model"
+    layers = {
+        "ln1": P(None, None),
+        "ln2": P(None, None),
+        "wqkv": P(None, dp, tp),
+        "wo": P(None, tp, dp),
+    }
+    if cfg.moe_experts:
+        expert_parallel = cfg.moe_experts % 16 == 0
+        if expert_parallel:
+            ew1, ew2 = P(None, tp, dp, None), P(None, tp, None, dp)
+        else:
+            ew1, ew2 = P(None, None, dp, tp), P(None, None, tp, dp)
+        layers.update({
+            "router": P(None, dp, None),
+            "we1": ew1, "we3": ew1, "we2": ew2,
+        })
+    else:
+        layers.update({
+            "w13": P(None, dp, tp),
+            "w2": P(None, tp, dp),
+        })
+    return {
+        "embed": P(tp, dp),
+        "lm_head": P(dp, tp),
+        "final_norm": P(None),
+        "layers": layers,
+    }
+
+
+# --------------------------------------------------------------------------
+# one transformer block (operates on [B, S, D])
+# --------------------------------------------------------------------------
+def layer_slice_specs(cfg: LMConfig, dp: Tuple[str, ...]) -> Dict:
+    """Per-layer weight-slice specs (= param_specs minus the stacked L
+    dim), used for backward grad-sharding annotations."""
+    full = param_specs(cfg, dp)["layers"]
+    return {k: P(*v[1:]) for k, v in full.items()}
+
+
+def _block(x: jnp.ndarray, lp: Dict, cfg: LMConfig, dp: Tuple[str, ...],
+           positions: jnp.ndarray, moe_groups: int
+           ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    b, s, d = x.shape
+    sp = cfg.sequence_parallel
+    # annotate weight slices: cotangents reduce-scatter onto the FSDP
+    # shard in the grad dtype instead of all-reducing in f32 (§Perf B)
+    gdt = dtype_of(cfg.grad_accum_dtype)
+    lspecs = layer_slice_specs(cfg, dp)
+    # pin the forward sharding of every weight slice (keeps the TP dim
+    # sharded through the remat-replayed backward dots) AND annotate the
+    # cotangent (reduce-scatter onto the FSDP shard, grad dtype)
+    lp = {k: (with_grad_sharding(CONSTRAIN(v, lspecs[k]), lspecs[k], gdt)
+              if k in lspecs else v) for k, v in lp.items()}
+    # residual stream is sequence-sharded over "model" (SP)
+    hq_d = cfg.n_heads * cfg.d_head
+    hkv_d = cfg.n_kv_heads * cfg.d_head
+    adt = dtype_of(cfg.dtype)
+    h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+    if sp:
+        h = CONSTRAIN(h, P(dp, None, None))  # all-gather seq for attention
+        # cotangent of the gathered stream reduce-scatters back to SP in
+        # the activation dtype (not f32) — §Perf B it.2
+        h = with_grad_sharding(h, P(dp, "model", None), adt)
+    qkv = h @ lp["wqkv"]
+    q = qkv[..., :hq_d].reshape(b, s, cfg.n_heads, cfg.d_head)
+    k = qkv[..., hq_d:hq_d + hkv_d].reshape(b, s, cfg.n_kv_heads,
+                                            cfg.d_head)
+    v = qkv[..., hq_d + hkv_d:].reshape(b, s, cfg.n_kv_heads, cfg.d_head)
+    q = CONSTRAIN(q, P(dp, None, "model", None))  # TP over heads
+    k = apply_rope(k, positions, cfg.rope_theta)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    attn = flash_attention(q, k, v, causal=True)
+    attn = attn.reshape(b, s, cfg.n_heads * cfg.d_head)
+    o = attn @ lp["wo"]
+    if sp:
+        o = CONSTRAIN(o, P(dp, "model", None))  # reduce-scatter back to SP
+    x = x + o
+
+    h = rms_norm(x, lp["ln2"], cfg.norm_eps)
+    # NOTE (§Perf B it.5): the MLP stays sequence-sharded — gathering h
+    # here (tried in it.2) made XLA compute weight grads fully
+    # replicated: 16x redundant dgrad FLOPs + 8.9 TB/dev of gathers.
+    if cfg.moe_experts:
+        t = b * s
+        g = min(moe_groups, t)
+        tok = h.reshape(g, t // g, d)
+        all_axes = (*dp, "model")
+        tok = CONSTRAIN(tok, P(all_axes, None, None))
+        out, aux = moe_ffn_grouped(
+            tok, lp["router"], lp["we1"], lp["we3"], lp["we2"],
+            cfg.moe_top_k, cfg.capacity_factor,
+            xe_spec=None,   # measured: explicit a2a constraint regressed
+            group_spec=P(all_axes, None, None, None))
+        mlp_out = out.reshape(b, s, d)
+        aux_loss = aux
+    else:
+        up_gate = h @ lp["w13"]
+        up, gate = jnp.split(up_gate, 2, axis=-1)
+        mlp_out = (jax.nn.silu(gate) * up) @ lp["w2"]
+        aux_loss = jnp.float32(0.0)
+    if sp:
+        mlp_out = CONSTRAIN(mlp_out, P(dp, "model", None))
+    return x + mlp_out, aux_loss
+
+
+def _forward(params: Dict, tokens: jnp.ndarray, cfg: LMConfig,
+             dp: Tuple[str, ...], moe_groups: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """tokens [B, S] -> logits [B, S, V] (+ MoE aux loss)."""
+    b, s = tokens.shape
+    x = jnp.take(params["embed"], tokens, axis=0)
+    if cfg.sequence_parallel:
+        x = CONSTRAIN(x, P(dp, "model", None))
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+
+    def layer(x, lp):
+        return _block(x, lp, cfg, dp, positions, moe_groups)
+
+    layer_fn = jax.checkpoint(layer) if cfg.remat else layer
+    x, aux = jax.lax.scan(layer_fn, x, params["layers"])
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = x @ params["lm_head"]
+    logits = CONSTRAIN(logits, P(dp, None, "model"))
+    return logits, aux.sum()
+
+
+def loss_fn(params: Dict, batch: Dict, cfg: LMConfig,
+            dp: Tuple[str, ...] = ("data",), moe_groups: int = 256
+            ) -> jnp.ndarray:
+    logits, aux = _forward(params, batch["tokens"], cfg, dp, moe_groups)
+    ce = cross_entropy(logits, batch["labels"],
+                       batch.get("mask"))
+    return ce + aux
+
+
+# --------------------------------------------------------------------------
+# serving
+# --------------------------------------------------------------------------
+def prefill_logits(params: Dict, tokens: jnp.ndarray, cfg: LMConfig,
+                   dp: Tuple[str, ...] = ("data",), moe_groups: int = 256
+                   ) -> jnp.ndarray:
+    logits, _ = _forward(params, tokens, cfg, dp, moe_groups)
+    return logits
+
+
+def init_cache(cfg: LMConfig, batch: int, max_seq: int) -> Dict:
+    dt = dtype_of(cfg.dtype)
+    shape = (cfg.n_layers, batch, max_seq, cfg.n_kv_heads, cfg.d_head)
+    return {"k": jnp.zeros(shape, dt), "v": jnp.zeros(shape, dt)}
+
+
+def cache_specs(cfg: LMConfig, dp: Tuple[str, ...], batch: int) -> Dict:
+    # batch over dp when it divides; KV-cache sequence over "model"
+    # (flash-decode partial-softmax combine)
+    bspec = dp if batch >= 16 else None
+    s = P(None, bspec, "model", None, None)
+    return {"k": s, "v": s}
+
+
+def decode_step(params: Dict, cache: Dict, tokens: jnp.ndarray,
+                pos: jnp.ndarray, cfg: LMConfig,
+                dp: Tuple[str, ...] = ("data",)) -> Tuple[jnp.ndarray, Dict]:
+    """One greedy decode step.  tokens [B, 1]; pos [] int32 = current
+    length (uniform across the batch — standard static-batch serving)."""
+    b = tokens.shape[0]
+    x = jnp.take(params["embed"], tokens, axis=0)       # [B, 1, D]
+    positions = jnp.full((b, 1), pos, jnp.int32)
+
+    def layer(x, carry):
+        lp, kc, vc = carry
+        h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+        hq_d = cfg.n_heads * cfg.d_head
+        hkv_d = cfg.n_kv_heads * cfg.d_head
+        qkv = h @ lp["wqkv"]
+        q = qkv[..., :hq_d].reshape(b, 1, cfg.n_heads, cfg.d_head)
+        k = qkv[..., hq_d:hq_d + hkv_d].reshape(b, 1, cfg.n_kv_heads,
+                                                cfg.d_head)
+        v = qkv[..., hq_d + hkv_d:].reshape(b, 1, cfg.n_kv_heads,
+                                            cfg.d_head)
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+        kc = jax.lax.dynamic_update_slice(kc, k.astype(kc.dtype),
+                                          (0, pos, 0, 0))
+        vc = jax.lax.dynamic_update_slice(vc, v.astype(vc.dtype),
+                                          (0, pos, 0, 0))
+        attn = decode_attention(q, kc, vc, pos + 1)
+        o = attn.reshape(b, 1, cfg.n_heads * cfg.d_head) @ lp["wo"]
+        x = x + o
+        h = rms_norm(x, lp["ln2"], cfg.norm_eps)
+        if cfg.moe_experts:
+            tok = h.reshape(b, -1)
+            out, _ = moe_ffn(tok, lp["router"], lp["we1"], lp["we3"],
+                             lp["we2"], cfg.moe_top_k, cfg.capacity_factor)
+            mlp_out = out.reshape(b, 1, -1)
+        else:
+            up, gate = jnp.split(h @ lp["w13"], 2, axis=-1)
+            mlp_out = (jax.nn.silu(gate) * up) @ lp["w2"]
+        return x + mlp_out, (kc, vc)
+
+    def scan_body(x, xs):
+        lp, kc, vc = xs
+        x, (kc, vc) = layer(x, (lp, kc, vc))
+        return x, (kc, vc)
+
+    x, (new_k, new_v) = jax.lax.scan(
+        scan_body, x, (params["layers"], cache["k"], cache["v"]))
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = x @ params["lm_head"]
+    return logits, {"k": new_k, "v": new_v}

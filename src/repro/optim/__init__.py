@@ -1,0 +1,2 @@
+from . import adamw, schedule, compression
+from .adamw import AdamWConfig, QTensor

@@ -1,0 +1,56 @@
+"""Gradient / collective compression with error feedback.
+
+Two distributed-optimization tricks for the cross-pod (DCN) hop, where
+bandwidth is ~10x scarcer than ICI:
+
+* ``quantized_psum``   — int8 block-quantised all-reduce: cast to int8
+  with per-block scales, psum the int32 accumulators, dequantise.  4x
+  fewer bytes on the wire than fp32 (scales are amortised).
+* ``topk_compress``    — top-k magnitude sparsification with local error
+  feedback (the residual is re-added next step), for gradient exchange.
+
+Both are used inside shard_map'd reduction stages (the GNN full-batch
+aggregation and the optional two-stage LM gradient reduction).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def quantized_psum(x: jnp.ndarray, axis_name: str, block: int = 256
+                   ) -> jnp.ndarray:
+    """int8-on-the-wire all-reduce (called inside shard_map)."""
+    orig_shape = x.shape
+    orig_dtype = x.dtype
+    flat = x.astype(jnp.float32).reshape(-1)
+    pad = (-flat.shape[0]) % block
+    flat = jnp.pad(flat, (0, pad))
+    blk = flat.reshape(-1, block)
+    scale = jnp.max(jnp.abs(blk), axis=-1) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(blk / scale[:, None]), -127, 127
+                 ).astype(jnp.int8)
+    # wire format: int8 payload + f32 scales; accumulate exactly in int32
+    q_sum = jax.lax.psum(q.astype(jnp.int32), axis_name)
+    s_max = jax.lax.pmax(scale, axis_name)  # shared dequant scale bound
+    out = q_sum.astype(jnp.float32) * s_max[:, None]
+    n = 1
+    for s in orig_shape:
+        n *= s
+    return out.reshape(-1)[:n].reshape(orig_shape).astype(orig_dtype)
+
+
+def topk_compress(g: jnp.ndarray, residual: jnp.ndarray, frac: float = 0.01
+                  ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Error-feedback top-k: returns (sparse grad to exchange, new
+    residual).  ``frac`` is the kept fraction."""
+    acc = g.astype(jnp.float32) + residual
+    flat = acc.reshape(-1)
+    k = max(int(frac * flat.shape[0]), 1)
+    thresh = jax.lax.top_k(jnp.abs(flat), k)[0][-1]
+    mask = jnp.abs(flat) >= thresh
+    kept = jnp.where(mask, flat, 0.0).reshape(acc.shape)
+    new_residual = acc - kept
+    return kept.astype(g.dtype), new_residual

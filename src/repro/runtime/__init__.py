@@ -1,0 +1,2 @@
+from .elastic import (ElasticTrainer, Runner, FailureInjector, NodeFailure,
+                      StragglerWatchdog)

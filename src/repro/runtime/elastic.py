@@ -1,0 +1,147 @@
+"""Elastic runtime: fault detection, mesh rebuild, straggler mitigation.
+
+On a real multi-pod deployment these hooks wrap the cluster scheduler
+(GKE/Borg): heartbeats come from the coordination service, and a failed
+pod triggers a restart with a smaller ``--pods`` value.  Everything here
+is runnable on this container (failures are *injected*), and the tests
+exercise the full kill -> rebuild -> restore -> continue path.
+
+Design points for 1000+ nodes (see DESIGN.md):
+  * state is always restorable onto a DIFFERENT mesh (CheckpointManager
+    re-shards on load) — elasticity = restart with new topology;
+  * the data pipeline cursor lives in the checkpoint manifest, so resume
+    is exactly-once w.r.t. the batch stream;
+  * straggler mitigation: per-step deadline watchdog; persistent
+    stragglers are reported for exclusion (on TPU pods a slow chip slows
+    the whole program — the remedy is remove-and-restart, not async);
+  * the IMPart population is failure-TOLERANT by construction: losing a
+    pod loses population members, not the search — the ring re-closes
+    over the survivors (population.make_population_step over the new,
+    smaller mesh).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, List, Optional
+
+import numpy as np
+
+
+class FailureInjector:
+    """Deterministic failure schedule for tests/examples."""
+
+    def __init__(self, fail_at_steps: Dict[int, str] | None = None):
+        self.fail_at_steps = fail_at_steps or {}
+
+    def check(self, step: int):
+        if step in self.fail_at_steps:
+            kind = self.fail_at_steps.pop(step)
+            raise NodeFailure(f"injected {kind} failure at step {step}")
+
+
+class NodeFailure(RuntimeError):
+    pass
+
+
+@dataclasses.dataclass
+class StragglerReport:
+    step: int
+    step_time: float
+    deadline: float
+
+
+class StragglerWatchdog:
+    """Flags steps that exceed ``factor`` x the trailing-median step time.
+
+    On real pods the offending host is identified via per-host timing
+    telemetry; here we surface the event so the driver can checkpoint +
+    request a shrunk mesh (mirror of the production remediation).
+    """
+
+    def __init__(self, factor: float = 3.0, window: int = 16,
+                 grace_steps: int = 4):
+        self.factor = factor
+        self.window = window
+        self.grace = grace_steps
+        self.times: List[float] = []
+        self.reports: List[StragglerReport] = []
+
+    def observe(self, step: int, step_time: float) -> Optional[StragglerReport]:
+        self.times.append(step_time)
+        if len(self.times) <= self.grace:
+            return None
+        med = float(np.median(self.times[-self.window:]))
+        if step_time > self.factor * med:
+            rep = StragglerReport(step=step, step_time=step_time,
+                                  deadline=self.factor * med)
+            self.reports.append(rep)
+            return rep
+        return None
+
+
+class ElasticTrainer:
+    """Restart loop: run -> on failure, rebuild mesh (possibly smaller)
+    -> restore latest checkpoint -> continue.  ``make_runner`` builds a
+    fresh (step_fn, state, start_step) for a given attempt — in
+    production this re-initialises jax.distributed on the surviving
+    hosts."""
+
+    def __init__(self, make_runner: Callable[[int], "Runner"],
+                 max_restarts: int = 3):
+        self.make_runner = make_runner
+        self.max_restarts = max_restarts
+        self.restarts = 0
+
+    def run(self, total_steps: int) -> dict:
+        attempt = 0
+        history = []
+        while True:
+            runner = self.make_runner(attempt)
+            try:
+                result = runner.run_until(total_steps)
+                result["restarts"] = self.restarts
+                result["history"] = history
+                return result
+            except NodeFailure as e:
+                self.restarts += 1
+                history.append((runner.step, str(e)))
+                if self.restarts > self.max_restarts:
+                    raise
+                attempt += 1
+
+
+@dataclasses.dataclass
+class Runner:
+    """One attempt: owns step_fn + state + data cursor."""
+    step_fn: Callable
+    state: object
+    next_batch: Callable[[int], dict]
+    ckpt: object                       # CheckpointManager
+    step: int = 0
+    ckpt_every: int = 10
+    injector: Optional[FailureInjector] = None
+    watchdog: Optional[StragglerWatchdog] = None
+    on_metrics: Optional[Callable] = None
+
+    def run_until(self, total_steps: int) -> dict:
+        metrics = None
+        while self.step < total_steps:
+            if self.injector:
+                self.injector.check(self.step)
+            t0 = time.perf_counter()
+            batch = self.next_batch(self.step)
+            self.state, metrics = self.step_fn(self.state, batch)
+            dt = time.perf_counter() - t0
+            if self.watchdog:
+                rep = self.watchdog.observe(self.step, dt)
+                if rep and self.on_metrics:
+                    self.on_metrics({"straggler": dataclasses.asdict(rep)})
+            self.step += 1
+            if self.step % self.ckpt_every == 0:
+                self.ckpt.save(self.step, self.state,
+                               extra={"data_cursor": self.step})
+        self.ckpt.save(self.step, self.state,
+                       extra={"data_cursor": self.step})
+        return {"state": self.state, "metrics": metrics,
+                "final_step": self.step}

@@ -1,0 +1,1 @@
+from .decode_loop import ServeSession

@@ -1,0 +1,72 @@
+"""Serving driver: prefill + greedy decode loop over the static-batch
+KV cache (the loop the decode_32k / long_500k dry-run cells lower one
+step of).
+
+Production notes (1000+ chips): the step function is the dry-run's
+``lm_decode_cell`` — params sharded (dp × model), cache sequence dim over
+"model", cache donated every step (no reallocation).  Continuous
+batching slots in by re-running prefill for finished rows; kept simple
+here (static batch, greedy).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import LMConfig
+from repro.models import transformer
+
+
+@dataclasses.dataclass
+class ServeSession:
+    cfg: LMConfig
+    params: dict
+    max_seq: int
+    batch: int
+    _decode = None
+    _prefill = None
+
+    def __post_init__(self):
+        cfg = self.cfg
+
+        def decode(params, cache, tokens, pos):
+            return transformer.decode_step(params, cache, tokens, pos, cfg)
+
+        self._decode = jax.jit(decode, donate_argnums=(1,))
+        self._prefill = jax.jit(
+            lambda p, t: transformer.prefill_logits(
+                p, t, dataclasses.replace(cfg, remat=False)))
+
+    def generate(self, prompt: jnp.ndarray, steps: int,
+                 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        """prompt [B, S0] -> (generated [B, steps], last logits)."""
+        b, s0 = prompt.shape
+        assert b == self.batch and s0 + steps <= self.max_seq
+        cache = transformer.init_cache(self.cfg, b, self.max_seq)
+
+        # prefill: run the prompt through decode steps to fill the cache
+        # (correct and simple; a fused prefill kernel writes the cache in
+        # one pass on real deployments)
+        logits = None
+        for i in range(s0):
+            logits, cache = self._decode(
+                self.params, cache, prompt[:, i:i + 1], jnp.int32(i))
+        out = []
+        tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+        for i in range(steps):
+            out.append(tok)
+            logits, cache = self._decode(
+                self.params, cache, tok, jnp.int32(s0 + i))
+            tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+        return jnp.concatenate(out, axis=1), logits
+
+    def score(self, tokens: jnp.ndarray) -> jnp.ndarray:
+        """Teacher-forced log-probs via prefill (batch scoring path)."""
+        logits = self._prefill(self.params, tokens)
+        logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+        gold = jnp.take_along_axis(
+            logp[:, :-1], tokens[:, 1:, None], axis=-1)[..., 0]
+        return gold.sum(-1)

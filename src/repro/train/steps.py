@@ -1,0 +1,527 @@
+"""Step builders: for every (architecture x input shape) cell this module
+produces the jit-able step function plus abstract inputs (ShapeDtypeStruct
+pytrees) and their shardings — consumed by the training loop, the serving
+loop, and the multi-pod dry-run (which lowers them without allocating).
+
+Builder contract:
+    build(arch_spec, shape, mesh, multi_pod) -> Cell
+        Cell.fn          step function (state/batch signature per kind)
+        Cell.args_sds    tuple of abstract args (SDS pytrees)
+        Cell.in_shardings / out_shardings
+        Cell.donate      arg indices to donate (KV cache, train state)
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchSpec, LMConfig, GNNConfig, DLRMConfig, \
+    ShapeSpec
+from repro.models import transformer, gnn, dlrm
+from repro.models.layers import dtype_of
+from repro.optim import adamw
+from repro.optim.schedule import cosine_with_warmup
+
+
+@dataclasses.dataclass
+class Cell:
+    arch_id: str
+    shape_name: str
+    kind: str
+    fn: Callable
+    args_sds: Tuple
+    in_specs: Tuple            # PartitionSpec pytrees matching args
+    out_specs: Any
+    donate: Tuple[int, ...] = ()
+    static: Dict[str, Any] = dataclasses.field(default_factory=dict)
+
+    def shardings(self, mesh):
+        to_s = lambda spec: jax.tree.map(
+            lambda p: NamedSharding(mesh, p), spec,
+            is_leaf=lambda x: isinstance(x, P))
+        return to_s(self.in_specs), to_s(self.out_specs)
+
+    def lower(self, mesh):
+        in_sh, out_sh = self.shardings(mesh)
+        jitted = jax.jit(self.fn, in_shardings=in_sh, out_shardings=out_sh,
+                         donate_argnums=self.donate)
+        with jax.set_mesh(mesh):
+            return jitted.lower(*self.args_sds)
+
+
+def dp_axes(multi_pod: bool) -> Tuple[str, ...]:
+    return ("pod", "data") if multi_pod else ("data",)
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def _opt_specs(param_specs, quantized: bool,
+               flat_axes: Tuple[str, ...] = ()):
+    """Optimizer moment specs mirror the param specs (ZeRO sharding).
+
+    Quantized moments have a [Nb, block] layout unrelated to the param
+    shape; a single PartitionSpec at the QTensor node acts as a pytree
+    PREFIX (shards dim 0 of both q and scale over every mesh axis)."""
+    def per_param(spec):
+        if quantized:
+            return P(flat_axes)
+        return spec
+    moments = jax.tree.map(per_param, param_specs,
+                           is_leaf=lambda x: isinstance(x, P))
+    return {"m": moments, "v": moments, "step": P()}
+
+
+def _opt_state_sds(params_sds, cfg: adamw.AdamWConfig):
+    return jax.eval_shape(partial(adamw.init, cfg=cfg), params_sds)
+
+
+# ==========================================================================
+# LM family
+# ==========================================================================
+def lm_train_cell(spec: ArchSpec, shape: ShapeSpec, multi_pod: bool,
+                  opt_cfg: adamw.AdamWConfig, n_devices: int) -> Cell:
+    cfg: LMConfig = spec.config
+    p = shape.p()
+    b, s = int(p["global_batch"]), int(p["seq_len"])
+    dp = dp_axes(multi_pod)
+    mb = cfg.microbatches
+
+    params_sds = jax.eval_shape(
+        partial(transformer.init_params, cfg), jax.random.PRNGKey(0))
+    pspecs = transformer.param_specs(cfg, dp)
+    opt_sds = _opt_state_sds(params_sds, opt_cfg)
+    ospecs = _opt_specs(pspecs, opt_cfg.quantize_moments,
+                        flat_axes=(*dp, "model"))
+    state_sds = {"params": params_sds, "opt": opt_sds}
+    state_specs = {"params": pspecs, "opt": ospecs}
+
+    batch_sds = {"tokens": _sds((b, s), jnp.int32),
+                 "labels": _sds((b, s), jnp.int32)}
+    batch_specs = {"tokens": P(dp, None), "labels": P(dp, None)}
+    moe_groups = max(n_devices, 1)
+
+    from repro.models.layers import dtype_of as _dt
+    g_dtype = _dt(cfg.grad_accum_dtype)
+
+    def train_step(state, batch):
+        def loss_mb(params, mb_batch):
+            return transformer.loss_fn(params, mb_batch, cfg, dp=dp,
+                                       moe_groups=moe_groups)
+
+        def accum(carry, mb_batch):
+            g_acc, l_acc = carry
+            l, g = jax.value_and_grad(loss_mb)(state["params"], mb_batch)
+            # pin per-microbatch grads to the FSDP param sharding so the
+            # backward emits reduce-scatters (not full all-reduces) and
+            # the accumulator stays sharded across the scan (§Perf B)
+            from repro.models.layers import constrain
+            g = jax.tree.map(
+                lambda gi, sp: constrain(gi.astype(g_dtype), sp),
+                g, pspecs, is_leaf=lambda x: hasattr(x, "dtype"))
+            g = jax.tree.map(lambda a, b_: a + b_, g_acc, g)
+            return (g, l_acc + l), None
+
+        mb_batches = jax.tree.map(
+            lambda x: x.reshape(mb, b // mb, *x.shape[1:]), batch)
+        from repro.models.layers import constrain as _con
+        g0 = jax.tree.map(
+            lambda x, sp: _con(jnp.zeros(x.shape, g_dtype), sp),
+            state["params"], pspecs, is_leaf=lambda x: hasattr(x, "dtype"))
+        (grads, loss), _ = jax.lax.scan(accum, (g0, 0.0), mb_batches)
+        grads = jax.tree.map(lambda g: g / mb, grads)
+        lr_scale = cosine_with_warmup(state["opt"]["step"])
+        new_params, new_opt, om = adamw.update(
+            grads, state["opt"], state["params"], opt_cfg, lr_scale)
+        return {"params": new_params, "opt": new_opt}, \
+            {"loss": loss / mb, **om}
+
+    return Cell(
+        arch_id=spec.arch_id, shape_name=shape.name, kind="train",
+        fn=train_step,
+        args_sds=(state_sds, batch_sds),
+        in_specs=(state_specs, batch_specs),
+        out_specs=(state_specs, {"loss": P(), "grad_norm": P(), "lr": P()}),
+        donate=(0,),
+        static={"trips": [mb, cfg.n_layers, max(s // 1024, 1)]},
+    )
+
+
+def lm_prefill_cell(spec: ArchSpec, shape: ShapeSpec, multi_pod: bool,
+                    n_devices: int) -> Cell:
+    cfg: LMConfig = spec.config
+    p = shape.p()
+    b, s = int(p["global_batch"]), int(p["seq_len"])
+    dp = dp_axes(multi_pod)
+    # serving params: fully sharded over (dp, model) like training
+    params_sds = jax.eval_shape(
+        partial(transformer.init_params, cfg), jax.random.PRNGKey(0))
+    pspecs = transformer.param_specs(cfg, dp)
+    tokens_sds = _sds((b, s), jnp.int32)
+
+    def prefill(params, tokens):
+        cfg_serve = dataclasses.replace(cfg, remat=False)
+        return transformer.prefill_logits(params, tokens, cfg_serve, dp=dp,
+                                          moe_groups=max(n_devices, 1))
+
+    return Cell(
+        arch_id=spec.arch_id, shape_name=shape.name, kind="prefill",
+        fn=prefill,
+        args_sds=(params_sds, tokens_sds),
+        in_specs=(pspecs, P(dp, None)),
+        out_specs=P(dp, None, "model"),
+        static={"trips": [cfg.n_layers, max(s // 1024, 1)]},
+    )
+
+
+def lm_decode_cell(spec: ArchSpec, shape: ShapeSpec, multi_pod: bool
+                   ) -> Cell:
+    cfg: LMConfig = spec.config
+    p = shape.p()
+    b, s = int(p["global_batch"]), int(p["seq_len"])
+    dp = dp_axes(multi_pod)
+    params_sds = jax.eval_shape(
+        partial(transformer.init_params, cfg), jax.random.PRNGKey(0))
+    pspecs = transformer.param_specs(cfg, dp)
+    cache_sds = jax.eval_shape(partial(transformer.init_cache, cfg, b, s))
+    cspecs = transformer.cache_specs(cfg, dp, b)
+    tokens_sds = _sds((b, 1), jnp.int32)
+    pos_sds = _sds((), jnp.int32)
+    bspec = dp if b >= 16 else None
+
+    def serve_step(params, cache, tokens, pos):
+        return transformer.decode_step(params, cache, tokens, pos, cfg,
+                                       dp=dp)
+
+    return Cell(
+        arch_id=spec.arch_id, shape_name=shape.name, kind="decode",
+        fn=serve_step,
+        args_sds=(params_sds, cache_sds, tokens_sds, pos_sds),
+        in_specs=(pspecs, cspecs, P(bspec, None), P()),
+        out_specs=(P(bspec, None, "model"), cspecs),
+        donate=(1,),
+        static={"trips": [cfg.n_layers]},
+    )
+
+
+# ==========================================================================
+# GNN family
+# ==========================================================================
+def _gnn_state(cfg: GNNConfig, d_feat: int, n_classes: int,
+               opt_cfg: adamw.AdamWConfig):
+    params_sds = jax.eval_shape(
+        partial(gnn.init_params, cfg, d_feat=d_feat, n_classes=n_classes),
+        jax.random.PRNGKey(0))
+    pspecs = jax.tree.map(lambda x: P(), params_sds)
+    opt_sds = _opt_state_sds(params_sds, opt_cfg)
+    ospecs = _opt_specs(pspecs, opt_cfg.quantize_moments)
+    return ({"params": params_sds, "opt": opt_sds},
+            {"params": pspecs, "opt": ospecs})
+
+def _round_up(x: int, mult: int) -> int:
+    return ((x + mult - 1) // mult) * mult
+
+
+def _make_gnn_train_step(loss_fn, cfg, dp, opt_cfg):
+    def train_step(state, batch):
+        loss, grads = jax.value_and_grad(loss_fn)(
+            state["params"], batch, cfg, dp)
+        lr_scale = cosine_with_warmup(state["opt"]["step"])
+        new_params, new_opt, om = adamw.update(
+            grads, state["opt"], state["params"], opt_cfg, lr_scale)
+        return {"params": new_params, "opt": new_opt}, {"loss": loss, **om}
+    return train_step
+
+
+def gnn_full_graph_cell(spec: ArchSpec, shape: ShapeSpec, multi_pod: bool,
+                        opt_cfg: adamw.AdamWConfig) -> Cell:
+    cfg: GNNConfig = spec.config
+    p = shape.p()
+    n, e, d_feat = int(p["n_nodes"]), int(p["n_edges"]), \
+        int(p.get("d_feat", cfg.d_feat))
+    dp = dp_axes(multi_pod)
+    state_sds, state_specs = _gnn_state(cfg, d_feat, cfg.n_classes, opt_cfg)
+    edge_all = (*dp, "model")
+    e_pad = _round_up(e, 512)  # 512 | e_pad => both meshes shard evenly
+    batch_sds = {
+        "node_feat": _sds((n, d_feat), jnp.float32),
+        "edge_index": _sds((2, e_pad), jnp.int32),
+        "edge_mask": _sds((e_pad,), jnp.float32),
+        "labels": _sds((n,), jnp.int32),
+    }
+    batch_specs = {
+        # node arrays are replicated inputs (n is rarely divisible by the
+        # mesh); internal node state is sharded via constraints instead
+        "node_feat": P(None, None),
+        "edge_index": P(None, edge_all),   # edges over every axis
+        "edge_mask": P(edge_all),
+        "labels": P(None),
+    }
+    if gnn._needs_edge_feat(cfg):
+        fe = gnn._edge_feat_dim(cfg)
+        batch_sds["edge_feat"] = _sds((e_pad, fe), jnp.float32)
+        batch_specs["edge_feat"] = P(edge_all, None)
+
+    step = _make_gnn_train_step(gnn.full_graph_loss, cfg, dp, opt_cfg)
+    return Cell(
+        arch_id=spec.arch_id, shape_name=shape.name, kind="train",
+        fn=step, args_sds=(state_sds, batch_sds),
+        in_specs=(state_specs, batch_specs),
+        out_specs=(state_specs, {"loss": P(), "grad_norm": P(), "lr": P()}),
+        donate=(0,),
+        static={"trips": [cfg.n_layers]},
+    )
+
+
+def gnn_minibatch_cell(spec: ArchSpec, shape: ShapeSpec, multi_pod: bool,
+                       opt_cfg: adamw.AdamWConfig) -> Cell:
+    cfg: GNNConfig = spec.config
+    p = shape.p()
+    r = int(p["batch_nodes"])
+    f1, f2 = p["fanout"]
+    d_feat = cfg.d_feat
+    dp = dp_axes(multi_pod)
+    state_sds, state_specs = _gnn_state(cfg, d_feat, cfg.n_classes, opt_cfg)
+    batch_sds = {
+        "x0": _sds((r, d_feat), jnp.float32),
+        "x1": _sds((r, f1, d_feat), jnp.float32),
+        "x2": _sds((r, f1, f2, d_feat), jnp.float32),
+        "mask1": _sds((r, f1), jnp.float32),
+        "mask2": _sds((r, f1, f2), jnp.float32),
+        "labels": _sds((r,), jnp.int32),
+    }
+    batch_specs = {
+        "x0": P(dp, None), "x1": P(dp, None, None),
+        "x2": P(dp, None, None, None),
+        "mask1": P(dp, None), "mask2": P(dp, None, None),
+        "labels": P(dp),
+    }
+    step = _make_gnn_train_step(gnn.minibatch_loss, cfg, dp, opt_cfg)
+    return Cell(
+        arch_id=spec.arch_id, shape_name=shape.name, kind="train",
+        fn=step, args_sds=(state_sds, batch_sds),
+        in_specs=(state_specs, batch_specs),
+        out_specs=(state_specs, {"loss": P(), "grad_norm": P(), "lr": P()}),
+        donate=(0,),
+    )
+
+
+def gnn_molecule_cell(spec: ArchSpec, shape: ShapeSpec, multi_pod: bool,
+                      opt_cfg: adamw.AdamWConfig) -> Cell:
+    cfg: GNNConfig = spec.config
+    p = shape.p()
+    b, nn, ne = int(p["batch"]), int(p["n_nodes"]), int(p["n_edges"])
+    d_feat = cfg.d_feat
+    dp = dp_axes(multi_pod)
+    state_sds, state_specs = _gnn_state(cfg, d_feat, cfg.n_classes, opt_cfg)
+    batch_sds = {
+        "node_feat": _sds((b, nn, d_feat), jnp.float32),
+        "edge_index": _sds((b, 2, ne), jnp.int32),
+        "edge_mask": _sds((b, ne), jnp.float32),
+        "node_mask": _sds((b, nn), jnp.float32),
+        "labels": _sds((b,), jnp.int32),
+    }
+    batch_specs = {
+        "node_feat": P(dp, None, None), "edge_index": P(dp, None, None),
+        "edge_mask": P(dp, None), "node_mask": P(dp, None),
+        "labels": P(dp),
+    }
+    if gnn._needs_edge_feat(cfg):
+        fe = gnn._edge_feat_dim(cfg)
+        batch_sds["edge_feat"] = _sds((b, ne, fe), jnp.float32)
+        batch_specs["edge_feat"] = P(dp, None, None)
+    step = _make_gnn_train_step(gnn.molecule_loss, cfg, dp, opt_cfg)
+    return Cell(
+        arch_id=spec.arch_id, shape_name=shape.name, kind="train",
+        fn=step, args_sds=(state_sds, batch_sds),
+        in_specs=(state_specs, batch_specs),
+        out_specs=(state_specs, {"loss": P(), "grad_norm": P(), "lr": P()}),
+        donate=(0,),
+        static={"trips": [cfg.n_layers]},
+    )
+
+
+# ==========================================================================
+# DLRM family
+# ==========================================================================
+def dlrm_state(cfg: DLRMConfig, dp, opt_cfg):
+    params_sds = jax.eval_shape(partial(dlrm.init_params, cfg),
+                                jax.random.PRNGKey(0))
+    pspecs = dlrm.param_specs(cfg, dp)
+    opt_sds = _opt_state_sds(params_sds, opt_cfg)
+    ospecs = _opt_specs(pspecs, opt_cfg.quantize_moments)
+    return ({"params": params_sds, "opt": opt_sds},
+            {"params": pspecs, "opt": ospecs})
+
+
+def dlrm_train_cell(spec: ArchSpec, shape: ShapeSpec, multi_pod: bool,
+                    opt_cfg: adamw.AdamWConfig,
+                    sparse_update: bool = False) -> Cell:
+    """DLRM train step.  ``sparse_update``: lazy touched-rows-only AdamW
+    for the tables (O(B x S x D) instead of the O(R x D) dense sweep).
+
+    MEASURED (EXPERIMENTS.md §Perf, refuted-but-kept): at MLPerf scale
+    (188M rows / 256 chips = 734k LOCAL rows per device) the dense sweep
+    is elementwise-local and cheaper than the sparse path's global
+    sort + cross-shard scatter of 1.7M touched rows (hbm 6.8 -> 20 GB,
+    wire 2.6 -> 8.6 GB per device).  The crossover is R/chips >> touched
+    rows (e.g. 4B-row tables); the capability ships OFF by default."""
+    cfg: DLRMConfig = spec.config
+    b = int(shape.p()["batch"])
+    dp = dp_axes(multi_pod)
+    state_sds, state_specs = dlrm_state(cfg, dp, opt_cfg)
+    batch_sds = {
+        "dense": _sds((b, cfg.n_dense), jnp.float32),
+        "sparse_idx": _sds((b, cfg.n_sparse), jnp.int32),
+        "labels": _sds((b,), jnp.int32),
+    }
+    batch_specs = {"dense": P(dp, None), "sparse_idx": P(dp, None),
+                   "labels": P(dp)}
+
+    def train_step_dense(state, batch):
+        loss, grads = jax.value_and_grad(dlrm.loss_fn)(
+            state["params"], batch, cfg, dp)
+        lr_scale = cosine_with_warmup(state["opt"]["step"])
+        new_params, new_opt, om = adamw.update(
+            grads, state["opt"], state["params"], opt_cfg, lr_scale)
+        return {"params": new_params, "opt": new_opt}, {"loss": loss, **om}
+
+    def train_step_sparse(state, batch):
+        params = state["params"]
+        other = {"bot": params["bot"], "top": params["top"]}
+        flat_idx = batch["sparse_idx"].reshape(-1)
+        rows = jnp.take(params["tables"], flat_idx, axis=0).reshape(
+            b, cfg.n_sparse, cfg.embed_dim)
+
+        def loss_of(other_p, rows_):
+            return dlrm.loss_from_rows(other_p, rows_, batch, cfg, dp)
+
+        loss, (g_other, g_rows) = jax.value_and_grad(
+            loss_of, argnums=(0, 1))(other, rows)
+        step = state["opt"]["step"]
+        lr_scale = cosine_with_warmup(step)
+        # dense update for the MLPs
+        new_other, new_opt_o, om = adamw.update(
+            g_other, {"m": {"bot": state["opt"]["m"]["bot"],
+                            "top": state["opt"]["m"]["top"]},
+                      "v": {"bot": state["opt"]["v"]["bot"],
+                            "top": state["opt"]["v"]["top"]},
+                      "step": step},
+            other, opt_cfg, lr_scale)
+        # lazy sparse update for the tables
+        p_t, m_t, v_t = adamw.sparse_row_update(
+            params["tables"], state["opt"]["m"]["tables"],
+            state["opt"]["v"]["tables"], flat_idx,
+            g_rows.reshape(-1, cfg.embed_dim), opt_cfg, lr_scale,
+            step + 1)
+        new_params = {"tables": p_t, **new_other}
+        new_opt = {
+            "m": {"tables": m_t, **new_opt_o["m"]},
+            "v": {"tables": v_t, **new_opt_o["v"]},
+            "step": new_opt_o["step"],
+        }
+        return {"params": new_params, "opt": new_opt}, {"loss": loss, **om}
+
+    train_step = train_step_sparse if sparse_update else train_step_dense
+
+    return Cell(
+        arch_id=spec.arch_id, shape_name=shape.name, kind="train",
+        fn=train_step, args_sds=(state_sds, batch_sds),
+        in_specs=(state_specs, batch_specs),
+        out_specs=(state_specs, {"loss": P(), "grad_norm": P(), "lr": P()}),
+        donate=(0,),
+    )
+
+
+def dlrm_serve_cell(spec: ArchSpec, shape: ShapeSpec, multi_pod: bool,
+                    opt_cfg: adamw.AdamWConfig) -> Cell:
+    cfg: DLRMConfig = spec.config
+    b = int(shape.p()["batch"])
+    dp = dp_axes(multi_pod)
+    params_sds = jax.eval_shape(partial(dlrm.init_params, cfg),
+                                jax.random.PRNGKey(0))
+    pspecs = dlrm.param_specs(cfg, dp)
+    batch_sds = {
+        "dense": _sds((b, cfg.n_dense), jnp.float32),
+        "sparse_idx": _sds((b, cfg.n_sparse), jnp.int32),
+    }
+    bspec = dp if b >= 512 else None
+    batch_specs = {"dense": P(bspec, None), "sparse_idx": P(bspec, None)}
+
+    def serve(params, batch):
+        return dlrm.forward(params, batch, cfg, dp)
+
+    return Cell(
+        arch_id=spec.arch_id, shape_name=shape.name, kind="serve",
+        fn=serve, args_sds=(params_sds, batch_sds),
+        in_specs=(pspecs, batch_specs),
+        out_specs=P(bspec),
+    )
+
+
+def dlrm_retrieval_cell(spec: ArchSpec, shape: ShapeSpec, multi_pod: bool,
+                        opt_cfg: adamw.AdamWConfig) -> Cell:
+    cfg: DLRMConfig = spec.config
+    p = shape.p()
+    c = int(p["n_candidates"])
+    dp = dp_axes(multi_pod)
+    params_sds = jax.eval_shape(partial(dlrm.init_params, cfg),
+                                jax.random.PRNGKey(0))
+    pspecs = dlrm.param_specs(cfg, dp)
+    batch_sds = {
+        "dense": _sds((1, cfg.n_dense), jnp.float32),
+        "sparse_idx": _sds((1, cfg.n_sparse), jnp.int32),
+        "cand_idx": _sds((c,), jnp.int32),
+    }
+    batch_specs = {"dense": P(None, None), "sparse_idx": P(None, None),
+                   "cand_idx": P("model")}  # 1e6 % 16 == 0; dp idle (B=1)
+
+    def serve(params, batch):
+        return dlrm.retrieval_scores(params, batch, cfg, dp)
+
+    return Cell(
+        arch_id=spec.arch_id, shape_name=shape.name, kind="retrieval",
+        fn=serve, args_sds=(params_sds, batch_sds),
+        in_specs=(pspecs, batch_specs),
+        out_specs=P("model"),
+    )
+
+
+# ==========================================================================
+# dispatch
+# ==========================================================================
+def build_cell(spec: ArchSpec, shape: ShapeSpec, multi_pod: bool,
+               opt_cfg: Optional[adamw.AdamWConfig] = None,
+               n_devices: int = 256) -> Cell:
+    opt_cfg = opt_cfg or getattr(spec, "opt_cfg", None) \
+        or adamw.AdamWConfig()
+    fam = spec.config.family
+    if fam == "lm":
+        if shape.kind == "train":
+            return lm_train_cell(spec, shape, multi_pod, opt_cfg, n_devices)
+        if shape.kind == "prefill":
+            return lm_prefill_cell(spec, shape, multi_pod, n_devices)
+        if shape.kind in ("decode", "long_decode"):
+            return lm_decode_cell(spec, shape, multi_pod)
+    if fam == "gnn":
+        if shape.kind == "full_graph":
+            return gnn_full_graph_cell(spec, shape, multi_pod, opt_cfg)
+        if shape.kind == "minibatch":
+            return gnn_minibatch_cell(spec, shape, multi_pod, opt_cfg)
+        if shape.kind == "molecule":
+            return gnn_molecule_cell(spec, shape, multi_pod, opt_cfg)
+    if fam == "recsys":
+        if shape.kind == "train_batch":
+            return dlrm_train_cell(spec, shape, multi_pod, opt_cfg)
+        if shape.kind == "serve_batch":
+            return dlrm_serve_cell(spec, shape, multi_pod, opt_cfg)
+        if shape.kind == "retrieval":
+            return dlrm_retrieval_cell(spec, shape, multi_pod, opt_cfg)
+    raise ValueError(f"no builder for {spec.arch_id} x {shape.name}")

@@ -1,0 +1,34 @@
+import os
+
+# Smoke tests and benches must see ONE device (the 512-device override
+# belongs exclusively to launch/dryrun.py).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import numpy as np
+import pytest
+
+from repro.core.hypergraph import Hypergraph
+
+
+@pytest.fixture(scope="session")
+def small_hg():
+    from repro.data.hypergraphs import _modular_netlist
+    return _modular_netlist(600, 800, seed=11, n_modules=8, p_local=0.8,
+                            fanout_tail=1.5)
+
+
+@pytest.fixture(scope="session")
+def tiny_hg():
+    rng = np.random.default_rng(5)
+    edges = [rng.choice(24, size=int(rng.integers(2, 5)), replace=False)
+             for _ in range(40)]
+    return Hypergraph.from_edge_lists(edges, n=24)
+
+
+def brute_force_cut(hg: Hypergraph, part, k):
+    cut = 0.0
+    for e in range(hg.m):
+        pins = hg.pins[hg.edge_offsets[e]:hg.edge_offsets[e + 1]]
+        if len(set(int(part[v]) for v in pins)) > 1:
+            cut += float(hg.edge_weights[e])
+    return cut

@@ -1,0 +1,107 @@
+"""Hypergraph structure ops + distributed population step (single-device
+mesh here; the multi-device path is exercised by the dry-run and the
+8-device subprocess test in test_distributed.py)."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.hypergraph import Hypergraph, HypergraphArrays, contract
+from repro.core.coarsen import coarsen
+from repro.core import metrics, refine
+from tests.conftest import brute_force_cut
+
+
+def _rand_hg(rng, n, m):
+    edges = [rng.choice(n, size=int(rng.integers(2, min(6, n))),
+                        replace=False) for _ in range(m)]
+    return Hypergraph.from_edge_lists(edges, n=n)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_contract_preserves_cut_under_projection(seed):
+    """cut(coarse, part) == cut(fine, part[cluster_id]) — THE multilevel
+    invariant."""
+    rng = np.random.default_rng(seed)
+    hg = _rand_hg(rng, 40, 70)
+    k = 3
+    n_new = 12
+    cid = rng.integers(0, n_new, hg.n).astype(np.int32)
+    coarse, _ = contract(hg, cid, n_new)
+    cpart = rng.integers(0, k, n_new).astype(np.int32)
+    fine_part = cpart[cid]
+    assert brute_force_cut(coarse, cpart, k) == pytest.approx(
+        brute_force_cut(hg, fine_part, k))
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_contract_conserves_vertex_weight(seed):
+    rng = np.random.default_rng(seed)
+    hg = _rand_hg(rng, 30, 40)
+    cid = rng.integers(0, 10, hg.n).astype(np.int32)
+    coarse, _ = contract(hg, cid, 10)
+    assert coarse.total_weight == pytest.approx(hg.total_weight)
+
+
+def test_coarsen_hierarchy_shrinks(small_hg):
+    hier = coarsen(small_hg, k=4, seed=0)
+    sizes = hier.sizes()
+    assert sizes[0] == small_hg.n
+    assert all(a > b for a, b in zip(sizes, sizes[1:]))
+    assert sizes[-1] <= max(64 * 4, sizes[0])
+    for lv in hier.levels[1:]:
+        assert lv.hg.total_weight == pytest.approx(small_hg.total_weight)
+
+
+def test_arrays_padding_is_inert(tiny_hg):
+    """Ghost pins/vertices/edges must not change any metric."""
+    hga_small = tiny_hg.arrays()
+    hga_big = tiny_hg.arrays(pad_pins=4096, pad_edges=1024,
+                             pad_vertices=512)
+    rng = np.random.default_rng(0)
+    k = 4
+    part = rng.integers(0, k, tiny_hg.n).astype(np.int32)
+    c1 = float(metrics.cutsize_jit(
+        hga_small, refine.pad_part(part, hga_small.n_pad), k))
+    c2 = float(metrics.cutsize_jit(
+        hga_big, refine.pad_part(part, hga_big.n_pad), k))
+    assert c1 == pytest.approx(c2)
+    g1 = np.asarray(metrics.gain_matrix_jit(
+        hga_small, refine.pad_part(part, hga_small.n_pad), k))[: tiny_hg.n]
+    g2 = np.asarray(metrics.gain_matrix_jit(
+        hga_big, refine.pad_part(part, hga_big.n_pad), k))[: tiny_hg.n]
+    np.testing.assert_allclose(g1, g2, atol=1e-5)
+
+
+def test_population_step_single_device(small_hg):
+    """Mesh (1,1): the ring degenerates to self-loops but the whole step
+    (refine + recombine + mutate) must still run, stay balanced, and not
+    regress the cut."""
+    from repro.core.population import make_population_step
+    mesh = jax.make_mesh((1, 1), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    k, eps = 8, 0.08
+    hga = small_hg.arrays()
+    step = make_population_step(mesh, n=small_hg.n, m=small_hg.m, k=k,
+                                eps=eps, refine_rounds=2)
+    rng = np.random.default_rng(0)
+    p0 = refine.rebalance(small_hg.vertex_weights,
+                          rng.integers(0, k, small_hg.n).astype(np.int32),
+                          k, eps, rng)
+    parts = np.zeros((1, hga.n_pad), np.int32)
+    parts[0, : small_hg.n] = p0
+    cut0 = float(metrics.cutsize_jit(
+        hga, refine.pad_part(p0, hga.n_pad), k))
+    with jax.set_mesh(mesh):
+        new_parts, cuts = step(hga.pin_vertex, hga.pin_edge,
+                               hga.vertex_weights, hga.edge_weights,
+                               hga.edge_sizes, jnp.asarray(parts))
+    p1 = np.asarray(new_parts)[0]
+    c1 = float(cuts[0])
+    assert c1 <= cut0 + 1e-6
+    assert c1 == pytest.approx(float(metrics.cutsize_jit(
+        hga, jnp.asarray(p1), k)))
+    assert bool(metrics.is_balanced(hga, jnp.asarray(p1), k, eps))

@@ -1,0 +1,101 @@
+"""Metric correctness: cut/connectivity vs brute force; property tests for
+the similarity metrics (paper Sec. 3.2, Fig. 4)."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import metrics, refine
+from repro.core.hypergraph import Hypergraph
+from tests.conftest import brute_force_cut
+
+
+def _rand_hg(rng, n, m):
+    edges = [rng.choice(n, size=int(rng.integers(2, min(6, n))),
+                        replace=False) for _ in range(m)]
+    return Hypergraph.from_edge_lists(edges, n=n)
+
+
+def test_cut_matches_brute_force(tiny_hg):
+    rng = np.random.default_rng(0)
+    hga = tiny_hg.arrays()
+    for k in (2, 4, 7):
+        for _ in range(5):
+            part = rng.integers(0, k, tiny_hg.n).astype(np.int32)
+            got = float(metrics.cutsize_jit(
+                hga, refine.pad_part(part, hga.n_pad), k))
+            want = brute_force_cut(tiny_hg, part, k)
+            assert got == pytest.approx(want)
+
+
+def test_connectivity_counts_distinct_blocks(tiny_hg):
+    rng = np.random.default_rng(1)
+    k = 5
+    part = rng.integers(0, k, tiny_hg.n).astype(np.int32)
+    hga = tiny_hg.arrays()
+    lam = np.asarray(metrics.connectivity_jit(
+        hga, refine.pad_part(part, hga.n_pad), k))[: tiny_hg.m]
+    for e in range(tiny_hg.m):
+        pins = tiny_hg.pins[
+            tiny_hg.edge_offsets[e]:tiny_hg.edge_offsets[e + 1]]
+        assert lam[e] == len(set(int(part[v]) for v in pins))
+
+
+def test_gain_matrix_predicts_cut_delta(tiny_hg):
+    """gain[v, j] must equal cut(before) - cut(after moving v -> j)."""
+    rng = np.random.default_rng(2)
+    k = 4
+    hga = tiny_hg.arrays()
+    part = rng.integers(0, k, tiny_hg.n).astype(np.int32)
+    g = np.asarray(metrics.gain_matrix_jit(
+        hga, refine.pad_part(part, hga.n_pad), k))
+    base = brute_force_cut(tiny_hg, part, k)
+    for v in rng.choice(tiny_hg.n, size=8, replace=False):
+        for j in range(k):
+            if j == part[v]:
+                continue
+            p2 = part.copy()
+            p2[v] = j
+            delta = base - brute_force_cut(tiny_hg, p2, k)
+            assert g[v, j] == pytest.approx(delta), (v, j)
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 10_000), k=st.integers(2, 8))
+def test_edge_distance_label_invariant(seed, k):
+    """d_e is invariant under block relabelling (paper Fig. 4); d_v is
+    not — exactly the isomorphism problem the paper illustrates."""
+    rng = np.random.default_rng(seed)
+    hg = _rand_hg(rng, 30, 50)
+    hga = hg.arrays()
+    part = rng.integers(0, k, hg.n).astype(np.int32)
+    perm = rng.permutation(k)
+    relabeled = perm[part].astype(np.int32)
+    pa = refine.pad_part(part, hga.n_pad)
+    pb = refine.pad_part(relabeled, hga.n_pad)
+    assert int(metrics.edge_distance_jit(hga, pa, pb, k)) == 0
+    # cut identical too
+    assert float(metrics.cutsize_jit(hga, pa, k)) == pytest.approx(
+        float(metrics.cutsize_jit(hga, pb, k)))
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_edge_distance_symmetric_nonneg(seed):
+    rng = np.random.default_rng(seed)
+    hg = _rand_hg(rng, 25, 40)
+    hga = hg.arrays()
+    k = 4
+    a = refine.pad_part(rng.integers(0, k, hg.n).astype(np.int32), hga.n_pad)
+    b = refine.pad_part(rng.integers(0, k, hg.n).astype(np.int32), hga.n_pad)
+    dab = int(metrics.edge_distance_jit(hga, a, b, k))
+    dba = int(metrics.edge_distance_jit(hga, b, a, k))
+    assert dab == dba >= 0
+    assert int(metrics.edge_distance_jit(hga, a, a, k)) == 0
+
+
+def test_balance_cap_formula():
+    # paper: W_i <= (1+eps) * ceil(W/k)
+    assert float(metrics.balance_cap(100.0, 4, 0.08)) == pytest.approx(
+        1.08 * 25)
+    assert float(metrics.balance_cap(101.0, 4, 0.0)) == pytest.approx(26.0)

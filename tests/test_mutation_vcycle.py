@@ -1,0 +1,84 @@
+"""Mutation + V-cycle invariants (paper Sec. 3.2)."""
+import numpy as np
+import pytest
+
+from repro.core import metrics, refine
+from repro.core.hypergraph import Hypergraph
+from repro.core.mutate import mutate_population, similarity_sets
+from repro.core.vcycle import vcycle
+from repro.core.coarsen import coarsen
+
+
+def test_vcycle_never_worse(small_hg):
+    rng = np.random.default_rng(3)
+    k, eps = 4, 0.08
+    hga = small_hg.arrays()
+    p = refine.rebalance(small_hg.vertex_weights,
+                         rng.integers(0, k, small_hg.n).astype(np.int32),
+                         k, eps, rng)
+    c0 = float(metrics.cutsize_jit(hga, refine.pad_part(p, hga.n_pad), k))
+    p1, c1 = vcycle(small_hg, p, k, eps, seed=1)
+    assert c1 <= c0 + 1e-6
+    assert bool(metrics.is_balanced(
+        hga, refine.pad_part(p1, hga.n_pad), k, eps))
+
+
+def test_partition_aware_coarsening_projects_exactly(small_hg):
+    """Restricted coarsening must preserve the projected cut at every
+    level (the invariant V-cycle correctness rests on)."""
+    rng = np.random.default_rng(4)
+    k = 4
+    part = refine.rebalance(
+        small_hg.vertex_weights,
+        rng.integers(0, k, small_hg.n).astype(np.int32), k, 0.08, rng)
+    hier = coarsen(small_hg, k, seed=0, restrict_part=part)
+    hga0 = small_hg.arrays()
+    cut0 = float(metrics.cutsize_jit(
+        hga0, refine.pad_part(part, hga0.n_pad), k))
+    cur = part
+    for lv in hier.levels[1:]:
+        newp = np.zeros(lv.hg.n, np.int32)
+        newp[lv.cluster_id] = cur
+        cur = newp
+        hga = lv.hg.arrays()
+        c = float(metrics.cutsize_jit(
+            hga, refine.pad_part(cur, hga.n_pad), k))
+        assert c == pytest.approx(cut0), f"level n={lv.hg.n}"
+
+
+def test_similarity_sets_structure(small_hg):
+    """Identical partitions must be flagged; the best copy is exempt."""
+    rng = np.random.default_rng(5)
+    k, eps = 4, 0.08
+    hga = small_hg.arrays()
+    p = refine.rebalance(small_hg.vertex_weights,
+                         rng.integers(0, k, small_hg.n).astype(np.int32),
+                         k, eps, rng)
+    p2 = p.copy()
+    parts = [p, p2]
+    cuts = [float(metrics.cutsize_jit(
+        hga, refine.pad_part(x, hga.n_pad), k)) for x in parts]
+    msets = similarity_sets(hga, parts, cuts, k, threshold=20.0)
+    flagged = [j for j, m in enumerate(msets) if m]
+    assert len(flagged) == 1  # exactly one of the twins mutates
+
+
+def test_mutation_restores_diversity_and_balance(small_hg):
+    rng = np.random.default_rng(6)
+    k, eps = 4, 0.08
+    hga = small_hg.arrays()
+    base = refine.rebalance(
+        small_hg.vertex_weights,
+        rng.integers(0, k, small_hg.n).astype(np.int32), k, eps, rng)
+    base, _ = refine.lp_refine(hga, base, k, eps, max_iters=3)
+    base = np.asarray(base)[: small_hg.n]
+    parts = [base.copy(), base.copy(), base.copy()]
+    cuts = [float(metrics.cutsize_jit(
+        hga, refine.pad_part(x, hga.n_pad), k)) for x in parts]
+    new_parts, new_cuts = mutate_population(
+        small_hg, parts, cuts, k, eps, threshold=20.0, seed=1)
+    for p, c in zip(new_parts, new_cuts):
+        assert bool(metrics.is_balanced(
+            hga, refine.pad_part(p, hga.n_pad), k, eps))
+        assert c == pytest.approx(float(metrics.cutsize_jit(
+            hga, refine.pad_part(p, hga.n_pad), k)))

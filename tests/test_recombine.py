@@ -1,0 +1,116 @@
+"""Recombination: overlay clustering, elitism, exact-solver agreement
+(paper Sec. 3.1.2 thresholds)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import metrics, refine, ilp
+from repro.core.hypergraph import Hypergraph, contract
+from repro.core.recombine import (overlay_clustering, recombine,
+                                  ring_recombination, _ils_clustered)
+from tests.conftest import brute_force_cut
+
+
+def _rand_hg(rng, n, m):
+    edges = [rng.choice(n, size=int(rng.integers(2, min(6, n))),
+                        replace=False) for _ in range(m)]
+    return Hypergraph.from_edge_lists(edges, n=n)
+
+
+def test_overlay_clustering_groups_agreement():
+    a = np.array([0, 0, 1, 1, 2, 2], np.int32)
+    b = np.array([0, 0, 1, 2, 2, 2], np.int32)
+    cid, n_prime = overlay_clustering(a, b, k=3)
+    # vertices 0,1 agree(0,0); 2 is (1,1); 3 is (1,2); 4,5 are (2,2)
+    assert n_prime == 4
+    assert cid[0] == cid[1]
+    assert cid[4] == cid[5]
+    assert len({cid[1], cid[2], cid[3], cid[4]}) == 4
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_overlay_preserves_parent_representability(seed):
+    """Both parents are exactly representable as cluster assignments, so
+    the clustered optimum is never worse than the better parent."""
+    rng = np.random.default_rng(seed)
+    hg = _rand_hg(rng, 30, 50)
+    k = 3
+    a = rng.integers(0, k, hg.n).astype(np.int32)
+    b = rng.integers(0, k, hg.n).astype(np.int32)
+    cid, n_prime = overlay_clustering(a, b, k)
+    chg, _ = contract(hg, cid, n_prime)
+    # project parent a onto clusters: every cluster is pure in a
+    first = np.zeros(n_prime, np.int64)
+    first[cid[::-1]] = np.arange(hg.n - 1, -1, -1)
+    ca = a[first]
+    assert brute_force_cut(chg, ca, k) == pytest.approx(
+        brute_force_cut(hg, a, k))
+
+
+def test_recombine_elitism(small_hg):
+    rng = np.random.default_rng(7)
+    k, eps = 4, 0.08
+    hga = small_hg.arrays()
+    pa = refine.rebalance(small_hg.vertex_weights,
+                          rng.integers(0, k, small_hg.n).astype(np.int32),
+                          k, eps, rng)
+    pb = refine.rebalance(small_hg.vertex_weights,
+                          rng.integers(0, k, small_hg.n).astype(np.int32),
+                          k, eps, rng)
+    ca = float(metrics.cutsize_jit(hga, refine.pad_part(pa, hga.n_pad), k))
+    cb = float(metrics.cutsize_jit(hga, refine.pad_part(pb, hga.n_pad), k))
+    off, cut = recombine(small_hg, pa, pb, ca, cb, k, eps, seed=1)
+    assert cut <= min(ca, cb) + 1e-6
+    assert bool(metrics.is_balanced(
+        hga, refine.pad_part(off, hga.n_pad), k, eps))
+    # reported cut is the true cut
+    assert cut == pytest.approx(float(metrics.cutsize_jit(
+        hga, refine.pad_part(off, hga.n_pad), k)))
+
+
+def test_exact_solver_optimal_tiny():
+    """B&B must find the known optimum on a 2-triangle instance."""
+    edges = [[0, 1], [1, 2], [0, 2], [3, 4], [4, 5], [3, 5], [2, 3]]
+    hg = Hypergraph.from_edge_lists(edges, n=6)
+    part, cut = ilp.solve_exact(hg, k=2, eps=0.0)
+    assert cut == pytest.approx(1.0)
+    assert brute_force_cut(hg, part, 2) == pytest.approx(1.0)
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 1000))
+def test_ils_reaches_exact_on_small(seed):
+    """Paper threshold region (n'*k < 600): the ILS clustered solver must
+    match the exact B&B optimum on small instances."""
+    rng = np.random.default_rng(seed)
+    hg = _rand_hg(rng, 12, 24)
+    k, eps = 3, 0.34  # generous eps so feasibility is easy
+    exact_part, exact_cut = ilp.solve_exact(hg, k, eps)
+    warm = refine.rebalance(hg.vertex_weights,
+                            rng.integers(0, k, hg.n).astype(np.int32),
+                            k, eps, rng)
+    ils_part, ils_cut = _ils_clustered(hg, k, eps, warm, seed=seed,
+                                       restarts=8, kick=0.3)
+    assert ils_cut >= exact_cut - 1e-6   # exact is a true lower bound
+    assert ils_cut <= exact_cut + 1e-6 or \
+        (ils_cut - exact_cut) / max(exact_cut, 1) < 0.34
+
+
+def test_ring_recombination_population(small_hg):
+    rng = np.random.default_rng(9)
+    k, eps = 4, 0.08
+    hga = small_hg.arrays()
+    parts, cuts = [], []
+    for i in range(3):
+        p = refine.rebalance(
+            small_hg.vertex_weights,
+            rng.integers(0, k, small_hg.n).astype(np.int32), k, eps, rng)
+        p, c = refine.lp_refine(hga, p, k, eps, max_iters=3)
+        parts.append(np.asarray(p)[: small_hg.n])
+        cuts.append(c)
+    new_parts, new_cuts = ring_recombination(small_hg, parts, cuts, k, eps)
+    assert len(new_parts) == 3
+    for i in range(3):
+        j = (i + 1) % 3
+        assert new_cuts[i] <= min(cuts[i], cuts[j]) + 1e-6

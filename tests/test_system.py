@@ -1,0 +1,78 @@
+"""End-to-end behaviour: the paper's central claims on a small instance.
+
+1. IMPart produces balanced partitions with cuts <= the multilevel
+   baseline (paper Tables 1-2 direction).
+2. The trajectory contains recombination events ("jumps", Fig. 5).
+3. The geometric threshold schedule matches Sec. 3.1.1.
+"""
+import numpy as np
+import pytest
+
+from repro.core import (ImpartConfig, impart_partition, metrics,
+                        multilevel_partition, external_memetic, refine)
+from repro.core.coarsen import recombination_thresholds
+from repro.data.hypergraphs import _modular_netlist
+
+
+@pytest.fixture(scope="module")
+def netlist():
+    return _modular_netlist(1200, 1600, seed=21, n_modules=12,
+                            p_local=0.82, fanout_tail=1.5)
+
+
+def test_impart_end_to_end(netlist):
+    k, eps = 4, 0.08
+    res = impart_partition(netlist, ImpartConfig(
+        k=k, eps=eps, alpha=3, beta=3, seed=1, final_vcycles=0))
+    hga = netlist.arrays()
+    p = refine.pad_part(res.part, hga.n_pad)
+    assert res.part.shape == (netlist.n,)
+    assert res.part.min() >= 0 and res.part.max() < k
+    assert bool(metrics.is_balanced(hga, p, k, eps))
+    assert res.cut == pytest.approx(float(metrics.cutsize_jit(hga, p, k)))
+    # trajectory contains recombination + mutation events
+    events = [t[2] for t in res.trace]
+    assert any(e.startswith("recombine") for e in events)
+    assert any(e.startswith("mutate") for e in events)
+
+
+def test_impart_beats_or_matches_multilevel(netlist):
+    """Direction of paper Tables 1-2 at equal-ish effort."""
+    k, eps = 4, 0.08
+    base = multilevel_partition(netlist, k, eps, seed=3)
+    res = impart_partition(netlist, ImpartConfig(
+        k=k, eps=eps, alpha=3, beta=3, seed=3, final_vcycles=0))
+    assert res.cut <= base.cut * 1.02  # allow noise; typically strictly <
+
+
+def test_population_cuts_nonincreasing_on_recombination(netlist):
+    """Recombination rounds never regress any member (elitism)."""
+    k, eps = 4, 0.08
+    res = impart_partition(netlist, ImpartConfig(
+        k=k, eps=eps, alpha=3, beta=2, seed=5, final_vcycles=0,
+        mutation_enabled=False))
+    prev_cuts = None
+    for n_nodes, cuts, event in res.trace:
+        if event.startswith("recombine") and prev_cuts is not None:
+            assert max(cuts) <= max(prev_cuts) + 1e-6
+            assert min(cuts) <= min(prev_cuts) + 1e-6
+        prev_cuts = cuts
+
+
+def test_threshold_schedule_formula():
+    n, n_c, beta = 100_000, 256, 7
+    th = recombination_thresholds(n, n_c, beta)
+    assert len(th) == beta
+    assert th[-1] == pytest.approx(n)
+    # geometric: constant ratio
+    ratios = th[1:] / th[:-1]
+    assert np.allclose(ratios, ratios[0], rtol=1e-9)
+    assert th[0] == pytest.approx(n_c ** (1 - 1 / beta) * n ** (1 / beta))
+
+
+def test_external_memetic_runs(netlist):
+    res = external_memetic(netlist, 4, 0.08, seed=1, population=2,
+                           generations=1)
+    hga = netlist.arrays()
+    assert bool(metrics.is_balanced(
+        hga, refine.pad_part(res.part, hga.n_pad), 4, 0.08))
