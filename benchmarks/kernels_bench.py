@@ -54,6 +54,28 @@ def run(quick: bool = False, out=sys.stdout):
     print(f"kernels,cutsize_pallas,{t_c:.0f},"
           f"delta={abs(cut_k - cut_c):.1e}", file=out)
 
+    # population-batched gain kernel: one launch for alpha members vs
+    # alpha single-member launches vs the vmapped XLA oracle
+    alpha, kd = 7, 16
+    n_inc, d_inc, m_inc = 512, 8, 256
+    incident = jnp.asarray(
+        rng.integers(-1, m_inc, size=(n_inc, d_inc)).astype(np.int32))
+    bi = jnp.asarray(
+        rng.normal(size=(alpha, m_inc, kd)).astype(np.float32))
+    wi = jnp.asarray(rng.normal(size=(alpha, m_inc)).astype(np.float32))
+    t_b = _time(lambda: ops.gain_gather_batch(incident, bi, wi))
+    t_loop = _time(lambda: [ops.gain_gather(incident, bi[a], wi[a])
+                            for a in range(alpha)])
+    t_ref = _time(lambda: ref.gain_gather_batch_ref(incident, bi, wi))
+    d_b = float(jnp.abs(ops.gain_gather_batch(incident, bi, wi)
+                        - ref.gain_gather_batch_ref(incident, bi, wi)
+                        ).max())
+    print(f"kernels,gain_gather_batch_pallas,{t_b:.0f},maxerr={d_b:.1e}",
+          file=out)
+    print(f"kernels,gain_gather_looped_pallas,{t_loop:.0f},"
+          f"batch_speedup={t_loop / max(t_b, 1e-9):.2f}", file=out)
+    print(f"kernels,gain_gather_batch_ref,{t_ref:.0f},", file=out)
+
     # interpret mode executes the (B, L) grid in Python — keep it tiny
     # (the TPU grid is sequential hardware DMA; size there is free)
     table = jnp.asarray(rng.normal(size=(10_000, 128)).astype(np.float32))

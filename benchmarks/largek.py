@@ -1,14 +1,204 @@
 """Paper Fig. 6: scalability to large k (k = 4, 10, 16, 32) — normalized
 cut vs the multilevel baseline; the paper's claim is that IMPart's margin
-holds/grows with k."""
+holds/grows with k.
+
+Also home of the population-engine benchmark (``bench_population``):
+batched-vs-looped uncoarsening+refinement at alpha=7, k=64, emitting
+machine-readable ``BENCH_population.json`` so the perf trajectory of the
+batched engine is tracked PR over PR.
+"""
 from __future__ import annotations
 
+import json
 import sys
+import time
+from functools import partial
+
+import numpy as np
 
 from repro.data.hypergraphs import titan_like
 from .partition_common import run_methods
 
 METHODS = ("multilevel", "ext_memetic", "impart")
+
+
+# --------------------------------------------------------------------------
+# legacy looped baseline (the seed implementation this PR removed from
+# impart.py: per-member host loop + fixed-length FM scan) — vendored here
+# so the speedup keeps being measured against the true "before"
+# --------------------------------------------------------------------------
+def _legacy_fm_pass(hga, part, k, cap, steps):
+    import jax
+    import jax.numpy as jnp
+    from repro.core import metrics
+    from repro.core.refine import NEG
+
+    n_pad = hga.n_pad
+    valid = (jnp.arange(n_pad) < hga.n) & (hga.vertex_weights > 0)
+    phi0 = metrics.pins_in_block(hga, part, k)
+    bw0 = metrics.block_weights(hga, part, k)
+    cut0 = metrics.cutsize(hga, part, k)
+
+    def step(carry, _):
+        part, phi, bw, locked, cur_cut, best_cut, best_part = carry
+        gains = metrics.gain_matrix(hga, part, k, phi=phi)
+        own = jax.nn.one_hot(part, k, dtype=bool)
+        feasible = (bw[None, :] + hga.vertex_weights[:, None]) <= cap + 1e-6
+        score = jnp.where(own | ~feasible, NEG, gains)
+        score = jnp.where((locked | ~valid)[:, None], NEG, score)
+        flat = jnp.argmax(score)
+        v = (flat // k).astype(jnp.int32)
+        j = (flat % k).astype(jnp.int32)
+        g = score.reshape(-1)[flat]
+        do = g > NEG / 2
+        b = part[v]
+        d = jax.ops.segment_sum(
+            (hga.pin_vertex == v).astype(jnp.int32), hga.pin_edge,
+            num_segments=hga.m_pad)
+        delta = (jax.nn.one_hot(j, k, dtype=phi.dtype)
+                 - jax.nn.one_hot(b, k, dtype=phi.dtype))
+        part = jnp.where(do, part.at[v].set(j), part)
+        phi = jnp.where(do, phi + d[:, None] * delta[None, :], phi)
+        bw = jnp.where(do, bw + hga.vertex_weights[v] * delta, bw)
+        locked = locked.at[v].set(jnp.where(do, True, locked[v]))
+        cur_cut = jnp.where(do, cur_cut - g, cur_cut)
+        better = do & (cur_cut < best_cut - 1e-9)
+        best_cut = jnp.where(better, cur_cut, best_cut)
+        best_part = jnp.where(better, part, best_part)
+        return (part, phi, bw, locked, cur_cut, best_cut, best_part), None
+
+    locked0 = jnp.zeros(n_pad, bool)
+    init = (part, phi0, bw0, locked0, cut0, cut0, part)
+    (_, _, _, _, _, best_cut, best_part), _ = jax.lax.scan(
+        step, init, None, length=steps)
+    return best_part, best_cut
+
+
+def _get_legacy_fm_pass_jit():
+    import jax
+    return jax.jit(_legacy_fm_pass, static_argnames=("k", "steps"))
+
+
+def _legacy_fm_refine(fm_pass_jit, hga, part, k, eps):
+    from repro.core import metrics
+    from repro.core.refine import pad_part
+    cap = metrics.balance_cap(hga.total_weight, k, eps)
+    part = pad_part(part, hga.n_pad)
+    cut = float(metrics.cutsize_jit(hga, part, k))
+    steps = int(min(hga.n_pad, 1024))
+    for _ in range(8):
+        cand, c = fm_pass_jit(hga, part, k, cap, steps)
+        c = float(c)
+        if c < cut - 1e-6:
+            part, cut = cand, c
+        else:
+            break
+    return np.asarray(part), cut
+
+
+def _uncoarsen_refine_phase(hier, parts0, k, eps, mode, lp_iters,
+                            fm_node_limit, fm_pass_jit=None):
+    """The phase impart_partition runs between recombination rounds, in
+    either engine.  ``looped`` replicates the removed per-member loop."""
+    from repro.core import refine as refine_mod
+    parts = parts0.copy()
+    cuts = None
+    num = len(hier.levels)
+    for li in range(num - 1, -1, -1):
+        lv = hier.levels[li]
+        if li < num - 1:
+            parts = parts[:, hier.levels[li + 1].cluster_id]
+        hga = lv.hg.arrays()
+        if mode == "batched":
+            pp, cuts = refine_mod.refine_population(
+                hga, parts, k, eps, fm_node_limit=fm_node_limit,
+                max_iters=lp_iters)
+            parts = pp[:, : lv.hg.n]
+        else:
+            ps, cs = [], []
+            for a in range(parts.shape[0]):
+                q, c = refine_mod.lp_refine(hga, parts[a], k, eps,
+                                            max_iters=lp_iters)
+                if int(hga.n) <= fm_node_limit:
+                    q, c = _legacy_fm_refine(fm_pass_jit, hga, q, k, eps)
+                ps.append(np.asarray(q)[: lv.hg.n])
+                cs.append(c)
+            parts = np.stack(ps)
+            cuts = np.asarray(cs, np.float64)
+    return parts, cuts
+
+
+def bench_population(quick: bool = False, out=sys.stdout,
+                     json_path: str = "BENCH_population.json"):
+    """Batched population engine vs the removed per-member loop.
+
+    alpha=7 / k=64 on a scaled gsm_switch-like netlist; both engines run
+    the identical uncoarsening+refinement phase (same config, bit-equal
+    per-member cuts) — only the dispatch strategy differs.
+    """
+    from repro.core.coarsen import coarsen
+    from repro.core.initial_partition import initial_partition
+
+    design = "gsm_switch_like"
+    alpha, k, eps = 7, 64, 0.08
+    lp_iters, fm_node_limit = 16, 4096
+    hg = titan_like(design, scale=0.02)
+    hier = coarsen(hg, k, seed=11, contraction_limit_factor=4)
+
+    parts0 = np.stack([
+        np.asarray(initial_partition(hier.coarsest, k, eps, seed=101 + i,
+                                     tries_per_strategy=1)[0],
+                   np.int32)[: hier.coarsest.n]
+        for i in range(alpha)])
+
+    fm_pass_jit = _get_legacy_fm_pass_jit()
+    phase = partial(_uncoarsen_refine_phase, hier, parts0, k, eps,
+                    lp_iters=lp_iters, fm_node_limit=fm_node_limit,
+                    fm_pass_jit=fm_pass_jit)
+    reps = 1 if quick else 2
+    results = {}
+    for mode in ("looped", "batched"):
+        phase(mode=mode)  # warm-up / compile
+        times = []
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            parts, cuts = phase(mode=mode)
+            times.append(time.perf_counter() - t0)
+        results[mode] = {"wall_s": min(times), "cuts": cuts}
+
+    looped, batched = results["looped"], results["batched"]
+    cuts_equal = bool(np.array_equal(looped["cuts"], batched["cuts"]))
+    if not cuts_equal:
+        raise RuntimeError(
+            "batched engine diverged from the looped baseline: "
+            f"looped={looped['cuts']} batched={batched['cuts']} — the "
+            "speedup below would compare non-equivalent work")
+    speedup = looped["wall_s"] / batched["wall_s"]
+    print("table,design,alpha,k,engine,wall_s,speedup,cuts_equal", file=out)
+    for mode in ("looped", "batched"):
+        print(f"population,{design},{alpha},{k},{mode},"
+              f"{results[mode]['wall_s']:.2f},"
+              f"{speedup if mode == 'batched' else 1.0:.2f},"
+              f"{cuts_equal}", file=out)
+
+    record = {
+        "bench": "population_refinement",
+        "design": design, "n": hg.n, "m": hg.m,
+        "levels": hier.sizes(),
+        "alpha": alpha, "k": k, "eps": eps,
+        "lp_iters": lp_iters, "fm_node_limit": fm_node_limit,
+        "looped_wall_s": round(looped["wall_s"], 3),
+        "batched_wall_s": round(batched["wall_s"], 3),
+        "speedup": round(speedup, 3),
+        "cuts_equal": cuts_equal,
+        "per_member_cuts": [float(c) for c in batched["cuts"]],
+    }
+    with open(json_path, "w") as f:
+        json.dump(record, f, indent=2)
+        f.write("\n")
+    print(f"# wrote {json_path} (speedup {speedup:.2f}x, "
+          f"cuts_equal={cuts_equal})", file=out)
+    return record
 
 
 def run(quick: bool = False, out=sys.stdout):
@@ -24,6 +214,7 @@ def run(quick: bool = False, out=sys.stdout):
             print(f"largek,gsm_switch_like,{k},{eps},{m},"
                   f"{res[m]['cut']:.0f},{res[m]['cut'] / ref:.4f},"
                   f"{res[m]['wall_s']:.1f}", file=out)
+    bench_population(quick=quick, out=out)
     return None
 
 

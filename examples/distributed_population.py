@@ -19,6 +19,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import metrics, refine
+from repro.jaxcompat import make_mesh, use_mesh
 from repro.core.population import make_population_step
 from repro.data.hypergraphs import titan_like
 
@@ -26,8 +27,7 @@ from repro.data.hypergraphs import titan_like
 def main():
     hg = titan_like("segmentation_like", scale=0.08)
     k, eps = 8, 0.08
-    mesh = jax.make_mesh((4, 2), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_mesh((4, 2), ("data", "model"))
     print(f"netlist {hg.n}x{hg.m}; mesh data=4 (population ring) x "
           f"model=2 (pin-parallel); k={k}")
 
@@ -40,7 +40,7 @@ def main():
         p = rng.integers(0, k, hg.n).astype(np.int32)
         parts[i, : hg.n] = refine.rebalance(hg.vertex_weights, p, k, eps,
                                             rng)
-    with jax.set_mesh(mesh):
+    with use_mesh(mesh):
         p = jnp.asarray(parts)
         for it in range(6):
             p, cuts = step(hga.pin_vertex, hga.pin_edge,

@@ -23,6 +23,7 @@ from repro.checkpoint import CheckpointManager
 from repro.runtime import (Runner, ElasticTrainer, FailureInjector,
                            StragglerWatchdog)
 from repro.data.lm_data import TokenStream, Prefetcher
+from repro.jaxcompat import use_mesh
 from repro.launch.mesh import make_local_mesh
 
 
@@ -74,7 +75,7 @@ def main():
                       injector=injector, watchdog=StragglerWatchdog())
 
     mesh = make_local_mesh()
-    with jax.set_mesh(mesh):
+    with use_mesh(mesh):
         t0 = time.perf_counter()
         trainer = ElasticTrainer(make_runner, max_restarts=2)
         # probe a few losses manually first for the report

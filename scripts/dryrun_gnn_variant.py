@@ -18,6 +18,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro.jaxcompat import use_mesh
 from repro.launch.mesh import make_production_mesh
 from repro.launch.hlo_analysis import analyze_hlo
 from repro.configs.registry import get_arch, get_opt
@@ -85,7 +86,7 @@ def main():
         lambda p: NamedSharding(mesh, p), tree,
         is_leaf=lambda x: isinstance(x, P))
     batch_specs = {k: specs[k] for k in batch_sds}
-    with jax.set_mesh(mesh):
+    with use_mesh(mesh):
         lowered = jax.jit(
             train_step,
             in_shardings=(to_sh(state_specs), to_sh(batch_specs)),

@@ -52,14 +52,6 @@ class ImpartResult:
     levels: List[int]
 
 
-def _refine_member(hga, part, k, eps, cfg: ImpartConfig):
-    part, cut = refine_mod.lp_refine(hga, part, k, eps,
-                                     max_iters=cfg.lp_iters)
-    if int(hga.n) <= cfg.fm_node_limit:
-        part, cut = refine_mod.fm_refine(hga, part, k, eps)
-    return np.asarray(part), cut
-
-
 def impart_partition(hg: Hypergraph, cfg: ImpartConfig) -> ImpartResult:
     t0 = time.perf_counter()
     k, eps = cfg.k, cfg.eps
@@ -70,14 +62,16 @@ def impart_partition(hg: Hypergraph, cfg: ImpartConfig) -> ImpartResult:
     thresholds = recombination_thresholds(n, n_c, cfg.beta)
 
     # alpha diverse initial solutions (distinct seeds, like the paper's
-    # seeds -1..5)
-    parts: List[np.ndarray] = []
-    cuts: List[float] = []
+    # seeds -1..5); from here on the population lives as ONE stacked
+    # tensor parts[alpha, n] and every refinement is a batched dispatch.
+    init: List[np.ndarray] = []
+    cuts = np.zeros(cfg.alpha, np.float64)
     for i in range(cfg.alpha):
         p, c = initial_partition(coarsest, k, eps, seed=cfg.seed * 101 + i,
                                  tries_per_strategy=1)
-        parts.append(p)
-        cuts.append(c)
+        init.append(np.asarray(p, np.int32)[: n_c])
+        cuts[i] = c
+    parts = np.stack(init)                                   # [alpha, n_c]
 
     trace: List[tuple] = [(n_c, list(cuts), "init")]
     next_thr = 0
@@ -87,12 +81,13 @@ def impart_partition(hg: Hypergraph, cfg: ImpartConfig) -> ImpartResult:
         lv = hier.levels[li]
         if li < num_levels - 1:
             cmap = hier.levels[li + 1].cluster_id
-            parts = [p[cmap] for p in parts]
+            parts = parts[:, cmap]
         hga = lv.hg.arrays()
-        # refine every member at this level
-        for a in range(cfg.alpha):
-            parts[a], cuts[a] = _refine_member(hga, parts[a], k, eps, cfg)
-            parts[a] = parts[a][: lv.hg.n]
+        # one batched lp/FM dispatch refines all alpha members together
+        parts, cuts = refine_mod.refine_population(
+            hga, parts, k, eps, fm_node_limit=cfg.fm_node_limit,
+            max_iters=cfg.lp_iters)
+        parts = parts[:, : lv.hg.n]
         trace.append((lv.hg.n, list(cuts), "refine"))
 
         # fire the geometric-threshold recombination rounds
@@ -113,17 +108,16 @@ def impart_partition(hg: Hypergraph, cfg: ImpartConfig) -> ImpartResult:
             # fast-forward: project straight to the finest level and refine
             for lj in range(li - 1, -1, -1):
                 cmapj = hier.levels[lj + 1].cluster_id
-                parts = [p[cmapj] for p in parts]
+                parts = parts[:, cmapj]
             hga0 = hier.original.arrays()
-            for a in range(cfg.alpha):
-                parts[a], cuts[a] = refine_mod.lp_refine(
-                    hga0, parts[a], k, eps, max_iters=4)
-                parts[a] = np.asarray(parts[a])[: hg.n]
+            parts, cuts = refine_mod.lp_refine_population(
+                hga0, parts, k, eps, max_iters=4)
+            parts = parts[:, : hg.n]
             trace.append((hg.n, list(cuts), "budget-exhausted"))
             break
 
     best = int(np.argmin(cuts))
-    part, cut = parts[best][: hg.n], cuts[best]
+    part, cut = parts[best][: hg.n], float(cuts[best])
     for v in range(cfg.final_vcycles):
         if cfg.time_budget_s and time.perf_counter() - t0 > cfg.time_budget_s:
             break

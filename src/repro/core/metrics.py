@@ -123,6 +123,42 @@ def cut_edge_indicator(hga: HypergraphArrays, part: jnp.ndarray, k: int):
     return (lam > 1).astype(jnp.float32)
 
 
+# --------------------------------------------------------------------------
+# Population-batched variants: parts is [alpha, n_pad], one hypergraph
+# shared by all members.  These are the building blocks of the batched
+# refinement engine (refine.lp_refine_population et al.) — one XLA
+# dispatch covers the whole population.
+# --------------------------------------------------------------------------
+def _over_parts(fn):
+    """vmap a (hga, part, k) metric over a leading population axis."""
+    return jax.vmap(fn, in_axes=(None, 0, None))
+
+
+block_weights_population = jax.jit(
+    _over_parts(block_weights), static_argnums=2)       # [alpha, k]
+pins_in_block_population = jax.jit(
+    _over_parts(pins_in_block), static_argnums=2)       # [alpha, m_pad, k]
+connectivity_population = jax.jit(
+    _over_parts(connectivity), static_argnums=2)        # [alpha, m_pad]
+cutsize_population = jax.jit(
+    _over_parts(cutsize), static_argnums=2)             # [alpha]
+gain_matrix_population = jax.jit(
+    _over_parts(lambda hga, part, k: gain_matrix(hga, part, k)),
+    static_argnums=2)                                   # [alpha, n_pad, k]
+
+
+@partial(jax.jit, static_argnames=("k",))
+def edge_distance_matrix(hga: HypergraphArrays, parts: jnp.ndarray, k: int
+                         ) -> jnp.ndarray:
+    """All-pairs label-invariant d_e between population members:
+    one batched connectivity dispatch instead of alpha^2 pairwise calls.
+    Returns [alpha, alpha] int32."""
+    lam = _over_parts(connectivity)(hga, parts, k)       # [alpha, m_pad]
+    valid = (jnp.arange(hga.m_pad) < hga.m)[None, None, :]
+    diff = jnp.abs(lam[:, None, :] - lam[None, :, :])
+    return jnp.where(valid, diff, 0).sum(-1).astype(jnp.int32)
+
+
 # Convenient jitted entry points (k is static)
 cutsize_jit = jax.jit(cutsize, static_argnums=2)
 km1_jit = jax.jit(km1, static_argnums=2)

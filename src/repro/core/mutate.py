@@ -24,50 +24,67 @@ from . import refine as refine_mod
 from .vcycle import vcycle
 
 
-def similarity_sets(hga, parts: List[np.ndarray], cuts: List[float], k: int,
+def similarity_sets(hga, parts, cuts, k: int,
                     threshold: float) -> List[List[int]]:
     """M(S_j) for each offspring, computed with the label-invariant
-    edge-based metric d_e (paper Eq. 2)."""
+    edge-based metric d_e (paper Eq. 2).
+
+    All alpha^2 pairwise distances come from ONE batched connectivity
+    dispatch (``metrics.edge_distance_matrix``) instead of alpha^2
+    individual ``edge_distance`` calls.
+    """
     alpha = len(parts)
-    order = np.argsort(cuts, kind="stable")  # ascending cut = best first
-    padded = [refine_mod.pad_part(p, hga.n_pad) for p in parts]
+    order = np.argsort(np.asarray(cuts), kind="stable")  # best first
+    padded = refine_mod.pad_parts(parts, hga.n_pad)
+    dmat = np.asarray(metrics.edge_distance_matrix(hga, padded, k))
     msets: List[List[int]] = [[] for _ in range(alpha)]
     for pos_j in range(alpha):
         j = int(order[pos_j])
         for pos_i in range(pos_j):
             i = int(order[pos_i])
-            d = float(metrics.edge_distance_jit(hga, padded[i], padded[j], k))
-            if d < threshold:
+            if dmat[i, j] < threshold:
                 msets[j].append(i)
     return msets
 
 
-def mutate_population(hg: Hypergraph, parts: List[np.ndarray],
-                      cuts: List[float], k: int, eps: float,
+def mutate_population(hg: Hypergraph, parts, cuts, k: int, eps: float,
                       threshold: float = 20.0, mu: float = 0.1,
-                      seed: int = 0) -> Tuple[List[np.ndarray], List[float]]:
+                      seed: int = 0) -> Tuple[np.ndarray, np.ndarray]:
     """Apply the mutation operator to every offspring with a non-empty
-    similarity set.  Returns the updated population."""
+    similarity set.  Returns the updated population (stacked).
+
+    The per-member cut indicators C(e) come from one batched connectivity
+    dispatch over the whole population; the V-cycle re-partition stays
+    per-member because each runs on a DIFFERENTLY reweighted hypergraph
+    (its own partition-aware hierarchy).
+    """
     hga = hg.arrays()
+    alpha = len(parts)
     msets = similarity_sets(hga, parts, cuts, k, threshold)
-    new_parts = [p.copy() for p in parts]
-    new_cuts = list(cuts)
+    new_parts = np.stack([np.asarray(p, np.int32)[: hg.n] for p in parts])
+    new_cuts = np.asarray(cuts, np.float64).copy()
+
+    # [alpha, m] cut indicators for every member, one dispatch
+    lam_all = np.asarray(metrics.connectivity_population(
+        hga, refine_mod.pad_parts(parts, hga.n_pad), k))[:, : hg.m]
+    cut_ind = (lam_all > 1).astype(np.float64)
+
+    mutated_js: List[int] = []
     for j, mset in enumerate(msets):
         if not mset:
             continue
-        # C(e): how many similar offspring cut edge e
-        c_e = np.zeros(hg.m, np.float64)
-        for i in mset:
-            lam = np.asarray(metrics.connectivity_jit(
-                hga, refine_mod.pad_part(parts[i], hga.n_pad), k))[: hg.m]
-            c_e += (lam > 1)
+        c_e = cut_ind[np.asarray(mset, np.int64)].sum(axis=0)
         w_prime = hg.edge_weights * (1.0 + mu * c_e)
         reweighted = hg.with_edge_weights(w_prime.astype(np.float32))
-        # V-cycle on the reweighted hypergraph, warm from S_j; report true cut
-        mutated, _ = vcycle(reweighted, parts[j], k, eps,
+        # V-cycle on the reweighted hypergraph, warm from S_j
+        mutated, _ = vcycle(reweighted, new_parts[j], k, eps,
                             seed=seed * 7919 + j)
-        true_cut = float(metrics.cutsize_jit(
-            hga, refine_mod.pad_part(mutated, hga.n_pad), k))
-        new_parts[j] = mutated
-        new_cuts[j] = true_cut
+        new_parts[j] = np.asarray(mutated, np.int32)[: hg.n]
+        mutated_js.append(j)
+
+    if mutated_js:  # report true (unweighted) cuts, one batched dispatch
+        true = np.asarray(metrics.cutsize_population(
+            hga, refine_mod.pad_parts(new_parts[mutated_js], hga.n_pad), k),
+            np.float64)
+        new_cuts[mutated_js] = true
     return new_parts, new_cuts

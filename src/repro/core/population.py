@@ -32,6 +32,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from ..jaxcompat import shard_map
 from .hypergraph import HypergraphArrays
 from .refine import accept_moves, NEG
 
@@ -183,6 +184,5 @@ def make_population_step(mesh, *, n: int, m: int, k: int, eps: float = 0.03,
     in_specs = (P(pin_axis), P(pin_axis), P(None), P(None), P(None),
                 P(pop_axes, None))
     out_specs = (P(pop_axes, None), P(pop_axes))
-    fn = jax.shard_map(body, mesh=mesh, in_specs=in_specs,
-                       out_specs=out_specs, check_vma=False)
+    fn = shard_map(body, mesh=mesh, in_specs=in_specs, out_specs=out_specs)
     return jax.jit(fn)

@@ -39,22 +39,37 @@ def overlay_clustering(part_a: np.ndarray, part_b: np.ndarray, k: int
 
 
 def _ils_clustered(chg: Hypergraph, k: int, eps: float, warm: np.ndarray,
-                   seed: int, restarts: int = 6, kick: float = 0.15
-                   ) -> Tuple[np.ndarray, float]:
-    """Iterated local search on the clustered hypergraph."""
+                   seed: int, restarts: int = 6, kick: float = 0.15,
+                   waves: int = 2) -> Tuple[np.ndarray, float]:
+    """Iterated local search on the clustered hypergraph.
+
+    The restarts are population-batched: each wave perturbs the incumbent
+    ``restarts / waves`` times and refines ALL candidates in one batched
+    FM dispatch (instead of ``restarts`` sequential FM runs); elitism
+    across waves keeps the search monotone.
+    """
     rng = np.random.default_rng(seed)
     hga = chg.arrays()
     part, cut = refine_mod.fm_refine(hga, warm, k, eps)
-    best, best_cut = part.copy(), cut
-    for _ in range(restarts):
-        cand = best[: chg.n].copy()
-        nk = max(1, int(kick * chg.n))
-        idx = rng.choice(chg.n, size=nk, replace=False)
-        cand[idx] = rng.integers(0, k, size=nk)
-        cand = refine_mod.rebalance(chg.vertex_weights, cand, k, eps, rng)
-        cand, c = refine_mod.fm_refine(hga, cand, k, eps)
-        if c < best_cut - 1e-9:
-            best, best_cut = cand.copy(), c
+    best, best_cut = np.asarray(part).copy(), cut
+    waves = max(1, min(waves, restarts))
+    per_wave = [restarts // waves + (1 if w < restarts % waves else 0)
+                for w in range(waves)]
+    for n_cands in per_wave:
+        if n_cands <= 0:
+            continue
+        cands = []
+        for _ in range(n_cands):
+            cand = best[: chg.n].copy()
+            nk = max(1, int(kick * chg.n))
+            idx = rng.choice(chg.n, size=nk, replace=False)
+            cand[idx] = rng.integers(0, k, size=nk).astype(np.int32)
+            cands.append(refine_mod.rebalance(
+                chg.vertex_weights, cand, k, eps, rng))
+        pp, cc = refine_mod.fm_refine_population(hga, cands, k, eps)
+        i = int(np.argmin(cc))
+        if cc[i] < best_cut - 1e-9:
+            best, best_cut = pp[i].copy(), float(cc[i])
     return best, best_cut
 
 
@@ -98,15 +113,23 @@ def recombine(hg: Hypergraph, part_a: np.ndarray, part_b: np.ndarray,
     return better.copy(), better_cut  # elitism
 
 
-def ring_recombination(hg: Hypergraph, parts: list, cuts: list, k: int,
-                       eps: float, seed: int = 0) -> Tuple[list, list]:
-    """Paper's circular pairing: (1,2), (2,3), ..., (alpha, 1)."""
+def ring_recombination(hg: Hypergraph, parts, cuts, k: int,
+                       eps: float, seed: int = 0
+                       ) -> Tuple[np.ndarray, np.ndarray]:
+    """Paper's circular pairing: (1,2), (2,3), ..., (alpha, 1).
+
+    Accepts the population as a stacked [alpha, n] tensor (or a list of
+    vectors) and returns the offspring stacked the same way.  The pairwise
+    overlay/merge is irregular host work per pair; the solver inside each
+    ``recombine`` call uses the batched refinement engine.
+    """
     alpha = len(parts)
     new_parts, new_cuts = [], []
     for i in range(alpha):
         j = (i + 1) % alpha
-        off, c = recombine(hg, parts[i], parts[j], cuts[i], cuts[j],
+        off, c = recombine(hg, parts[i], parts[j],
+                           float(cuts[i]), float(cuts[j]),
                            k, eps, seed=seed * 1009 + i)
-        new_parts.append(off)
+        new_parts.append(np.asarray(off, np.int32)[: hg.n])
         new_cuts.append(c)
-    return new_parts, new_cuts
+    return np.stack(new_parts), np.asarray(new_cuts, np.float64)

@@ -36,6 +36,20 @@ def pad_part(part, n_pad: int) -> jnp.ndarray:
         [part, jnp.zeros(n_pad - part.shape[0], jnp.int32)])
 
 
+def pad_parts(parts, n_pad: int) -> jnp.ndarray:
+    """Stack a population (list of [n] vectors or an [alpha, n] array)
+    into a padded [alpha, n_pad] tensor."""
+    if isinstance(parts, (list, tuple)):
+        return jnp.stack([pad_part(p, n_pad) for p in parts])
+    parts = jnp.asarray(parts, jnp.int32)
+    if parts.ndim != 2:
+        raise ValueError(f"expected [alpha, n] population, got {parts.shape}")
+    if parts.shape[1] == n_pad:
+        return parts
+    pad = jnp.zeros((parts.shape[0], n_pad - parts.shape[1]), jnp.int32)
+    return jnp.concatenate([parts, pad], axis=1)
+
+
 # --------------------------------------------------------------------------
 # label propagation round (jitted)
 # --------------------------------------------------------------------------
@@ -69,18 +83,12 @@ def accept_moves(part: jnp.ndarray, target: jnp.ndarray, gain: jnp.ndarray,
     return jnp.where(accept, target, part)
 
 
-@partial(jax.jit, static_argnames=("k",))
-def lp_round(hga: HypergraphArrays, part: jnp.ndarray, k: int,
-             cap: jnp.ndarray, frac: jnp.ndarray,
-             edge_weight_override: jnp.ndarray | None = None
-             ) -> jnp.ndarray:
-    """One parallel move round; returns the new partition.
-
-    ``frac`` in (0,1]: accept only the top fraction of positive-gain
-    proposals (the host halves it on conflict-induced regressions).
-    ``edge_weight_override`` lets mutation bias gains without touching the
-    real weights.
-    """
+def _lp_round_impl(hga: HypergraphArrays, part: jnp.ndarray, k: int,
+                   cap: jnp.ndarray, frac: jnp.ndarray,
+                   edge_weight_override: jnp.ndarray | None = None
+                   ) -> jnp.ndarray:
+    """lp_round body (unjitted; shared by the scalar and the vmapped
+    population entry points)."""
     h = hga
     if edge_weight_override is not None:
         h = HypergraphArrays(hga.pin_vertex, hga.pin_edge,
@@ -98,6 +106,37 @@ def lp_round(hga: HypergraphArrays, part: jnp.ndarray, k: int,
     bw = metrics.block_weights(h, part, k)
     return accept_moves(part, best_j, best_g, propose, h.vertex_weights,
                         bw, cap, frac, k)
+
+
+@partial(jax.jit, static_argnames=("k",))
+def lp_round(hga: HypergraphArrays, part: jnp.ndarray, k: int,
+             cap: jnp.ndarray, frac: jnp.ndarray,
+             edge_weight_override: jnp.ndarray | None = None
+             ) -> jnp.ndarray:
+    """One parallel move round; returns the new partition.
+
+    ``frac`` in (0,1]: accept only the top fraction of positive-gain
+    proposals (the host halves it on conflict-induced regressions).
+    ``edge_weight_override`` lets mutation bias gains without touching the
+    real weights.
+    """
+    return _lp_round_impl(hga, part, k, cap, frac, edge_weight_override)
+
+
+@partial(jax.jit, static_argnames=("k",))
+def lp_round_population(hga: HypergraphArrays, parts: jnp.ndarray, k: int,
+                        cap: jnp.ndarray, fracs: jnp.ndarray,
+                        edge_weight_override: jnp.ndarray | None = None
+                        ) -> jnp.ndarray:
+    """One parallel move round for ALL population members in a single
+    dispatch.  ``parts`` [alpha, n_pad]; ``fracs`` [alpha] per-member
+    acceptance fraction (the host anneals them independently)."""
+    def one(part, frac):
+        return _lp_round_impl(hga, part, k, cap, frac,
+                              edge_weight_override)
+    return jax.vmap(one)(parts, fracs)
+
+
 
 
 def lp_refine(hga: HypergraphArrays, part: np.ndarray, k: int, eps: float,
@@ -128,22 +167,86 @@ def lp_refine(hga: HypergraphArrays, part: np.ndarray, k: int, eps: float,
     return np.asarray(part), cut
 
 
+def lp_refine_population(hga: HypergraphArrays, parts, k: int, eps: float,
+                         max_iters: int = 24, patience: int = 3,
+                         edge_weight_override=None
+                         ) -> Tuple[np.ndarray, np.ndarray]:
+    """Batched ``lp_refine``: one XLA dispatch per round covers the whole
+    population.
+
+    Control state (acceptance fraction, stall counter, convergence) is
+    tracked PER MEMBER on the host, so each member follows exactly the
+    trajectory the scalar ``lp_refine`` would give it — the batched and
+    looped paths agree bit-for-bit on integer-weight instances.
+    Returns (parts [alpha, n_pad], cuts [alpha]).
+    """
+    cap = metrics.balance_cap(hga.total_weight, k, eps)
+    parts = pad_parts(parts, hga.n_pad)
+    alpha = parts.shape[0]
+    cuts = np.asarray(metrics.cutsize_population(hga, parts, k), np.float64)
+    stall = np.zeros(alpha, np.int32)
+    done = np.zeros(alpha, bool)
+    fracs = np.ones(alpha, np.float32)
+    for _ in range(max_iters):
+        fracs[:] = 1.0
+        improved = np.zeros(alpha, bool)
+        for _attempt in range(5):
+            active = ~done & ~improved
+            if not active.any():
+                break
+            # compact to the active subpopulation: converged / already-
+            # improved members cost nothing, mirroring the scalar loop's
+            # early exits (per-member trajectories are unchanged).  Each
+            # distinct active count traces once — bounded by alpha, paid
+            # once per padded-shape bucket, then pure hot-path savings
+            # (padding to pow2 sizes would waste up to 40% compute every
+            # round to save a handful of one-time compiles).
+            idx = np.nonzero(active)[0]
+            sub = parts[jnp.asarray(idx)] if len(idx) < alpha else parts
+            cands = lp_round_population(hga, sub, k, cap,
+                                        jnp.asarray(fracs[idx]),
+                                        edge_weight_override)
+            cs = np.asarray(metrics.cutsize_population(hga, cands, k),
+                            np.float64)
+            take = cs < cuts[idx] - 1e-6
+            if take.any():
+                tidx = idx[take]
+                parts = parts.at[jnp.asarray(tidx)].set(
+                    cands[jnp.asarray(take)])
+                cuts[tidx] = cs[take]
+                improved[tidx] = True
+            fracs[idx[~take]] *= 0.25
+        stall = np.where(improved, 0, stall + 1).astype(np.int32)
+        done |= stall >= patience
+        if done.all():
+            break
+    return np.asarray(parts), cuts
+
+
 # --------------------------------------------------------------------------
 # sequential FM (scan) for coarse levels
 # --------------------------------------------------------------------------
-@partial(jax.jit, static_argnames=("k", "steps"))
-def _fm_pass(hga: HypergraphArrays, part: jnp.ndarray, k: int,
-             cap: jnp.ndarray, steps: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
+def _fm_pass_impl(hga: HypergraphArrays, part: jnp.ndarray, k: int,
+                  cap: jnp.ndarray, steps: int
+                  ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """One FM pass: up to ``steps`` single moves (negative gains allowed),
-    returns the best prefix (partition + its cut)."""
+    returns the best prefix (partition + its cut).
+
+    The move loop is a ``while_loop`` that exits as soon as no feasible
+    move exists (every vertex locked or infeasible) — once ``do`` turns
+    False the state is frozen, so cutting the remaining iterations is
+    exactly equivalent to the fixed-length scan it replaces, at a
+    fraction of the cost.  Under ``vmap`` (the population path) the loop
+    runs until ALL members are done; finished members' lanes are inert.
+    """
     n_pad = hga.n_pad
     valid = (jnp.arange(n_pad) < hga.n) & (hga.vertex_weights > 0)
     phi0 = metrics.pins_in_block(hga, part, k)
     bw0 = metrics.block_weights(hga, part, k)
     cut0 = metrics.cutsize(hga, part, k)
 
-    def step(carry, _):
-        part, phi, bw, locked, cur_cut, best_cut, best_part = carry
+    def body(carry):
+        part, phi, bw, locked, cur_cut, best_cut, best_part, t, _ = carry
         gains = metrics.gain_matrix(hga, part, k, phi=phi)    # [n_pad, k]
         own = jax.nn.one_hot(part, k, dtype=bool)
         feasible = (bw[None, :] + hga.vertex_weights[:, None]) <= cap + 1e-6
@@ -174,13 +277,31 @@ def _fm_pass(hga: HypergraphArrays, part: jnp.ndarray, k: int,
         better = do & (cur_cut < best_cut - 1e-9)
         best_cut = jnp.where(better, cur_cut, best_cut)
         best_part = jnp.where(better, part, best_part)
-        return (part, phi, bw, locked, cur_cut, best_cut, best_part), None
+        return (part, phi, bw, locked, cur_cut, best_cut, best_part,
+                t + 1, do)
+
+    def cond(carry):
+        t, alive = carry[-2], carry[-1]
+        return (t < steps) & alive
 
     locked0 = jnp.zeros(n_pad, bool)
-    init = (part, phi0, bw0, locked0, cut0, cut0, part)
-    (_, _, _, _, _, best_cut, best_part), _ = jax.lax.scan(
-        step, init, None, length=steps)
-    return best_part, best_cut
+    init = (part, phi0, bw0, locked0, cut0, cut0, part,
+            jnp.int32(0), jnp.bool_(True))
+    out = jax.lax.while_loop(cond, body, init)
+    return out[6], out[5]
+
+
+_fm_pass = jax.jit(_fm_pass_impl, static_argnames=("k", "steps"))
+
+
+@partial(jax.jit, static_argnames=("k", "steps"))
+def _fm_pass_population(hga: HypergraphArrays, parts: jnp.ndarray, k: int,
+                        cap: jnp.ndarray, steps: int
+                        ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """One FM pass for all members: a single [alpha]-batched move scan
+    instead of alpha sequential scans."""
+    return jax.vmap(
+        lambda p: _fm_pass_impl(hga, p, k, cap, steps))(parts)
 
 
 def fm_refine(hga: HypergraphArrays, part: np.ndarray, k: int, eps: float,
@@ -202,6 +323,68 @@ def fm_refine(hga: HypergraphArrays, part: np.ndarray, k: int, eps: float,
     return np.asarray(part), cut
 
 
+def _population_shard_devices():
+    """Local devices for population sharding.  Returns None on a single-
+    device host (tests pin one device; TPU/GPU pods and CPU hosts with
+    ``--xla_force_host_platform_device_count`` expose several)."""
+    devs = jax.local_devices()
+    return devs if len(devs) > 1 else None
+
+
+def fm_refine_population(hga: HypergraphArrays, parts, k: int, eps: float,
+                         max_passes: int = 8,
+                         step_budget: int | None = None
+                         ) -> Tuple[np.ndarray, np.ndarray]:
+    """Batched ``fm_refine`` with per-member pass acceptance: a member
+    stops improving exactly when the scalar loop would have broken.
+
+    When the host exposes several devices the active subpopulation is
+    sharded across them in contiguous chunks — jax's async dispatch runs
+    the chunk scans concurrently (the FM scan's scatter ops do not
+    intra-op parallelise, so this is where multi-core actually comes
+    from).  Chunking never changes results: members are row-independent.
+    """
+    cap = metrics.balance_cap(hga.total_weight, k, eps)
+    parts = np.array(pad_parts(parts, hga.n_pad))  # writable host copy
+    alpha = parts.shape[0]
+    cuts = np.asarray(metrics.cutsize_population(hga, parts, k), np.float64)
+    steps = step_budget or int(min(hga.n_pad, 1024))
+    done = np.zeros(alpha, bool)
+    devs = _population_shard_devices() if alpha > 1 else None
+    if devs:
+        hga_d = [jax.device_put(hga, d) for d in devs]
+        cap_d = [jax.device_put(cap, d) for d in devs]
+    for _ in range(max_passes):
+        idx = np.nonzero(~done)[0]  # compact: finished members drop out
+        if len(idx) == 0:
+            break
+        sub = parts[idx]
+        if devs and len(idx) > 1:
+            ndev = min(len(devs), len(idx))
+            bounds = [len(idx) * d // ndev for d in range(ndev + 1)]
+            outs = []
+            for di in range(ndev):  # async dispatch -> concurrent chunks
+                chunk = jax.device_put(
+                    jnp.asarray(sub[bounds[di]:bounds[di + 1]]), devs[di])
+                outs.append(_fm_pass_population(
+                    hga_d[di], chunk, k, cap_d[di], steps))
+            cands = np.concatenate([np.asarray(o[0]) for o in outs])
+            cs = np.concatenate(
+                [np.asarray(o[1]) for o in outs]).astype(np.float64)
+        else:
+            cands, cs = _fm_pass_population(hga, jnp.asarray(sub), k, cap,
+                                            steps)
+            cands = np.asarray(cands)
+            cs = np.asarray(cs, np.float64)
+        take = cs < cuts[idx] - 1e-6
+        if take.any():
+            tidx = idx[take]
+            parts[tidx] = cands[take]
+            cuts[tidx] = cs[take]
+        done[idx[~take]] = True
+    return parts, cuts
+
+
 # --------------------------------------------------------------------------
 # combined per-level refinement + balance safety net
 # --------------------------------------------------------------------------
@@ -213,12 +396,32 @@ def refine(hga: HypergraphArrays, part: np.ndarray, k: int, eps: float,
     return part, cut
 
 
+def refine_population(hga: HypergraphArrays, parts, k: int, eps: float,
+                      fm_node_limit: int = 4096, **kw
+                      ) -> Tuple[np.ndarray, np.ndarray]:
+    """Two-tier refinement for the whole population in batched dispatches
+    (the production path of ``impart_partition`` and ``vcycle``).
+    Returns (parts [alpha, n_pad], cuts [alpha])."""
+    parts, cuts = lp_refine_population(hga, parts, k, eps, **kw)
+    if int(hga.n) <= fm_node_limit:
+        parts, cuts = fm_refine_population(hga, parts, k, eps)
+    return parts, cuts
+
+
 def rebalance(hg_vertex_weights: np.ndarray, part: np.ndarray, k: int,
               eps: float, rng: np.random.Generator | None = None
               ) -> np.ndarray:
-    """Host safety net: greedily move the lightest vertices out of
-    overfull blocks into the lightest feasible blocks."""
-    rng = rng or np.random.default_rng(0)
+    """Host safety net: spill the lightest vertices out of overfull blocks
+    and re-place them (heaviest first) into blocks that actually have
+    headroom, iterating to a fixpoint.
+
+    Moving into ``argmin(bw)`` unconditionally is NOT safe: a target that
+    was already processed can end above the cap.  Placement therefore only
+    targets blocks where the vertex fits under the cap; only when a vertex
+    fits nowhere (infeasible instance, e.g. one vertex heavier than the
+    cap) does it fall back to the least-loaded block.
+    """
+    del rng  # kept for signature compatibility; the procedure is greedy
     part = np.asarray(part).copy()
     w = np.asarray(hg_vertex_weights, np.float64)
     n = len(part)
@@ -226,14 +429,27 @@ def rebalance(hg_vertex_weights: np.ndarray, part: np.ndarray, k: int,
     cap = (1.0 + eps) * np.ceil(total / k)
     bw = np.zeros(k)
     np.add.at(bw, part[:n], w)
-    for b in range(k):
-        while bw[b] > cap + 1e-6:
+
+    for _ in range(k + 1):  # forced placements may need another pass
+        spill: list = []
+        for b in range(k):
+            if bw[b] <= cap + 1e-6:
+                continue
             members = np.nonzero(part == b)[0]
-            v = members[np.argmin(w[members])]
-            tgt = int(np.argmin(bw))
-            if tgt == b:
-                break
+            order = members[np.argsort(w[members], kind="stable")]
+            for v in order:  # evict lightest first
+                if bw[b] <= cap + 1e-6:
+                    break
+                spill.append(v)
+                bw[b] -= w[v]
+        if not spill:
+            break
+        # place heaviest first (best-fit decreasing)
+        spill.sort(key=lambda v: -w[v])
+        for v in spill:
+            fits = np.nonzero(bw + w[v] <= cap + 1e-6)[0]
+            tgt = (fits[np.argmin(bw[fits])] if len(fits)
+                   else int(np.argmin(bw)))
             part[v] = tgt
-            bw[b] -= w[v]
             bw[tgt] += w[v]
     return part

@@ -41,22 +41,22 @@ def vcycle(hg: Hypergraph, part: np.ndarray, k: int, eps: float,
         parts_per_level.append(newp)
         cur = newp
 
-    # uncoarsen + refine
+    # uncoarsen + refine (the batched engine with a population of one —
+    # vcycle shares the exact dispatch path impart's alpha-population uses)
     cur = parts_per_level[-1]
     for li in range(len(hier.levels) - 1, -1, -1):
         lv = hier.levels[li]
         if li < len(hier.levels) - 1:
             cur = cur[hier.levels[li + 1].cluster_id]
         hga = lv.hg.arrays()
-        cur, _ = refine_mod.refine(hga, cur, k, eps,
-                                   fm_node_limit=fm_node_limit)
-        cur = np.asarray(cur[: lv.hg.n])
+        pp, _ = refine_mod.refine_population(hga, cur[None, :], k, eps,
+                                             fm_node_limit=fm_node_limit)
+        cur = np.asarray(pp[0][: lv.hg.n])
 
     out = cur
     # elitism on the true objective
     true_hg = hg if eval_weights is None else hg.with_edge_weights(eval_weights)
     hga0 = true_hg.arrays()
-    import jax.numpy as jnp
     cut_new = float(metrics.cutsize_jit(hga0, _pad_part(out, hga0.n_pad), k))
     cut_old = float(metrics.cutsize_jit(hga0, _pad_part(part, hga0.n_pad), k))
     if cut_new <= cut_old + 1e-9:

@@ -1,0 +1,45 @@
+"""Version-portable wrappers for the handful of jax APIs that moved
+between 0.4.x and 0.6+.
+
+The repo targets the container's pinned jax (currently 0.4.37) but keeps
+working on newer releases where ``jax.shard_map``, ``jax.set_mesh`` and
+``jax.sharding.AxisType`` are the public spellings.  Everything that
+builds a mesh, enters a mesh context, or wraps a function in shard_map
+must go through this module.
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+
+
+def make_mesh(shape: Sequence[int], axis_names: Sequence[str]):
+    """``jax.make_mesh`` with auto axis types where the arg exists."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is not None:
+        return jax.make_mesh(tuple(shape), tuple(axis_names),
+                             axis_types=(axis_type.Auto,) * len(axis_names))
+    return jax.make_mesh(tuple(shape), tuple(axis_names))
+
+
+def use_mesh(mesh):
+    """Context manager activating ``mesh`` (``jax.set_mesh`` on new jax,
+    the plain mesh context manager on 0.4.x)."""
+    set_mesh = getattr(jax, "set_mesh", None)
+    if set_mesh is not None:
+        return set_mesh(mesh)
+    # On 0.4.x the Mesh object is itself a context manager; shard_map'd
+    # functions carry their mesh explicitly, so this is purely scoping.
+    return mesh
+
+
+def shard_map(f, mesh, in_specs, out_specs):
+    """shard_map without replication checking, old- and new-API."""
+    sm = getattr(jax, "shard_map", None)
+    if sm is not None:
+        return sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                  check_vma=False)
+    from jax.experimental.shard_map import shard_map as exp_shard_map
+    return exp_shard_map(f, mesh=mesh, in_specs=in_specs,
+                         out_specs=out_specs, check_rep=False)

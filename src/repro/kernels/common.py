@@ -1,0 +1,19 @@
+"""Shared helpers for the Pallas kernels."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def pad_rows(x: jnp.ndarray, mult: int, fill) -> jnp.ndarray:
+    """Pad axis 0 of ``x`` up to a multiple of ``mult`` with ``fill``.
+
+    Lets every kernel accept row counts that are not multiples of its
+    block size: pad rows are inert (pin/edge id -1 or weight 0) and the
+    caller slices them off the result.
+    """
+    r = x.shape[0]
+    r_pad = ((r + mult - 1) // mult) * mult
+    if r_pad == r:
+        return x
+    widths = [(0, r_pad - r)] + [(0, 0)] * (x.ndim - 1)
+    return jnp.pad(x, widths, constant_values=fill)

@@ -27,6 +27,13 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from .common import pad_rows as _pad_rows
+
+
+def _or_reduce(bits: jnp.ndarray, axis: int) -> jnp.ndarray:
+    """Bitwise-OR reduction (jax.lax.reduce_or only exists on newer jax)."""
+    return jax.lax.reduce(bits, jnp.uint32(0), jax.lax.bitwise_or, (axis,))
+
 
 def _connectivity_kernel(pins_ref, part_ref, lam_ref, *, k: int):
     pins = pins_ref[...]                          # [bm, S] int32
@@ -36,7 +43,7 @@ def _connectivity_kernel(pins_ref, part_ref, lam_ref, *, k: int):
     p = jnp.take(part, safe, axis=0)              # [bm, S] gather from VMEM
     bits = jnp.where(valid, jnp.left_shift(jnp.uint32(1), p.astype(jnp.uint32)),
                      jnp.uint32(0))
-    mask = jax.lax.reduce_or(bits, axes=(1,))     # [bm] OR over pins
+    mask = _or_reduce(bits, 1)                    # [bm] OR over pins
     lam_ref[...] = jax.lax.population_count(mask).astype(jnp.int32)
 
 
@@ -44,13 +51,16 @@ def _connectivity_kernel(pins_ref, part_ref, lam_ref, *, k: int):
 def connectivity_pallas(pins: jnp.ndarray, part: jnp.ndarray, k: int,
                         block_m: int = 512, interpret: bool = True
                         ) -> jnp.ndarray:
-    """lambda(e) [M] int32.  k <= 32 (bitmask width)."""
+    """lambda(e) [M] int32.  k <= 32 (bitmask width).  The edge count
+    need not be a multiple of ``block_m`` — pad edges (all pins = -1)
+    are appended internally and sliced off the result."""
     assert k <= 32, "bitmask kernel supports k <= 32; use two-word variant"
     m, s = pins.shape
     n = part.shape[0]
-    assert m % block_m == 0, f"pad edge count {m} to a multiple of {block_m}"
-    grid = (m // block_m,)
-    return pl.pallas_call(
+    pins = _pad_rows(pins, block_m, -1)
+    m_pad = pins.shape[0]
+    grid = (m_pad // block_m,)
+    out = pl.pallas_call(
         functools.partial(_connectivity_kernel, k=k),
         grid=grid,
         in_specs=[
@@ -58,9 +68,10 @@ def connectivity_pallas(pins: jnp.ndarray, part: jnp.ndarray, k: int,
             pl.BlockSpec((n,), lambda i: (0,)),             # whole part vec
         ],
         out_specs=pl.BlockSpec((block_m,), lambda i: (i,)),
-        out_shape=jax.ShapeDtypeStruct((m,), jnp.int32),
+        out_shape=jax.ShapeDtypeStruct((m_pad,), jnp.int32),
         interpret=interpret,
     )(pins, part)
+    return out[:m]
 
 
 def _cut_kernel(pins_ref, part_ref, w_ref, out_ref, *, k: int):
@@ -72,7 +83,7 @@ def _cut_kernel(pins_ref, part_ref, w_ref, out_ref, *, k: int):
     p = jnp.take(part, safe, axis=0)
     bits = jnp.where(valid, jnp.left_shift(jnp.uint32(1), p.astype(jnp.uint32)),
                      jnp.uint32(0))
-    mask = jax.lax.reduce_or(bits, axes=(1,))
+    mask = _or_reduce(bits, 1)
     lam = jax.lax.population_count(mask)
     contrib = jnp.where(lam > 1, w, 0.0).sum()
     i = pl.program_id(0)
@@ -93,8 +104,9 @@ def cutsize_pallas(pins: jnp.ndarray, part: jnp.ndarray,
     assert k <= 32
     m, s = pins.shape
     n = part.shape[0]
-    assert m % block_m == 0
-    grid = (m // block_m,)
+    pins = _pad_rows(pins, block_m, -1)          # pad edges span 0 blocks
+    edge_weights = _pad_rows(edge_weights, block_m, 0.0)
+    grid = (pins.shape[0] // block_m,)
     return pl.pallas_call(
         functools.partial(_cut_kernel, k=k),
         grid=grid,

@@ -14,6 +14,12 @@ sized for the coarse levels where FM runs (m <= ~16k, k <= 32 -> 2 MB).
 Fine levels use the XLA segment-sum path.  The gather is a VMEM dynamic
 row gather (``jnp.take``), the reduction runs on the VPU with a [bn, D, k]
 tile that is chosen to fit the ~16 MB VMEM budget.
+
+The population-batched variant (``gain_gather_batch_pallas``) grids over
+``(alpha, n // block_n)``: the incidence tile is SHARED across the alpha
+axis (same hypergraph for every member) while each member brings its own
+``becomes_internal`` / ``was_internal`` tables — the memetic population
+refines in one kernel launch.
 """
 from __future__ import annotations
 
@@ -22,6 +28,8 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+from .common import pad_rows as _pad_rows
 
 
 def _gain_kernel(inc_ref, bi_ref, wi_ref, out_ref):
@@ -40,12 +48,17 @@ def _gain_kernel(inc_ref, bi_ref, wi_ref, out_ref):
 def gain_gather_pallas(incident: jnp.ndarray, becomes_internal: jnp.ndarray,
                        was_internal: jnp.ndarray, block_n: int = 256,
                        interpret: bool = True) -> jnp.ndarray:
-    """gains[N, k] = sum_d bi[incident[v, d]] - sum_d wi[incident[v, d]]."""
-    n, d = incident.shape
+    """gains[N, k] = sum_d bi[incident[v, d]] - sum_d wi[incident[v, d]].
+
+    ``incident`` rows need NOT be a multiple of ``block_n``: the kernel
+    pads internally (pad rows gather nothing) and slices the result.
+    """
+    n, _ = incident.shape
     m, k = becomes_internal.shape
-    assert n % block_n == 0, f"pad vertex count {n} to a multiple of {block_n}"
-    grid = (n // block_n,)
-    return pl.pallas_call(
+    incident = _pad_rows(incident, block_n, -1)
+    n_pad, d = incident.shape
+    grid = (n_pad // block_n,)
+    out = pl.pallas_call(
         _gain_kernel,
         grid=grid,
         in_specs=[
@@ -54,6 +67,56 @@ def gain_gather_pallas(incident: jnp.ndarray, becomes_internal: jnp.ndarray,
             pl.BlockSpec((m,), lambda i: (0,)),             # whole wi table
         ],
         out_specs=pl.BlockSpec((block_n, k), lambda i: (i, 0)),
-        out_shape=jax.ShapeDtypeStruct((n, k), jnp.float32),
+        out_shape=jax.ShapeDtypeStruct((n_pad, k), jnp.float32),
         interpret=interpret,
     )(incident, becomes_internal, was_internal)
+    return out[:n]
+
+
+def _gain_batch_kernel(inc_ref, bi_ref, wi_ref, out_ref):
+    inc = inc_ref[...]                            # [bn, D] int32 (shared)
+    bi = bi_ref[...]                              # [1, M, k] member tables
+    wi = wi_ref[...]                              # [1, M]
+    valid = inc >= 0
+    safe = jnp.where(valid, inc, 0)
+    rows = jnp.take(bi[0], safe, axis=0)          # [bn, D, k]
+    rows = rows * valid[..., None]
+    loss = jnp.take(wi[0], safe, axis=0) * valid  # [bn, D]
+    out_ref[...] = (rows.sum(axis=1)
+                    - loss.sum(axis=1, keepdims=True))[None]
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
+def gain_gather_batch_pallas(incident: jnp.ndarray,
+                             becomes_internal: jnp.ndarray,
+                             was_internal: jnp.ndarray, block_n: int = 256,
+                             interpret: bool = True) -> jnp.ndarray:
+    """Population-batched gain assembly.
+
+    incident: [N, D] int32 (shared by all members, pad = -1)
+    becomes_internal: [alpha, M, k] ; was_internal: [alpha, M]
+    returns gains [alpha, N, k].
+
+    Grid ``(alpha, N // block_n)``: the incidence tile index map ignores
+    the population index, so the same vertex tile serves every member
+    while per-member edge tables stream through the second operand.
+    """
+    n, _ = incident.shape
+    alpha, m, k = becomes_internal.shape
+    assert was_internal.shape == (alpha, m)
+    incident = _pad_rows(incident, block_n, -1)
+    n_pad, d = incident.shape
+    grid = (alpha, n_pad // block_n)
+    out = pl.pallas_call(
+        _gain_batch_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_n, d), lambda a, i: (i, 0)),  # shared tile
+            pl.BlockSpec((1, m, k), lambda a, i: (a, 0, 0)),  # member bi
+            pl.BlockSpec((1, m), lambda a, i: (a, 0)),        # member wi
+        ],
+        out_specs=pl.BlockSpec((1, block_n, k), lambda a, i: (a, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((alpha, n_pad, k), jnp.float32),
+        interpret=interpret,
+    )(incident, becomes_internal, was_internal)
+    return out[:, :n]

@@ -1,12 +1,16 @@
 """Jit'd public wrappers around the Pallas kernels + host layout helpers.
 
 The partitioner's CSR arrays are re-blocked once per level into the padded
-matrix layouts the kernels want (pins[M, S], incident[N, D]).  On this CPU
-container every kernel runs with ``interpret=True`` (the Pallas
-interpreter executes the kernel body faithfully); on TPU, flip
-``INTERPRET`` to False — the call sites are unchanged.
+matrix layouts the kernels want (pins[M, S], incident[N, D]).
+
+Interpreter mode is derived from the active backend: on CPU the Pallas
+interpreter executes the kernel bodies faithfully; on TPU/GPU the real
+kernels compile.  Override with ``REPRO_PALLAS_INTERPRET=0|1`` (anything
+else, or unset, means auto).
 """
 from __future__ import annotations
+
+import os
 
 import numpy as np
 import jax
@@ -15,10 +19,27 @@ import jax.numpy as jnp
 from repro.core.hypergraph import Hypergraph, _round_pow2
 from . import ref
 from .connectivity import connectivity_pallas, cutsize_pallas
-from .gain import gain_gather_pallas
+from .gain import gain_gather_pallas, gain_gather_batch_pallas
 from .embedding_bag import embedding_bag_pallas
 
-INTERPRET = True  # CPU container; set False on real TPU
+_INTERPRET_CACHE: bool | None = None
+
+
+def interpret_mode() -> bool:
+    """Whether Pallas kernels should run under the interpreter.
+
+    Lazy (first call, not import) so importing this module never forces
+    jax backend initialisation — launch/dryrun must set XLA flags first.
+    """
+    global _INTERPRET_CACHE
+    env = os.environ.get("REPRO_PALLAS_INTERPRET", "auto").strip().lower()
+    if env in ("1", "true", "yes"):
+        return True
+    if env in ("0", "false", "no"):
+        return False
+    if _INTERPRET_CACHE is None:
+        _INTERPRET_CACHE = jax.default_backend() == "cpu"
+    return _INTERPRET_CACHE
 
 
 # --------------------------------------------------------------------------
@@ -58,7 +79,8 @@ def vertex_incidence_matrix(hg: Hypergraph, block_n: int = 256,
 def connectivity(pins: jnp.ndarray, part: jnp.ndarray, k: int,
                  use_kernel: bool = True) -> jnp.ndarray:
     if use_kernel and k <= 32:
-        return connectivity_pallas(pins, part, k, interpret=INTERPRET)
+        return connectivity_pallas(pins, part, k,
+                                   interpret=interpret_mode())
     return ref.connectivity_ref(pins, part, k)
 
 
@@ -66,7 +88,7 @@ def cutsize(pins: jnp.ndarray, part: jnp.ndarray, edge_weights: jnp.ndarray,
             k: int, use_kernel: bool = True) -> jnp.ndarray:
     if use_kernel and k <= 32:
         return cutsize_pallas(pins, part, edge_weights, k,
-                              interpret=INTERPRET)
+                              interpret=interpret_mode())
     return ref.cutsize_ref(pins, part, edge_weights, k)
 
 
@@ -85,8 +107,25 @@ def gain_gather(incident: jnp.ndarray, becomes_internal: jnp.ndarray,
                 ) -> jnp.ndarray:
     if use_kernel:
         return gain_gather_pallas(incident, becomes_internal, was_internal,
-                                  interpret=INTERPRET)
+                                  interpret=interpret_mode())
     return ref.gain_gather_ref(incident, becomes_internal, was_internal)
+
+
+def gain_gather_batch(incident: jnp.ndarray, becomes_internal: jnp.ndarray,
+                      was_internal: jnp.ndarray, use_kernel: bool = True
+                      ) -> jnp.ndarray:
+    """Population-batched gain assembly: one launch for all alpha members
+    (shared incidence tile, per-member edge tables).
+
+    incident [N, D]; becomes_internal [alpha, M, k]; was_internal
+    [alpha, M] -> gains [alpha, N, k].
+    """
+    if use_kernel:
+        return gain_gather_batch_pallas(incident, becomes_internal,
+                                        was_internal,
+                                        interpret=interpret_mode())
+    return ref.gain_gather_batch_ref(incident, becomes_internal,
+                                     was_internal)
 
 
 def embedding_bag(table: jnp.ndarray, indices: jnp.ndarray,
@@ -94,5 +133,5 @@ def embedding_bag(table: jnp.ndarray, indices: jnp.ndarray,
                   ) -> jnp.ndarray:
     if use_kernel:
         return embedding_bag_pallas(table, indices, combiner=combiner,
-                                    interpret=INTERPRET)
+                                    interpret=interpret_mode())
     return ref.embedding_bag_ref(table, indices, combiner=combiner)

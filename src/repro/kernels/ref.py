@@ -43,6 +43,15 @@ def gain_gather_ref(incident: jnp.ndarray, becomes_internal: jnp.ndarray,
     return bi.sum(axis=1) - wi.sum(axis=1, keepdims=True)
 
 
+def gain_gather_batch_ref(incident: jnp.ndarray,
+                          becomes_internal: jnp.ndarray,
+                          was_internal: jnp.ndarray) -> jnp.ndarray:
+    """Population-batched gain assembly oracle: incident [N, D] shared,
+    bi [alpha, M, k], wi [alpha, M] -> gains [alpha, N, k]."""
+    return jax.vmap(lambda bi, wi: gain_gather_ref(incident, bi, wi))(
+        becomes_internal, was_internal)
+
+
 def embedding_bag_ref(table: jnp.ndarray, indices: jnp.ndarray,
                       combiner: str = "sum") -> jnp.ndarray:
     """EmbeddingBag: gather + segment-reduce over the bag dimension.

@@ -29,6 +29,7 @@ import jax               # noqa: E402
 import jax.numpy as jnp  # noqa: E402
 import numpy as np       # noqa: E402
 
+from repro.jaxcompat import use_mesh                     # noqa: E402
 from repro.launch.mesh import make_production_mesh       # noqa: E402
 from repro.launch.hlo_analysis import analyze_hlo        # noqa: E402
 from repro.configs.registry import ARCHS, get_arch, get_opt  # noqa: E402
@@ -168,7 +169,7 @@ def run_population(multi_pod: bool, n: int = 1 << 20, m: int = 1 << 21,
     step = make_population_step(mesh, n=n, m=m, k=k, refine_rounds=2)
     sds = lambda shape, dt: jax.ShapeDtypeStruct(shape, dt)
     t0 = time.perf_counter()
-    with jax.set_mesh(mesh):
+    with use_mesh(mesh):
         lowered = step.lower(
             sds((p_pad,), jnp.int32), sds((p_pad,), jnp.int32),
             sds((n_pad,), jnp.float32), sds((m_pad,), jnp.float32),

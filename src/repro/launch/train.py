@@ -21,6 +21,7 @@ from repro.train.steps import build_cell
 from repro.optim import adamw
 from repro.checkpoint import CheckpointManager
 from repro.runtime import Runner, StragglerWatchdog
+from repro.jaxcompat import use_mesh
 from repro.launch.mesh import make_local_mesh
 
 
@@ -107,7 +108,7 @@ def main():
     batch_fn = make_batch_fn(args.arch, cfg, args.batch, args.seq)
     step_fn = jax.jit(cell.fn)
     wd = StragglerWatchdog()
-    with jax.set_mesh(mesh):
+    with use_mesh(mesh):
         runner = Runner(step_fn=step_fn, state=state, next_batch=batch_fn,
                         ckpt=ckpt, step=start,
                         ckpt_every=args.ckpt_every, watchdog=wd,

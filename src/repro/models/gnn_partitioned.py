@@ -32,6 +32,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.jaxcompat import shard_map
+
 from repro.configs.base import GNNConfig
 from .layers import mlp_apply, cross_entropy
 from .gnn import _ln
@@ -225,14 +227,13 @@ def make_partitioned_loss(mesh, cfg: GNNConfig, n_loc: int, b_max: int,
     }
 
     def loss(params, batch):
-        fn = jax.shard_map(
+        fn = shard_map(
             body, mesh=mesh,
             in_specs=(pspec, specs["node_feat"], specs["labels"],
                       specs["label_mask"], specs["boundary_idx"],
                       specs["edge_src_ref"], specs["edge_dst"],
                       specs["edge_mask"], specs["edge_feat"]),
-            out_specs=P(None),
-            check_vma=False)
+            out_specs=P(None))
         out = fn(params, batch["node_feat"], batch["labels"],
                  batch["label_mask"], batch["boundary_idx"],
                  batch["edge_src_ref"], batch["edge_dst"],

@@ -23,6 +23,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ArchSpec, LMConfig, GNNConfig, DLRMConfig, \
     ShapeSpec
+from repro.jaxcompat import use_mesh
 from repro.models import transformer, gnn, dlrm
 from repro.models.layers import dtype_of
 from repro.optim import adamw
@@ -51,7 +52,7 @@ class Cell:
         in_sh, out_sh = self.shardings(mesh)
         jitted = jax.jit(self.fn, in_shardings=in_sh, out_shardings=out_sh,
                          donate_argnums=self.donate)
-        with jax.set_mesh(mesh):
+        with use_mesh(mesh):
             return jitted.lower(*self.args_sds)
 
 

@@ -1,0 +1,35 @@
+"""Degrade gracefully when ``hypothesis`` is not installed.
+
+Property-test modules import ``given``/``settings``/``st`` from here
+instead of from hypothesis directly.  With hypothesis present this is a
+pure re-export; without it, ``@given`` turns the test into a clean skip
+(same spirit as ``pytest.importorskip`` but scoped to the property tests,
+so the plain unit tests in the same modules keep running).
+"""
+from __future__ import annotations
+
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+    class _StrategyStub:
+        """st.integers(...) etc. — returns inert placeholders."""
+
+        def __getattr__(self, name):
+            return lambda *a, **k: None
+
+    st = _StrategyStub()  # type: ignore[assignment]
+
+    def settings(*_a, **_k):  # type: ignore[misc]
+        return lambda f: f
+
+    def given(*_a, **_k):  # type: ignore[misc]
+        def deco(f):
+            return pytest.mark.skip(
+                reason="hypothesis not installed (pip install -r "
+                       "requirements-dev.txt)")(f)
+        return deco

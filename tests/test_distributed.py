@@ -36,8 +36,8 @@ def test_population_ring_8_devices():
     from repro.data.hypergraphs import _modular_netlist
     hg = _modular_netlist(1200, 1600, seed=9, n_modules=12, p_local=0.8,
                           fanout_tail=1.5)
-    mesh = jax.make_mesh((4, 2), ('data', 'model'),
-                         axis_types=(jax.sharding.AxisType.Auto,)*2)
+    from repro.jaxcompat import make_mesh, use_mesh
+    mesh = make_mesh((4, 2), ('data', 'model'))
     hga = hg.arrays()
     k, eps = 8, 0.08
     step = make_population_step(mesh, n=hg.n, m=hg.m, k=k, eps=eps,
@@ -49,7 +49,7 @@ def test_population_ring_8_devices():
                              rng.integers(0, k, hg.n).astype(np.int32),
                              k, eps, rng)
         parts[i, :hg.n] = p
-    with jax.set_mesh(mesh):
+    with use_mesh(mesh):
         p2 = jnp.asarray(parts)
         first = None
         for it in range(4):
@@ -89,8 +89,8 @@ def test_lm_train_step_sharded_16_devices():
                               microbatches=2)
     spec = dataclasses.replace(ARCHS[aid], config=cfg)
     shape = ShapeSpec('t', 'train', (('seq_len', 64), ('global_batch', 8)))
-    mesh = jax.make_mesh((4, 4), ('data', 'model'),
-                         axis_types=(jax.sharding.AxisType.Auto,)*2)
+    from repro.jaxcompat import make_mesh, use_mesh
+    mesh = make_mesh((4, 4), ('data', 'model'))
     cell = build_cell(spec, shape, multi_pod=False, opt_cfg=get_opt(aid),
                       n_devices=16)
     params = transformer.init_params(cfg, jax.random.PRNGKey(0))
@@ -101,7 +101,7 @@ def test_lm_train_step_sharded_16_devices():
              'labels': jnp.asarray(t[:,1:], jnp.int32)}
     in_sh, out_sh = cell.shardings(mesh)
     fn = jax.jit(cell.fn, in_shardings=in_sh, out_shardings=out_sh)
-    with jax.set_mesh(mesh):
+    with use_mesh(mesh):
         state = jax.device_put(state, in_sh[0])
         batch = jax.device_put(batch, in_sh[1])
         l0 = None
@@ -147,12 +147,12 @@ def test_partitioned_gnn_matches_baseline():
     batch = prepare_partitioned_batch(ei, nf, lb,
                                       res.assignment.astype(np.int64),
                                       n_shards=2, n_dp=2, edge_feat=ef)
-    mesh = jax.make_mesh((2, 2), ('data', 'model'),
-                         axis_types=(jax.sharding.AxisType.Auto,)*2)
+    from repro.jaxcompat import make_mesh, use_mesh
+    mesh = make_mesh((2, 2), ('data', 'model'))
     loss_fn, _ = make_partitioned_loss(mesh, cfg,
                                        batch['node_feat'].shape[1],
                                        batch['boundary_idx'].shape[1])
-    with jax.set_mesh(mesh):
+    with use_mesh(mesh):
         got = float(loss_fn(params, jax.tree.map(jnp.asarray, batch)))
     print(json.dumps({'ref': ref, 'got': got}))
     """, devices=4)

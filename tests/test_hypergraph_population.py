@@ -5,7 +5,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+from tests.hypothesis_compat import given, settings, st
 
 from repro.core.hypergraph import Hypergraph, HypergraphArrays, contract
 from repro.core.coarsen import coarsen
@@ -81,8 +81,8 @@ def test_population_step_single_device(small_hg):
     (refine + recombine + mutate) must still run, stay balanced, and not
     regress the cut."""
     from repro.core.population import make_population_step
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.jaxcompat import make_mesh, use_mesh
+    mesh = make_mesh((1, 1), ("data", "model"))
     k, eps = 8, 0.08
     hga = small_hg.arrays()
     step = make_population_step(mesh, n=small_hg.n, m=small_hg.m, k=k,
@@ -95,7 +95,7 @@ def test_population_step_single_device(small_hg):
     parts[0, : small_hg.n] = p0
     cut0 = float(metrics.cutsize_jit(
         hga, refine.pad_part(p0, hga.n_pad), k))
-    with jax.set_mesh(mesh):
+    with use_mesh(mesh):
         new_parts, cuts = step(hga.pin_vertex, hga.pin_edge,
                                hga.vertex_weights, hga.edge_weights,
                                hga.edge_sizes, jnp.asarray(parts))

@@ -7,7 +7,7 @@ import pytest
 
 from repro.kernels import ops, ref
 from repro.kernels.connectivity import connectivity_pallas, cutsize_pallas
-from repro.kernels.gain import gain_gather_pallas
+from repro.kernels.gain import gain_gather_pallas, gain_gather_batch_pallas
 from repro.kernels.embedding_bag import embedding_bag_pallas
 
 
@@ -53,6 +53,68 @@ def test_gain_gather_sweep(n, d, m, k):
                                jnp.asarray(wi))
     np.testing.assert_allclose(np.asarray(got), np.asarray(want),
                                rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("alpha,n,d,m,k", [
+    (1, 256, 8, 128, 4), (4, 512, 16, 300, 8), (7, 300, 8, 130, 5),
+])
+def test_gain_gather_batch_sweep(alpha, n, d, m, k):
+    """Population-batched kernel == vmapped oracle, including shapes that
+    are NOT multiples of the vertex block (internal padding)."""
+    rng = np.random.default_rng(alpha * n + d)
+    incident = rng.integers(-1, m, size=(n, d)).astype(np.int32)
+    bi = rng.normal(size=(alpha, m, k)).astype(np.float32)
+    wi = rng.normal(size=(alpha, m)).astype(np.float32)
+    got = gain_gather_batch_pallas(jnp.asarray(incident), jnp.asarray(bi),
+                                   jnp.asarray(wi))
+    want = ref.gain_gather_batch_ref(jnp.asarray(incident), jnp.asarray(bi),
+                                     jnp.asarray(wi))
+    assert got.shape == (alpha, n, k)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_batch_kernel_matches_per_member_kernel():
+    """Each slice of the batched launch equals the single-member kernel."""
+    rng = np.random.default_rng(11)
+    alpha, n, d, m, k = 3, 384, 8, 200, 6
+    incident = rng.integers(-1, m, size=(n, d)).astype(np.int32)
+    bi = rng.normal(size=(alpha, m, k)).astype(np.float32)
+    wi = rng.normal(size=(alpha, m)).astype(np.float32)
+    batched = np.asarray(gain_gather_batch_pallas(
+        jnp.asarray(incident), jnp.asarray(bi), jnp.asarray(wi)))
+    for a in range(alpha):
+        single = np.asarray(gain_gather_pallas(
+            jnp.asarray(incident), jnp.asarray(bi[a]), jnp.asarray(wi[a])))
+        np.testing.assert_allclose(batched[a], single, rtol=1e-6, atol=1e-6)
+
+
+def test_connectivity_odd_edge_count():
+    """m that is not a multiple of block_m must work (internal padding
+    replaced the old hard assert)."""
+    rng = np.random.default_rng(7)
+    m, s, n, k = 130, 8, 300, 5
+    pins = rng.integers(-1, n, size=(m, s)).astype(np.int32)
+    part = rng.integers(0, k, size=n).astype(np.int32)
+    got = connectivity_pallas(jnp.asarray(pins), jnp.asarray(part), k)
+    want = ref.connectivity_ref(jnp.asarray(pins), jnp.asarray(part), k)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    w = rng.random(m).astype(np.float32)
+    c = cutsize_pallas(jnp.asarray(pins), jnp.asarray(part),
+                       jnp.asarray(w), k)
+    cr = ref.cutsize_ref(jnp.asarray(pins), jnp.asarray(part),
+                         jnp.asarray(w), k)
+    assert float(c) == pytest.approx(float(cr), rel=1e-5)
+
+
+def test_interpret_mode_env_override(monkeypatch):
+    monkeypatch.setenv("REPRO_PALLAS_INTERPRET", "1")
+    assert ops.interpret_mode() is True
+    monkeypatch.setenv("REPRO_PALLAS_INTERPRET", "0")
+    assert ops.interpret_mode() is False
+    monkeypatch.setenv("REPRO_PALLAS_INTERPRET", "auto")
+    # this container runs on CPU -> interpreter
+    assert ops.interpret_mode() is True
 
 
 @pytest.mark.parametrize("r,d,b,l,dtype,combiner", [

@@ -3,7 +3,7 @@ the similarity metrics (paper Sec. 3.2, Fig. 4)."""
 import numpy as np
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+from tests.hypothesis_compat import given, settings, st
 
 from repro.core import metrics, refine
 from repro.core.hypergraph import Hypergraph

@@ -1,0 +1,172 @@
+"""The batched population engine vs the per-member loop it replaced.
+
+The acceptance bar for the batched path: at a fixed seed, every member's
+refined partition AND cut must be IDENTICAL (bit-for-bit on the
+integer-weight fixtures) to running the scalar ``lp_refine``/``fm_refine``
+loop member by member — batching buys wall-clock, never answers.
+"""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import metrics, refine
+from repro.core.hypergraph import Hypergraph
+
+
+ALPHA = 7
+
+
+def _population(hg, k, eps, seed):
+    rng = np.random.default_rng(seed)
+    parts = []
+    for _ in range(ALPHA):
+        p = rng.integers(0, k, hg.n).astype(np.int32)
+        parts.append(refine.rebalance(hg.vertex_weights, p, k, eps))
+    return parts
+
+
+def _looped_reference(hga, parts, k, eps, max_iters, fm):
+    out_p, out_c = [], []
+    for p in parts:
+        q, c = refine.lp_refine(hga, p, k, eps, max_iters=max_iters)
+        if fm:
+            q, c = refine.fm_refine(hga, q, k, eps)
+        out_p.append(np.asarray(q))
+        out_c.append(c)
+    return out_p, out_c
+
+
+@pytest.mark.parametrize("seed,k", [(0, 2), (1, 4), (2, 7)])
+def test_batched_equals_looped_tiny(tiny_hg, seed, k):
+    """Per-member cuts and partitions bit-for-bit equal on tiny_hg."""
+    eps = 0.10
+    hga = tiny_hg.arrays()
+    parts = _population(tiny_hg, k, eps, seed)
+    ref_p, ref_c = _looped_reference(hga, [p.copy() for p in parts],
+                                     k, eps, max_iters=16, fm=True)
+    bat_p, bat_c = refine.refine_population(
+        hga, [p.copy() for p in parts], k, eps, max_iters=16)
+    np.testing.assert_array_equal(np.asarray(ref_c), bat_c)
+    for a in range(ALPHA):
+        np.testing.assert_array_equal(ref_p[a], bat_p[a])
+
+
+def test_batched_equals_looped_lp_only(small_hg):
+    """LP tier alone (the fine-level path) on the larger fixture."""
+    k, eps = 8, 0.08
+    hga = small_hg.arrays()
+    parts = _population(small_hg, k, eps, seed=3)
+    ref_p, ref_c = _looped_reference(hga, [p.copy() for p in parts],
+                                     k, eps, max_iters=6, fm=False)
+    bat_p, bat_c = refine.lp_refine_population(
+        hga, [p.copy() for p in parts], k, eps, max_iters=6)
+    np.testing.assert_array_equal(np.asarray(ref_c), bat_c)
+    for a in range(ALPHA):
+        np.testing.assert_array_equal(ref_p[a], bat_p[a])
+
+
+@pytest.mark.parametrize("fixture,k,eps", [
+    ("tiny_hg", 4, 0.10), ("small_hg", 8, 0.08),
+])
+def test_population_refine_postconditions(request, fixture, k, eps):
+    """Batched refinement never unbalances and never worsens any member."""
+    hg = request.getfixturevalue(fixture)
+    hga = hg.arrays()
+    parts = _population(hg, k, eps, seed=5)
+    cuts0 = np.asarray(metrics.cutsize_population(
+        hga, refine.pad_parts(parts, hga.n_pad), k))
+    new_parts, new_cuts = refine.refine_population(hga, parts, k, eps,
+                                                   max_iters=8)
+    for a in range(ALPHA):
+        assert new_cuts[a] <= cuts0[a] + 1e-6
+        assert bool(metrics.is_balanced(
+            hga, jnp.asarray(new_parts[a]), k, eps))
+        # reported cut is the real cut
+        assert new_cuts[a] == pytest.approx(float(metrics.cutsize_jit(
+            hga, jnp.asarray(new_parts[a]), k)))
+
+
+def test_lp_refine_postconditions_scalar_matches_population_row(tiny_hg):
+    """A population of one goes through the same dispatch path vcycle
+    uses — it must agree with the scalar API exactly."""
+    k, eps = 4, 0.10
+    hga = tiny_hg.arrays()
+    p = _population(tiny_hg, k, eps, seed=9)[0]
+    sp, sc = refine.lp_refine(hga, p.copy(), k, eps, max_iters=8)
+    bp, bc = refine.lp_refine_population(hga, p.copy()[None, :], k, eps,
+                                         max_iters=8)
+    assert float(sc) == bc[0]
+    np.testing.assert_array_equal(np.asarray(sp), bp[0])
+
+
+def test_population_metrics_match_scalar(tiny_hg):
+    """Batched metric entry points == scalar entry points per member."""
+    rng = np.random.default_rng(0)
+    k = 4
+    hga = tiny_hg.arrays()
+    parts = refine.pad_parts(
+        [rng.integers(0, k, tiny_hg.n).astype(np.int32)
+         for _ in range(5)], hga.n_pad)
+    cuts = np.asarray(metrics.cutsize_population(hga, parts, k))
+    gains = np.asarray(metrics.gain_matrix_population(hga, parts, k))
+    lams = np.asarray(metrics.connectivity_population(hga, parts, k))
+    bws = np.asarray(metrics.block_weights_population(hga, parts, k))
+    for a in range(5):
+        assert cuts[a] == pytest.approx(float(
+            metrics.cutsize_jit(hga, parts[a], k)))
+        np.testing.assert_allclose(
+            gains[a], np.asarray(metrics.gain_matrix_jit(hga, parts[a], k)),
+            atol=1e-5)
+        np.testing.assert_array_equal(
+            lams[a], np.asarray(metrics.connectivity_jit(hga, parts[a], k)))
+        np.testing.assert_allclose(
+            bws[a], np.asarray(metrics.block_weights_jit(hga, parts[a], k)))
+
+
+def test_edge_distance_matrix_matches_pairwise(tiny_hg):
+    rng = np.random.default_rng(2)
+    k = 4
+    hga = tiny_hg.arrays()
+    parts = refine.pad_parts(
+        [rng.integers(0, k, tiny_hg.n).astype(np.int32)
+         for _ in range(4)], hga.n_pad)
+    dmat = np.asarray(metrics.edge_distance_matrix(hga, parts, k))
+    assert dmat.shape == (4, 4)
+    for i in range(4):
+        for j in range(4):
+            want = int(metrics.edge_distance_jit(
+                hga, parts[i], parts[j], k))
+            assert dmat[i, j] == want
+    assert (np.diag(dmat) == 0).all()
+    np.testing.assert_array_equal(dmat, dmat.T)
+
+
+def test_impart_contains_no_per_member_refinement_loop():
+    """Structural guard: the driver must stay batched.  The refinement
+    section of impart_partition may not loop over cfg.alpha."""
+    import inspect
+    from repro.core import impart as impart_mod
+    src = inspect.getsource(impart_mod.impart_partition)
+    assert "for a in range(cfg.alpha)" not in src
+    assert "refine_population" in src
+
+
+def test_impart_batched_end_to_end_small():
+    """Full driver on a small instance: valid balanced output, population
+    cuts tracked for all members."""
+    from repro.core import ImpartConfig, impart_partition
+    rng = np.random.default_rng(1)
+    edges = [rng.choice(120, size=int(rng.integers(2, 5)), replace=False)
+             for _ in range(240)]
+    hg = Hypergraph.from_edge_lists(edges, n=120)
+    cfg = ImpartConfig(k=4, eps=0.10, alpha=4, beta=2, seed=0,
+                       final_vcycles=0)
+    res = impart_partition(hg, cfg)
+    assert res.part.shape == (hg.n,)
+    assert len(res.population_cuts) == 4
+    hga = hg.arrays()
+    assert bool(metrics.is_balanced(
+        hga, refine.pad_part(res.part, hga.n_pad), cfg.k, cfg.eps))
+    assert res.cut == pytest.approx(float(metrics.cutsize_jit(
+        hga, refine.pad_part(res.part, hga.n_pad), cfg.k)))
+    assert res.cut == pytest.approx(min(res.population_cuts))

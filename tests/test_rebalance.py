@@ -1,0 +1,61 @@
+"""Regression tests for the ``rebalance`` safety net.
+
+The original implementation evicted vertices from overfull block ``b``
+into ``argmin(bw)`` unconditionally; when that target had already been
+processed (``tgt < b``) it could end above the cap, so the "safety net"
+itself returned an unbalanced partition.
+"""
+import numpy as np
+import pytest
+
+from repro.core import metrics, refine
+from repro.core.hypergraph import Hypergraph
+
+
+def _bw(weights, part, k):
+    bw = np.zeros(k)
+    np.add.at(bw, part, np.asarray(weights, np.float64))
+    return bw
+
+
+def test_rebalance_never_overflows_processed_block():
+    """k=2, weights [5,5,1*6], everything in block 1: the old code pushed
+    a weight-5 vertex into already-processed block 0 (6+5=11 > cap 8.4)."""
+    w = np.array([5, 5, 1, 1, 1, 1, 1, 1], np.float32)
+    part = np.ones(8, np.int32)
+    k, eps = 2, 0.05
+    cap = (1.0 + eps) * np.ceil(w.sum() / k)
+    fixed = refine.rebalance(w, part, k, eps)
+    assert (_bw(w, fixed, k) <= cap + 1e-6).all()
+
+
+def test_rebalance_fixpoint_many_blocks():
+    """Mixed weights, k=4, adversarial initial distribution: every block
+    must end under the cap (a feasible packing exists)."""
+    rng = np.random.default_rng(0)
+    w = np.concatenate([np.full(4, 7.0), np.full(40, 1.0)]).astype(
+        np.float32)
+    part = np.zeros(len(w), np.int32)       # everything in block 0
+    k, eps = 4, 0.05
+    cap = (1.0 + eps) * np.ceil(w.sum() / k)
+    fixed = refine.rebalance(w, part, k, eps, rng)
+    assert (_bw(w, fixed, k) <= cap + 1e-6).all()
+
+
+def test_rebalance_noop_when_balanced():
+    w = np.ones(16, np.float32)
+    part = np.repeat(np.arange(4, dtype=np.int32), 4)
+    fixed = refine.rebalance(w, part, 4, 0.05)
+    np.testing.assert_array_equal(fixed, part)
+
+
+def test_rebalance_is_balanced_metricwise():
+    rng = np.random.default_rng(3)
+    edges = [rng.choice(40, size=int(rng.integers(2, 6)), replace=False)
+             for _ in range(50)]
+    hg = Hypergraph.from_edge_lists(edges, n=40)
+    part = np.zeros(40, np.int32)
+    fixed = refine.rebalance(hg.vertex_weights, part, 4, 0.05, rng)
+    hga = hg.arrays()
+    assert bool(metrics.is_balanced(
+        hga, refine.pad_part(fixed, hga.n_pad), 4, 0.05))

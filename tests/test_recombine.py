@@ -2,7 +2,7 @@
 (paper Sec. 3.1.2 thresholds)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from tests.hypothesis_compat import given, settings, st
 
 from repro.core import metrics, refine, ilp
 from repro.core.hypergraph import Hypergraph, contract

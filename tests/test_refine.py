@@ -1,7 +1,7 @@
 """Refinement invariants: never unbalances, never worsens the cut."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from tests.hypothesis_compat import given, settings, st
 
 from repro.core import metrics, refine
 from repro.core.hypergraph import Hypergraph
