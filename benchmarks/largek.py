@@ -2,10 +2,18 @@
 cut vs the multilevel baseline; the paper's claim is that IMPart's margin
 holds/grows with k.
 
-Also home of the population-engine benchmark (``bench_population``):
-batched-vs-looped uncoarsening+refinement at alpha=7, k=64, emitting
-machine-readable ``BENCH_population.json`` so the perf trajectory of the
-batched engine is tracked PR over PR.
+Also home of two engine benchmarks tracked PR over PR:
+
+* ``bench_population`` — batched-vs-looped uncoarsening+refinement at
+  alpha=7, k=64 (``BENCH_population.json``), now exercising the fused
+  on-device LP attempt loop;
+* ``bench_gain`` — the gain-path k-sweep (k = 64, 256, 1024): the old
+  [P, k] segment-sum vs the ``kernels.ops`` dispatcher
+  (``BENCH_gain.json``).
+
+``--smoke`` runs both at tiny sizes plus a forced sweep over every gain
+path (kernels in interpret mode), so CI fails on kernel-routing breakage
+rather than on perf graphs.
 """
 from __future__ import annotations
 
@@ -128,8 +136,113 @@ def _uncoarsen_refine_phase(hier, parts0, k, eps, mode, lp_iters,
     return parts, cuts
 
 
+def bench_gain(quick: bool = False, out=sys.stdout,
+               json_path: str | None = "BENCH_gain.json",
+               ks=None, scale: float = 0.1, reps: int = 3):
+    """Gain-path k-sweep: old [P, k] segment-sum vs the dispatcher.
+
+    On CPU the dispatcher resolves to the compact sparse assembly for
+    k > KERNEL_MAX_K (the Pallas kernels are TPU-path, verified by the
+    parity tests); the interpret-mode numbers still measure the real
+    O(P * k) -> O(P) work reduction.
+    """
+    import jax
+    import jax.numpy as jnp
+    from repro.core import metrics, refine
+    from repro.kernels import ops
+
+    hg = titan_like("gsm_switch_like", scale=scale)
+    hga = hg.arrays()
+    ks = tuple(ks) if ks is not None else ((64, 256) if quick
+                                           else (64, 256, 1024))
+
+    def timeit(fn):
+        jax.block_until_ready(fn())          # warm-up / compile
+        best = float("inf")
+        for _ in range(reps):                # best-of: this box is noisy
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn())
+            best = min(best, time.perf_counter() - t0)
+        return best
+
+    rng = np.random.default_rng(0)
+    rows = []
+    print("table,design,k,path,segsum_ms,dispatch_ms,speedup,exact",
+          file=out)
+    for k in ks:
+        part = refine.pad_part(rng.integers(0, k, hg.n).astype(np.int32),
+                               hga.n_pad)
+        path = ops.gain_path(hga.m_pad, k,
+                             incidence=hga.incident is not None)
+        t_ref = timeit(lambda: metrics.gain_matrix_jit(
+            hga, part, k, assemble="segsum"))
+        t_new = timeit(lambda: metrics.gain_matrix_jit(hga, part, k))
+        exact = bool(jnp.array_equal(
+            metrics.gain_matrix_jit(hga, part, k, assemble="segsum"),
+            metrics.gain_matrix_jit(hga, part, k)))
+        row = {"k": k, "path": path,
+               "segsum_ms": round(t_ref * 1e3, 3),
+               "dispatch_ms": round(t_new * 1e3, 3),
+               "speedup": round(t_ref / t_new, 3), "exact": exact}
+        rows.append(row)
+        print(f"gain,gsm_switch_like,{k},{path},{row['segsum_ms']:.1f},"
+              f"{row['dispatch_ms']:.1f},{row['speedup']:.2f},{exact}",
+              file=out)
+    if json_path:
+        record = {"bench": "gain_path", "design": "gsm_switch_like",
+                  "n": hg.n, "m": hg.m, "pins": hg.num_pins,
+                  "backend": jax.default_backend(),
+                  "interpret": ops.interpret_mode(), "reps": reps,
+                  "sweep": rows}
+        with open(json_path, "w") as f:
+            json.dump(record, f, indent=2)
+            f.write("\n")
+        print(f"# wrote {json_path}", file=out)
+    return rows
+
+
+def _smoke_gain_paths(out=sys.stdout):
+    """Force every gain path through metrics.gain_matrix on a tiny
+    instance and require agreement — kernel routing breakage fails CI
+    here, independent of timings."""
+    import os
+    import jax
+    import jax.numpy as jnp
+
+    results = {}
+    for path in ("segsum", "compact", "table", "stream"):
+        os.environ["REPRO_GAIN_PATH"] = path
+        jax.clear_caches()
+        from repro.core import metrics, refine
+        hg = titan_like("gsm_switch_like", scale=0.01)
+        hga = hg.arrays()
+        for k in (8, 40):
+            part = refine.pad_part(
+                np.random.default_rng(0).integers(0, k, hg.n).astype(
+                    np.int32), hga.n_pad)
+            results.setdefault(k, {})[path] = np.asarray(
+                metrics.gain_matrix_jit(hga, part, k))
+    os.environ.pop("REPRO_GAIN_PATH", None)
+    jax.clear_caches()
+    for k, by_path in results.items():
+        base = by_path["segsum"]
+        for path, got in by_path.items():
+            err = float(np.abs(got - base).max())
+            print(f"smoke,gain_path,{k},{path},maxerr={err:.1e}", file=out)
+            assert err < 1e-4, f"gain path {path} diverged at k={k}: {err}"
+
+
+def smoke(out=sys.stdout):
+    """CI entry: tiny-size routing + engine checks (no JSON artifacts)."""
+    _smoke_gain_paths(out=out)
+    bench_gain(json_path=None, ks=(8, 40), scale=0.02, reps=1, out=out)
+    bench_population(quick=True, smoke=True, json_path=None, out=out)
+    print("# smoke OK", file=out)
+
+
 def bench_population(quick: bool = False, out=sys.stdout,
-                     json_path: str = "BENCH_population.json"):
+                     json_path: str | None = "BENCH_population.json",
+                     smoke: bool = False):
     """Batched population engine vs the removed per-member loop.
 
     alpha=7 / k=64 on a scaled gsm_switch-like netlist; both engines run
@@ -140,9 +253,14 @@ def bench_population(quick: bool = False, out=sys.stdout,
     from repro.core.initial_partition import initial_partition
 
     design = "gsm_switch_like"
-    alpha, k, eps = 7, 64, 0.08
-    lp_iters, fm_node_limit = 16, 4096
-    hg = titan_like(design, scale=0.02)
+    if smoke:   # CI routing check: tiny instance, same code path
+        alpha, k, eps = 3, 16, 0.08
+        lp_iters, fm_node_limit = 4, 4096
+        hg = titan_like(design, scale=0.01)
+    else:
+        alpha, k, eps = 7, 64, 0.08
+        lp_iters, fm_node_limit = 16, 4096
+        hg = titan_like(design, scale=0.02)
     hier = coarsen(hg, k, seed=11, contraction_limit_factor=4)
 
     parts0 = np.stack([
@@ -193,11 +311,12 @@ def bench_population(quick: bool = False, out=sys.stdout,
         "cuts_equal": cuts_equal,
         "per_member_cuts": [float(c) for c in batched["cuts"]],
     }
-    with open(json_path, "w") as f:
-        json.dump(record, f, indent=2)
-        f.write("\n")
-    print(f"# wrote {json_path} (speedup {speedup:.2f}x, "
-          f"cuts_equal={cuts_equal})", file=out)
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(record, f, indent=2)
+            f.write("\n")
+        print(f"# wrote {json_path} (speedup {speedup:.2f}x, "
+              f"cuts_equal={cuts_equal})", file=out)
     return record
 
 
@@ -215,8 +334,12 @@ def run(quick: bool = False, out=sys.stdout):
                   f"{res[m]['cut']:.0f},{res[m]['cut'] / ref:.4f},"
                   f"{res[m]['wall_s']:.1f}", file=out)
     bench_population(quick=quick, out=out)
+    bench_gain(quick=quick, out=out)
     return None
 
 
 if __name__ == "__main__":
-    run(quick="--quick" in sys.argv)
+    if "--smoke" in sys.argv:
+        smoke()
+    else:
+        run(quick="--quick" in sys.argv)

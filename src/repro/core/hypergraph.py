@@ -41,6 +41,17 @@ class Hypergraph:
     _incident: Optional[np.ndarray] = None       # [P] int32 edge ids
     _vertex_offsets: Optional[np.ndarray] = None  # [n+1] int64
 
+    # per-level layout cache: structure-derived kernel layouts (the dense
+    # incidence matrix) keyed by their padding, built once per level and
+    # shared by every refinement round, member and V-cycle — and, via
+    # ``with_edge_weights``, by reweighted copies (same structure).
+    _layout_cache: dict = dataclasses.field(default_factory=dict,
+                                            repr=False, compare=False)
+    # cache of ``arrays()`` results keyed by the padding request (weights
+    # differ per instance, so this one is NOT shared across reweights)
+    _arrays_cache: dict = dataclasses.field(default_factory=dict,
+                                            repr=False, compare=False)
+
     # ---------------------------------------------------------------- util
     @property
     def num_pins(self) -> int:
@@ -69,6 +80,33 @@ class Hypergraph:
                 [[0], np.cumsum(counts)]
             ).astype(np.int64)
         return self._incident, self._vertex_offsets
+
+    def incidence_matrix(self, n_rows: int, lane_pad: int = 8) -> np.ndarray:
+        """Padded [n_rows, D_pad] incident-edge matrix (pad = -1), the
+        layout the Pallas gain kernels gather from.  Cached per
+        ``(n_rows, lane_pad)`` — the re-blocking runs once per level."""
+        key = (int(n_rows), int(lane_pad))
+        hit = self._layout_cache.get(key)
+        if hit is not None:
+            return hit
+        incident, voff = self.dual()
+        deg = np.diff(voff)
+        d_pad = max(int(_round_pow2(int(deg.max()) if self.n else 1,
+                                    lane_pad)), lane_pad)
+        assert n_rows >= self.n
+        out = np.full((n_rows, d_pad), -1, np.int32)
+        rows = np.repeat(np.arange(self.n), deg)
+        cols = (np.arange(len(incident), dtype=np.int64)
+                - np.repeat(voff[:-1], deg))
+        out[rows, cols] = incident
+        self._layout_cache[key] = out
+        return out
+
+    def max_degree(self) -> int:
+        if self.n == 0:
+            return 0
+        _, voff = self.dual()
+        return int(np.diff(voff).max())
 
     def validate(self) -> None:
         assert self.edge_offsets.shape == (self.m + 1,)
@@ -115,12 +153,25 @@ class Hypergraph:
             edge_weights=np.asarray(new_weights, np.float32),
         )
         hg._incident, hg._vertex_offsets = self._incident, self._vertex_offsets
+        # structure is unchanged: the reweighted copy shares the kernel
+        # layout cache (mutation's reweighted V-cycles hit it for free)
+        hg._layout_cache = self._layout_cache
         return hg
 
     def arrays(self, pad_pins: Optional[int] = None,
                pad_edges: Optional[int] = None,
                pad_vertices: Optional[int] = None) -> "HypergraphArrays":
-        return HypergraphArrays.from_host(self, pad_pins, pad_edges, pad_vertices)
+        """Device-side padded arrays.  Cached per padding request (and
+        per incidence-layout mode), so the per-level host->device
+        conversion runs once however many rounds revisit the level."""
+        from repro.kernels.ops import gain_layout_enabled
+        key = (pad_pins, pad_edges, pad_vertices, gain_layout_enabled())
+        hit = self._arrays_cache.get(key)
+        if hit is None:
+            hit = HypergraphArrays.from_host(self, pad_pins, pad_edges,
+                                             pad_vertices)
+            self._arrays_cache[key] = hit
+        return hit
 
 
 # --------------------------------------------------------------------------
@@ -135,6 +186,13 @@ def _round_pow2(x: int, floor: int = 256) -> int:
     per-level routines hit the compile cache across levels and designs."""
     x = max(x, floor)
     return 1 << (x - 1).bit_length()
+
+
+# Dense-incidence attachment policy (see HypergraphArrays.from_host):
+# lane padding of the incidence matrix, and the largest tolerated blowup
+# of the dense [n_pad, D_pad] layout over the raw pin count.
+_INCIDENCE_LANE_PAD = 8
+_INCIDENCE_MAX_EXPANSION = 16
 
 
 @jax.tree_util.register_pytree_node_class
@@ -158,11 +216,16 @@ class HypergraphArrays:
     # and all pow2-bucketed levels share one compilation.
     n: jnp.ndarray | int
     m: jnp.ndarray | int
+    # Optional dense incidence layout [n_pad, D_pad] (pad = -1) for the
+    # Pallas gain kernels; None when no kernel path is reachable (pure
+    # CPU runs), so XLA-only consumers never pay for it.
+    incident: Optional[jnp.ndarray] = None
 
     # -- pytree plumbing ---------------------------------------------------
     def tree_flatten(self):
         leaves = (self.pin_vertex, self.pin_edge, self.vertex_weights,
-                  self.edge_weights, self.edge_sizes, self.n, self.m)
+                  self.edge_weights, self.edge_sizes, self.n, self.m,
+                  self.incident)
         return leaves, ()
 
     @classmethod
@@ -191,6 +254,7 @@ class HypergraphArrays:
     @staticmethod
     def from_host(hg: Hypergraph, pad_pins=None, pad_edges=None,
                   pad_vertices=None) -> "HypergraphArrays":
+        from repro.kernels.ops import gain_layout_enabled
         p = hg.num_pins
         p_pad = pad_pins if pad_pins is not None else _round_pow2(p + 1)
         m_pad = (pad_edges if pad_edges is not None
@@ -209,6 +273,19 @@ class HypergraphArrays:
         ew[: hg.m] = hg.edge_weights
         es = np.zeros(m_pad, np.int32)
         es[: hg.m] = hg.edge_sizes()
+
+        incident = None
+        if hg.m and gain_layout_enabled():
+            d_pad = max(_round_pow2(max(hg.max_degree(), 1),
+                                    _INCIDENCE_LANE_PAD),
+                        _INCIDENCE_LANE_PAD)
+            # guard against pathological hub vertices: a dense [n_pad, D]
+            # layout much larger than the CSR itself would thrash HBM
+            # instead of saving it — skip it and let the dispatcher fall
+            # back to the XLA paths.
+            if n_pad * d_pad <= _INCIDENCE_MAX_EXPANSION * max(p, 1):
+                incident = jnp.asarray(hg.incidence_matrix(
+                    n_pad, lane_pad=_INCIDENCE_LANE_PAD))
         return HypergraphArrays(
             pin_vertex=jnp.asarray(pin_vertex),
             pin_edge=jnp.asarray(pin_edge),
@@ -216,6 +293,7 @@ class HypergraphArrays:
             edge_weights=jnp.asarray(ew),
             edge_sizes=jnp.asarray(es),
             n=hg.n, m=hg.m,
+            incident=incident,
         )
 
 

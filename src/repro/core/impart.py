@@ -82,8 +82,12 @@ def impart_partition(hg: Hypergraph, cfg: ImpartConfig) -> ImpartResult:
         if li < num_levels - 1:
             cmap = hier.levels[li + 1].cluster_id
             parts = parts[:, cmap]
+        # arrays() is cached per level (kernel layouts included), so the
+        # host->device conversion and the incidence re-blocking happen
+        # once however many rounds/recombinations revisit this level
         hga = lv.hg.arrays()
-        # one batched lp/FM dispatch refines all alpha members together
+        # device-resident refinement: all alpha members refine together,
+        # and each LP round (attempts included) is a single dispatch
         parts, cuts = refine_mod.refine_population(
             hga, parts, k, eps, fm_node_limit=cfg.fm_node_limit,
             max_iters=cfg.lp_iters)

@@ -68,29 +68,101 @@ def imbalance(hga: HypergraphArrays, part: jnp.ndarray, k: int) -> jnp.ndarray:
 # --------------------------------------------------------------------------
 # FM move gains
 # --------------------------------------------------------------------------
-def gain_matrix(hga: HypergraphArrays, part: jnp.ndarray, k: int,
-                phi: jnp.ndarray | None = None) -> jnp.ndarray:
-    """Full [n_pad, k] cut-size gain matrix.
+def _edge_gain_terms(hga: HypergraphArrays, phi: jnp.ndarray):
+    """Per-edge FM terms (stage 1 of the gain pipeline):
+    becomes_internal [m_pad, k] and was_internal [m_pad]."""
+    sizes = hga.edge_sizes[:, None]
+    w = hga.edge_weights[:, None]
+    becomes_internal = jnp.where(phi == sizes - 1, w, 0.0)
+    was_internal = jnp.where((phi == sizes) & (sizes > 0), w, 0.0).sum(-1)
+    return becomes_internal, was_internal
 
-    gain[v, j] = reduction in cut if v moves from part[v] to j
-               = sum_{e in I(v)} w_e * ( [Phi(e,j) == |e|-1]  (becomes internal)
-                                        - [Phi(e,part[v]) == |e|] (was internal) )
-    gain[v, part[v]] == 0 by construction.
-    """
-    if phi is None:
-        phi = pins_in_block(hga, part, k)                  # [m_pad, k]
-    sizes = hga.edge_sizes[:, None]                        # [m_pad, 1]
-    w = hga.edge_weights[:, None]                          # [m_pad, 1]
-    becomes_internal = jnp.where(phi == sizes - 1, w, 0.0)  # [m_pad, k]
-    was_internal = jnp.where((phi == sizes) & (sizes > 0), w, 0.0).sum(-1)  # [m_pad]
 
+def _gain_segsum(hga: HypergraphArrays, phi: jnp.ndarray) -> jnp.ndarray:
+    """XLA reference assembly: per-pin gather + segment-sum.  Materialises
+    a [P, k] intermediate — fine for small k, the fallback everywhere."""
+    becomes_internal, was_internal = _edge_gain_terms(hga, phi)
     per_pin_gain = becomes_internal[hga.pin_edge]          # [P, k]
     per_pin_loss = was_internal[hga.pin_edge]              # [P]
     g = jax.ops.segment_sum(per_pin_gain, hga.pin_vertex,
                             num_segments=hga.n_pad)        # [n_pad, k]
     l = jax.ops.segment_sum(per_pin_loss, hga.pin_vertex,
                             num_segments=hga.n_pad)        # [n_pad]
-    g = g - l[:, None]
+    return g - l[:, None]
+
+
+def _gain_compact(hga: HypergraphArrays, phi: jnp.ndarray, k: int
+                  ) -> jnp.ndarray:
+    """Sparse XLA assembly for large k, O(P) instead of O(P * k).
+
+    ``becomes_internal`` has at most TWO nonzero columns per edge: an
+    edge of size s >= 3 can have Phi = s-1 in at most one block (the
+    counts sum to s), a size-2 edge in at most two, and size <= 1 edges
+    contribute exactly zero net gain off the diagonal (becoming internal
+    at j is paid back by leaving the block where they were internal), so
+    they are dropped entirely.  The two (column, weight) pairs per edge
+    scatter through the pins straight into the [n_pad, k] gain table —
+    no [P, k] or [m_pad, k]-gather intermediate.  The scatter indices
+    stay 2-D (vertex row, block column): a flattened ``v * k + j`` index
+    would overflow int32 exactly in the n_pad * k > 2**31 fine-level
+    large-k regime this path exists for.
+    """
+    w = hga.edge_weights
+    s = hga.edge_sizes[:, None]
+    multi = hga.edge_sizes >= 2
+    mask = (phi == s - 1) & multi[:, None]                 # <=2 true per row
+    cols = jnp.arange(k, dtype=jnp.int32)[None, :]
+    c1 = jnp.min(jnp.where(mask, cols, k), axis=1)         # k = "none"
+    c2 = jnp.min(jnp.where(mask & (cols != c1[:, None]), cols, k), axis=1)
+    was_internal = jnp.where((phi == s) & multi[:, None], w[:, None],
+                             0.0).sum(-1)
+
+    pe, pv = hga.pin_edge, hga.pin_vertex
+    # "none" columns land at j == k, out of bounds -> dropped by the mode
+    g = (jnp.zeros((hga.n_pad, k), jnp.float32)
+         .at[pv, c1[pe]].add(w[pe], mode="drop")
+         .at[pv, c2[pe]].add(w[pe], mode="drop"))
+    l = jax.ops.segment_sum(was_internal[pe], pv, num_segments=hga.n_pad)
+    return g - l[:, None]
+
+
+def _resolve_gain_path(hga: HypergraphArrays, k: int, assemble: str) -> str:
+    """Static (trace-time) path choice: "auto" consults the ops
+    dispatcher by (m_pad, k, backend); a concrete path name forces it
+    (the FM move loop pins "segsum" — see ``refine._fm_pass_impl``)."""
+    from repro.kernels import ops
+    if assemble == "auto":
+        return ops.gain_path(hga.m_pad, k, incidence=hga.incident is not None)
+    return assemble
+
+
+def gain_matrix(hga: HypergraphArrays, part: jnp.ndarray, k: int,
+                phi: jnp.ndarray | None = None,
+                assemble: str = "auto") -> jnp.ndarray:
+    """Full [n_pad, k] cut-size gain matrix.
+
+    gain[v, j] = reduction in cut if v moves from part[v] to j
+               = sum_{e in I(v)} w_e * ( [Phi(e,j) == |e|-1]  (becomes internal)
+                                        - [Phi(e,part[v]) == |e|] (was internal) )
+    gain[v, part[v]] == 0 by construction.
+
+    Assembly is routed through the ``kernels.ops`` gain dispatcher (see
+    its docstring for the decision table): Pallas whole-table/streaming
+    kernels on compiled backends, segment-sum or the compact sparse path
+    on CPU.  All paths agree to float tolerance; within one path the
+    scalar and vmapped population entry points agree bit-for-bit.
+    """
+    if phi is None:
+        phi = pins_in_block(hga, part, k)                  # [m_pad, k]
+    path = _resolve_gain_path(hga, k, assemble)
+    if path == "compact":
+        g = _gain_compact(hga, phi, k)
+    elif path == "segsum" or hga.incident is None:
+        g = _gain_segsum(hga, phi)
+    else:
+        from repro.kernels import ops
+        bi, wi = _edge_gain_terms(hga, phi)
+        g = ops.gain_assemble(hga.incident, bi, wi, path)  # [n_pad, k]
     # moving to your own block is never a move
     g = g.at[jnp.arange(hga.n_pad), part].set(0.0)
     return g
@@ -142,9 +214,34 @@ connectivity_population = jax.jit(
     _over_parts(connectivity), static_argnums=2)        # [alpha, m_pad]
 cutsize_population = jax.jit(
     _over_parts(cutsize), static_argnums=2)             # [alpha]
+
+
+def _gain_matrix_population_impl(hga: HypergraphArrays, parts: jnp.ndarray,
+                                 k: int, assemble: str = "auto"
+                                 ) -> jnp.ndarray:
+    """Population gain matrices [alpha, n_pad, k] in one dispatch.
+
+    XLA paths vmap the scalar ``gain_matrix`` (bit-identical per lane);
+    kernel paths call the explicitly alpha-gridded batch kernels instead
+    of vmapping a ``pallas_call`` (same tile program per member, so each
+    member still matches its single-member launch bit-for-bit).
+    """
+    path = _resolve_gain_path(hga, k, assemble)
+    if path in ("segsum", "compact") or hga.incident is None:
+        return _over_parts(
+            lambda h, p, kk: gain_matrix(h, p, kk, assemble=path))(
+                hga, parts, k)
+    from repro.kernels import ops
+    phi = _over_parts(pins_in_block)(hga, parts, k)     # [alpha, m_pad, k]
+    bi, wi = jax.vmap(_edge_gain_terms, in_axes=(None, 0))(hga, phi)
+    g = ops.gain_assemble_batch(hga.incident, bi, wi, path)
+    return jax.vmap(
+        lambda gg, p: gg.at[jnp.arange(hga.n_pad), p].set(0.0))(g, parts)
+
+
 gain_matrix_population = jax.jit(
-    _over_parts(lambda hga, part, k: gain_matrix(hga, part, k)),
-    static_argnums=2)                                   # [alpha, n_pad, k]
+    _gain_matrix_population_impl,
+    static_argnames=("k", "assemble"))                  # [alpha, n_pad, k]
 
 
 @partial(jax.jit, static_argnames=("k",))
@@ -163,6 +260,6 @@ def edge_distance_matrix(hga: HypergraphArrays, parts: jnp.ndarray, k: int
 cutsize_jit = jax.jit(cutsize, static_argnums=2)
 km1_jit = jax.jit(km1, static_argnums=2)
 connectivity_jit = jax.jit(connectivity, static_argnums=2)
-gain_matrix_jit = jax.jit(gain_matrix, static_argnums=2)
+gain_matrix_jit = jax.jit(gain_matrix, static_argnames=("k", "assemble"))
 edge_distance_jit = jax.jit(edge_distance, static_argnums=3)
 block_weights_jit = jax.jit(block_weights, static_argnums=2)

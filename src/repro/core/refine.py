@@ -8,11 +8,22 @@
   hill-climbing and best-prefix rollback, expressed as a ``lax.scan``.
   Used on coarse levels (small n) where move quality matters most.
 
-Both guarantee: the returned partition never violates the balance cap and
-never has a larger cut than the input.
+The population LP tier is device-resident: the whole 5-attempt
+frac-halving acceptance loop of a round runs inside one jitted
+``lax.while_loop`` (``_lp_attempt_population``), so ``lp_refine_population``
+performs ONE dispatch plus one small readback (cuts + improved flags) per
+round instead of up to 10 blocking round-trips.  Per-member trajectories
+stay bit-identical to the scalar ``lp_refine`` host loop on
+integer-weight instances.
+
+Both tiers guarantee: the returned partition never violates the balance
+cap and never has a larger cut than the input.
 """
 from __future__ import annotations
 
+import dataclasses
+import weakref
+from collections import OrderedDict
 from functools import partial
 from typing import Tuple
 
@@ -83,19 +94,21 @@ def accept_moves(part: jnp.ndarray, target: jnp.ndarray, gain: jnp.ndarray,
     return jnp.where(accept, target, part)
 
 
-def _lp_round_impl(hga: HypergraphArrays, part: jnp.ndarray, k: int,
-                   cap: jnp.ndarray, frac: jnp.ndarray,
-                   edge_weight_override: jnp.ndarray | None = None
-                   ) -> jnp.ndarray:
-    """lp_round body (unjitted; shared by the scalar and the vmapped
-    population entry points)."""
-    h = hga
-    if edge_weight_override is not None:
-        h = HypergraphArrays(hga.pin_vertex, hga.pin_edge,
-                             hga.vertex_weights, edge_weight_override,
-                             hga.edge_sizes, hga.n, hga.m)
+def _with_weights(hga: HypergraphArrays,
+                  edge_weight_override: jnp.ndarray | None
+                  ) -> HypergraphArrays:
+    if edge_weight_override is None:
+        return hga
+    return dataclasses.replace(hga, edge_weights=edge_weight_override)
+
+
+def _lp_round_from_gains(h: HypergraphArrays, part: jnp.ndarray, k: int,
+                         cap: jnp.ndarray, frac: jnp.ndarray,
+                         gains: jnp.ndarray) -> jnp.ndarray:
+    """Proposal + balanced acceptance given a precomputed gain matrix
+    (the gain assembly is hoisted out so population callers can route it
+    through the batched kernels instead of vmapping a pallas_call)."""
     n_pad = h.n_pad
-    gains = metrics.gain_matrix(h, part, k)                   # [n_pad, k]
     own = jax.nn.one_hot(part, k, dtype=bool)
     gains = jnp.where(own, NEG, gains)
     best_j = jnp.argmax(gains, axis=-1).astype(jnp.int32)
@@ -106,6 +119,17 @@ def _lp_round_impl(hga: HypergraphArrays, part: jnp.ndarray, k: int,
     bw = metrics.block_weights(h, part, k)
     return accept_moves(part, best_j, best_g, propose, h.vertex_weights,
                         bw, cap, frac, k)
+
+
+def _lp_round_impl(hga: HypergraphArrays, part: jnp.ndarray, k: int,
+                   cap: jnp.ndarray, frac: jnp.ndarray,
+                   edge_weight_override: jnp.ndarray | None = None
+                   ) -> jnp.ndarray:
+    """lp_round body (unjitted; shared by the scalar and the population
+    entry points)."""
+    h = _with_weights(hga, edge_weight_override)
+    gains = metrics.gain_matrix(h, part, k)                   # [n_pad, k]
+    return _lp_round_from_gains(h, part, k, cap, frac, gains)
 
 
 @partial(jax.jit, static_argnames=("k",))
@@ -123,6 +147,20 @@ def lp_round(hga: HypergraphArrays, part: jnp.ndarray, k: int,
     return _lp_round_impl(hga, part, k, cap, frac, edge_weight_override)
 
 
+def _lp_round_population_impl(hga: HypergraphArrays, parts: jnp.ndarray,
+                              k: int, cap: jnp.ndarray, fracs: jnp.ndarray,
+                              edge_weight_override: jnp.ndarray | None = None
+                              ) -> jnp.ndarray:
+    """lp_round for all members: gains come from the batched dispatcher
+    (one kernel launch for the population), the proposal/acceptance tail
+    is vmapped — per-lane ops identical to the scalar round."""
+    h = _with_weights(hga, edge_weight_override)
+    gains = metrics._gain_matrix_population_impl(h, parts, k)
+    return jax.vmap(
+        lambda p, f, g: _lp_round_from_gains(h, p, k, cap, f, g))(
+            parts, fracs, gains)
+
+
 @partial(jax.jit, static_argnames=("k",))
 def lp_round_population(hga: HypergraphArrays, parts: jnp.ndarray, k: int,
                         cap: jnp.ndarray, fracs: jnp.ndarray,
@@ -131,10 +169,52 @@ def lp_round_population(hga: HypergraphArrays, parts: jnp.ndarray, k: int,
     """One parallel move round for ALL population members in a single
     dispatch.  ``parts`` [alpha, n_pad]; ``fracs`` [alpha] per-member
     acceptance fraction (the host anneals them independently)."""
-    def one(part, frac):
-        return _lp_round_impl(hga, part, k, cap, frac,
-                              edge_weight_override)
-    return jax.vmap(one)(parts, fracs)
+    return _lp_round_population_impl(hga, parts, k, cap, fracs,
+                                     edge_weight_override)
+
+
+@partial(jax.jit, static_argnames=("k",))
+def _lp_attempt_population(hga: HypergraphArrays, parts: jnp.ndarray,
+                           cuts: jnp.ndarray, fracs: jnp.ndarray,
+                           attempts: jnp.ndarray, k: int, cap: jnp.ndarray,
+                           edge_weight_override: jnp.ndarray | None = None):
+    """Device-resident LP attempt loop fused into one ``lax.while_loop``.
+
+    Per member (mirroring the scalar ``lp_refine`` inner loop exactly):
+    propose a round at the current acceptance fraction, measure the cut
+    on the TRUE edge weights, accept on improvement, otherwise quarter
+    the fraction and retry.  The loop spins on-device while NO lane
+    improves (the case that used to cost 2 blocking dispatches per
+    attempt); once any lane improves — typically all of them, on the
+    first attempt — it returns so the host can drop the improved lanes
+    from the batch and resume the stragglers in a smaller shape bucket
+    with the remaining ``attempts`` (a traced scalar, so bucket size is
+    the only thing that retraces).
+
+    Returns ``(parts, cuts, improved, fracs, used)``; cuts are f32
+    (bit-identical trajectories are guaranteed on integer-weight
+    instances, as in the host loop this replaces).
+    """
+    def cond(carry):
+        _, _, _, improved, t = carry
+        return (t < attempts) & ~improved.any()
+
+    def body(carry):
+        parts, cuts, fracs, improved, t = carry
+        cands = _lp_round_population_impl(hga, parts, k, cap, fracs,
+                                          edge_weight_override)
+        cs = jax.vmap(lambda p: metrics.cutsize(hga, p, k))(cands)
+        take = cs < cuts - 1e-6
+        parts = jnp.where(take[:, None], cands, parts)
+        cuts = jnp.where(take, cs, cuts)
+        fracs = jnp.where(take, fracs, fracs * 0.25)
+        return parts, cuts, fracs, improved | take, t + 1
+
+    init = (parts, cuts, fracs, jnp.zeros(parts.shape[0], bool),
+            jnp.int32(0))
+    parts, cuts, fracs, improved, used = jax.lax.while_loop(cond, body,
+                                                            init)
+    return parts, cuts, improved, fracs, used
 
 
 
@@ -171,13 +251,15 @@ def lp_refine_population(hga: HypergraphArrays, parts, k: int, eps: float,
                          max_iters: int = 24, patience: int = 3,
                          edge_weight_override=None
                          ) -> Tuple[np.ndarray, np.ndarray]:
-    """Batched ``lp_refine``: one XLA dispatch per round covers the whole
-    population.
+    """Batched ``lp_refine``: ONE device dispatch per round covers the
+    whole population, attempts included.
 
-    Control state (acceptance fraction, stall counter, convergence) is
-    tracked PER MEMBER on the host, so each member follows exactly the
-    trajectory the scalar ``lp_refine`` would give it — the batched and
-    looped paths agree bit-for-bit on integer-weight instances.
+    The per-round acceptance loop (5 frac-halving attempts + cut
+    evaluation) runs on-device inside ``_lp_attempt_population``; the
+    host only tracks stall counters and convergence per member, so each
+    member follows exactly the trajectory the scalar ``lp_refine`` would
+    give it — the batched and looped paths agree bit-for-bit on
+    integer-weight instances.
     Returns (parts [alpha, n_pad], cuts [alpha]).
     """
     cap = metrics.balance_cap(hga.total_weight, k, eps)
@@ -186,40 +268,47 @@ def lp_refine_population(hga: HypergraphArrays, parts, k: int, eps: float,
     cuts = np.asarray(metrics.cutsize_population(hga, parts, k), np.float64)
     stall = np.zeros(alpha, np.int32)
     done = np.zeros(alpha, bool)
-    fracs = np.ones(alpha, np.float32)
     for _ in range(max_iters):
-        fracs[:] = 1.0
-        improved = np.zeros(alpha, bool)
-        for _attempt in range(5):
-            active = ~done & ~improved
-            if not active.any():
-                break
-            # compact to the active subpopulation: converged / already-
-            # improved members cost nothing, mirroring the scalar loop's
-            # early exits (per-member trajectories are unchanged).  Each
-            # distinct active count traces once — bounded by alpha, paid
-            # once per padded-shape bucket, then pure hot-path savings
-            # (padding to pow2 sizes would waste up to 40% compute every
-            # round to save a handful of one-time compiles).
-            idx = np.nonzero(active)[0]
-            sub = parts[jnp.asarray(idx)] if len(idx) < alpha else parts
-            cands = lp_round_population(hga, sub, k, cap,
-                                        jnp.asarray(fracs[idx]),
-                                        edge_weight_override)
-            cs = np.asarray(metrics.cutsize_population(hga, cands, k),
-                            np.float64)
-            take = cs < cuts[idx] - 1e-6
-            if take.any():
-                tidx = idx[take]
-                parts = parts.at[jnp.asarray(tidx)].set(
-                    cands[jnp.asarray(take)])
-                cuts[tidx] = cs[take]
-                improved[tidx] = True
-            fracs[idx[~take]] *= 0.25
-        stall = np.where(improved, 0, stall + 1).astype(np.int32)
-        done |= stall >= patience
-        if done.all():
+        active = np.nonzero(~done)[0]
+        if len(active) == 0:
             break
+        # compact to the active subpopulation: converged members cost
+        # nothing, mirroring the scalar loop's early exits (per-member
+        # trajectories are unchanged).  Each distinct active count traces
+        # once — bounded by alpha, paid once per padded-shape bucket,
+        # then pure hot-path savings.  Within a round, the fused attempt
+        # loop is ONE dispatch per shape bucket: the device loop spins
+        # through no-improvement attempts itself and returns when lanes
+        # improve (usually attempt 1, usually all of them); only
+        # stragglers re-dispatch in a smaller bucket with the leftover
+        # attempt budget.  The only data read back per dispatch are the
+        # [active]-sized cuts / improved / fracs vectors.
+        improved_round = np.zeros(alpha, bool)
+        idx = active
+        fracs = np.ones(alpha, np.float32)
+        remaining = 5
+        while remaining > 0 and len(idx):
+            sub = parts[jnp.asarray(idx)] if len(idx) < alpha else parts
+            new_sub, new_cuts, improved, new_fracs, used = \
+                _lp_attempt_population(
+                    hga, sub, jnp.asarray(cuts[idx], jnp.float32),
+                    jnp.asarray(fracs[idx]), jnp.int32(remaining), k, cap,
+                    edge_weight_override=edge_weight_override)
+            improved = np.asarray(improved)
+            if len(idx) < alpha:
+                parts = parts.at[jnp.asarray(idx)].set(new_sub)
+            else:
+                parts = new_sub
+            # unimproved lanes pass their cuts through the f32 carry
+            # unchanged (all cuts originate f32), so this is pure update
+            cuts[idx] = np.asarray(new_cuts, np.float64)
+            fracs[idx] = np.asarray(new_fracs)
+            improved_round[idx[improved]] = True
+            remaining -= int(used)
+            idx = idx[~improved]
+        stall[active] = np.where(improved_round[active], 0,
+                                 stall[active] + 1)
+        done |= stall >= patience
     return np.asarray(parts), cuts
 
 
@@ -247,7 +336,13 @@ def _fm_pass_impl(hga: HypergraphArrays, part: jnp.ndarray, k: int,
 
     def body(carry):
         part, phi, bw, locked, cur_cut, best_cut, best_part, t, _ = carry
-        gains = metrics.gain_matrix(hga, part, k, phi=phi)    # [n_pad, k]
+        # FM pins the segsum path: this body is vmapped by the population
+        # pass, so batching must stay a plain XLA transform (never a
+        # pallas_call), and FM only runs on coarse levels whose tiny pin
+        # counts make the [P, k] segment-sum cheaper per move step than
+        # the compact path's fixed extract/scatter overhead
+        gains = metrics.gain_matrix(hga, part, k, phi=phi,
+                                    assemble="segsum")        # [n_pad, k]
         own = jax.nn.one_hot(part, k, dtype=bool)
         feasible = (bw[None, :] + hga.vertex_weights[:, None]) <= cap + 1e-6
         score = jnp.where(own | ~feasible, NEG, gains)
@@ -331,6 +426,35 @@ def _population_shard_devices():
     return devs if len(devs) > 1 else None
 
 
+# Per-device placements of refinement inputs, keyed on (id(obj), device).
+# ``fm_refine_population`` used to re-ship the whole hypergraph to every
+# device on every call — once per pass per level.  The level's
+# HypergraphArrays object is stable across passes (``Hypergraph.arrays``
+# caches it), so the transfer happens once per (level, device).  A
+# weakref guards against id() reuse after the level is garbage-collected.
+_PLACEMENT_CACHE: "OrderedDict[tuple, tuple]" = OrderedDict()
+_PLACEMENT_CACHE_MAX = 64
+
+
+def _device_put_cached(obj, device):
+    key = (id(obj), getattr(device, "id", device))
+    hit = _PLACEMENT_CACHE.get(key)
+    if hit is not None:
+        ref, placed = hit
+        if ref() is obj:
+            _PLACEMENT_CACHE.move_to_end(key)
+            return placed
+        del _PLACEMENT_CACHE[key]          # id() was recycled
+    placed = jax.device_put(obj, device)
+    _PLACEMENT_CACHE[key] = (weakref.ref(obj), placed)
+    # release the device buffers as soon as the level dies, not when 64
+    # newer placements eventually evict the entry
+    weakref.finalize(obj, _PLACEMENT_CACHE.pop, key, None)
+    while len(_PLACEMENT_CACHE) > _PLACEMENT_CACHE_MAX:
+        _PLACEMENT_CACHE.popitem(last=False)
+    return placed
+
+
 def fm_refine_population(hga: HypergraphArrays, parts, k: int, eps: float,
                          max_passes: int = 8,
                          step_budget: int | None = None
@@ -352,7 +476,7 @@ def fm_refine_population(hga: HypergraphArrays, parts, k: int, eps: float,
     done = np.zeros(alpha, bool)
     devs = _population_shard_devices() if alpha > 1 else None
     if devs:
-        hga_d = [jax.device_put(hga, d) for d in devs]
+        hga_d = [_device_put_cached(hga, d) for d in devs]
         cap_d = [jax.device_put(cap, d) for d in devs]
     for _ in range(max_passes):
         idx = np.nonzero(~done)[0]  # compact: finished members drop out

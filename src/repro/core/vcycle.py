@@ -42,7 +42,10 @@ def vcycle(hg: Hypergraph, part: np.ndarray, k: int, eps: float,
         cur = newp
 
     # uncoarsen + refine (the batched engine with a population of one —
-    # vcycle shares the exact dispatch path impart's alpha-population uses)
+    # vcycle shares the exact dispatch path impart's alpha-population
+    # uses, including the fused on-device LP attempt loop; arrays() is
+    # cached per level, and mutation's reweighted hypergraphs share the
+    # structural layout cache, so repeated V-cycles re-block nothing)
     cur = parts_per_level[-1]
     for li in range(len(hier.levels) - 1, -1, -1):
         lv = hier.levels[li]

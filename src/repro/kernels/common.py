@@ -1,7 +1,40 @@
-"""Shared helpers for the Pallas kernels."""
+"""Shared helpers + sizing constants for the Pallas kernels.
+
+The constants below are the single source of truth for every "does this
+fit on-chip?" gate in :mod:`repro.kernels.ops` (they used to be magic
+numbers scattered over the call sites).
+"""
 from __future__ import annotations
 
 import jax.numpy as jnp
+
+#: Per-core VMEM working-set budget the kernels size themselves against.
+#: Current TPU cores expose ~16 MiB of VMEM; a kernel invocation should
+#: stay well under it so the pipelined (double-buffered) operand tiles,
+#: the output tile and the scratch accumulator all fit at once.
+VMEM_BUDGET_BYTES = 16 * 2**20
+
+#: Hard cap on ``k`` for the single-word kernels.  Two independent
+#: derivations land on the same number:
+#:   * the connectivity/cutsize kernels pack "edge touches block j" into
+#:     one uint32 lane bitmask, so k is capped by the 32-bit VPU word;
+#:   * the whole-table gain kernel keeps the full [M, k] fp32 edge table
+#:     resident in VMEM — at the coarse-level ceiling M = 16K pinning
+#:     k at 32 bounds the table to 16K * 32 * 4 B = 2 MiB, an eighth of
+#:     ``VMEM_BUDGET_BYTES``, leaving room for the [block_n, D, k]
+#:     gather tile and double buffering.
+#: Beyond this, connectivity falls back to the XLA segment-sum and the
+#: gain dispatcher switches to the streaming kernel (edge-table tiling).
+KERNEL_MAX_K = 32
+
+#: Budget for a whole [M, k] edge table resident in VMEM (the
+#: ``gain_gather_*`` kernels) — 1/8 of VMEM, see ``KERNEL_MAX_K``.
+GAIN_TABLE_VMEM_BYTES = VMEM_BUDGET_BYTES // 8
+
+#: Budget for one streamed tile of the ``gain_stream_*`` kernels: the
+#: [block_n, D, k] gather intermediate (the largest tensor the kernel
+#: materialises).  Block sizes are derived from it at trace time.
+GAIN_STREAM_TILE_BYTES = VMEM_BUDGET_BYTES // 8
 
 
 def pad_rows(x: jnp.ndarray, mult: int, fill) -> jnp.ndarray:
@@ -17,3 +50,22 @@ def pad_rows(x: jnp.ndarray, mult: int, fill) -> jnp.ndarray:
         return x
     widths = [(0, r_pad - r)] + [(0, 0)] * (x.ndim - 1)
     return jnp.pad(x, widths, constant_values=fill)
+
+
+def _pow2_floor(x: int, lo: int, hi: int) -> int:
+    """Largest power of two in [lo, hi] that is <= x (clamped)."""
+    x = max(int(x), lo)
+    p = 1 << (x.bit_length() - 1)
+    return int(min(max(p, lo), hi))
+
+
+def stream_block_n(d: int, k: int) -> int:
+    """Vertex-tile rows for the streaming gain kernels: the [bn, D, k]
+    gather tile must fit ``GAIN_STREAM_TILE_BYTES``."""
+    return _pow2_floor(GAIN_STREAM_TILE_BYTES // max(d * k * 4, 1), 8, 256)
+
+
+def stream_block_m(k: int) -> int:
+    """Edge-table tile rows for the streaming gain kernels: the
+    [bm, k] table tile must fit ``GAIN_STREAM_TILE_BYTES``."""
+    return _pow2_floor(GAIN_STREAM_TILE_BYTES // max(k * 4, 1), 8, 512)

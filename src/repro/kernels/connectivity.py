@@ -27,7 +27,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from .common import pad_rows as _pad_rows
+from .common import KERNEL_MAX_K, pad_rows as _pad_rows
 
 
 def _or_reduce(bits: jnp.ndarray, axis: int) -> jnp.ndarray:
@@ -51,10 +51,11 @@ def _connectivity_kernel(pins_ref, part_ref, lam_ref, *, k: int):
 def connectivity_pallas(pins: jnp.ndarray, part: jnp.ndarray, k: int,
                         block_m: int = 512, interpret: bool = True
                         ) -> jnp.ndarray:
-    """lambda(e) [M] int32.  k <= 32 (bitmask width).  The edge count
-    need not be a multiple of ``block_m`` — pad edges (all pins = -1)
-    are appended internally and sliced off the result."""
-    assert k <= 32, "bitmask kernel supports k <= 32; use two-word variant"
+    """lambda(e) [M] int32.  k <= KERNEL_MAX_K (uint32 bitmask width).
+    The edge count need not be a multiple of ``block_m`` — pad edges
+    (all pins = -1) are appended internally and sliced off the result."""
+    assert k <= KERNEL_MAX_K, \
+        "bitmask kernel supports k <= KERNEL_MAX_K; use two-word variant"
     m, s = pins.shape
     n = part.shape[0]
     pins = _pad_rows(pins, block_m, -1)
@@ -101,7 +102,7 @@ def cutsize_pallas(pins: jnp.ndarray, part: jnp.ndarray,
                    interpret: bool = True) -> jnp.ndarray:
     """Fused cut-size reduction (single scalar out, accumulated across the
     edge-tile grid — sequential TPU grid makes the accumulation safe)."""
-    assert k <= 32
+    assert k <= KERNEL_MAX_K
     m, s = pins.shape
     n = part.shape[0]
     pins = _pad_rows(pins, block_m, -1)          # pad edges span 0 blocks

@@ -1,25 +1,38 @@
-"""Pallas TPU kernel: FM move-gain assembly.
+"""Pallas TPU kernels: FM move-gain assembly.
 
 Second hot spot of the partitioner: turning per-edge state into per-vertex
 k-way gains.  Two stages:
 
-  1. ``edge_terms`` (cheap, done in jnp inside ops.py): from Phi[M, k]
-     compute ``becomes_internal[M, k]`` and ``was_internal[M]``.
-  2. **this kernel**: for each vertex, gather + sum the rows of its
+  1. edge terms (cheap, done in jnp inside core/metrics.py): from
+     Phi[M, k] compute ``becomes_internal[M, k]`` and ``was_internal[M]``.
+  2. **these kernels**: for each vertex, gather + sum the rows of its
      incident edges — a fused gather-reduce over the dual CSR, re-blocked
      as a padded incidence matrix ``incident[N, D]`` (pad = -1).
 
-TPU adaptation: the per-edge table (M x k fp32) sits whole in VMEM —
-sized for the coarse levels where FM runs (m <= ~16k, k <= 32 -> 2 MB).
-Fine levels use the XLA segment-sum path.  The gather is a VMEM dynamic
-row gather (``jnp.take``), the reduction runs on the VPU with a [bn, D, k]
-tile that is chosen to fit the ~16 MB VMEM budget.
+Two kernel families, chosen by the dispatcher in ``kernels/ops.py``:
 
-The population-batched variant (``gain_gather_batch_pallas``) grids over
-``(alpha, n // block_n)``: the incidence tile is SHARED across the alpha
-axis (same hypergraph for every member) while each member brings its own
-``becomes_internal`` / ``was_internal`` tables — the memetic population
-refines in one kernel launch.
+* **Whole-table** (``gain_gather_pallas``): the per-edge table (M x k
+  fp32) sits whole in VMEM — sized for the coarse levels where FM runs
+  (m <= ~16k, k <= 32 -> 2 MB, see ``common.KERNEL_MAX_K``).  The gather
+  is a VMEM dynamic row gather (``jnp.take``), the reduction runs on the
+  VPU with a [bn, D, k] tile chosen to fit the VMEM budget.
+
+* **Streaming** (``gain_stream_pallas``): fine levels / large k, where
+  [M, k] exceeds VMEM.  The grid adds an edge-table axis: tile ``t``
+  sees only rows ``[t*block_m, (t+1)*block_m)`` of the per-edge tables,
+  gathers the incident edges that fall inside that window (everything
+  else masks to zero) and accumulates the partial gains into the output
+  tile, which stays resident in VMEM across all edge-table tiles of a
+  vertex tile (the TPU grid is sequential, so revisiting the same output
+  block is the idiomatic scratch accumulator).  No [M, k] table and no
+  [P, k] per-pin tensor is ever materialised whole.
+
+The population-batched variants (``gain_gather_batch_pallas`` /
+``gain_stream_batch_pallas``) prepend an ``alpha`` grid axis: the
+incidence tile is SHARED across the alpha axis (same hypergraph for
+every member) while each member brings its own ``becomes_internal`` /
+``was_internal`` tables — the memetic population refines in one kernel
+launch.
 """
 from __future__ import annotations
 
@@ -29,7 +42,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from .common import pad_rows as _pad_rows
+from .common import (pad_rows as _pad_rows, stream_block_m as _stream_bm,
+                     stream_block_n as _stream_bn)
 
 
 def _gain_kernel(inc_ref, bi_ref, wi_ref, out_ref):
@@ -119,4 +133,137 @@ def gain_gather_batch_pallas(incident: jnp.ndarray,
         out_shape=jax.ShapeDtypeStruct((alpha, n_pad, k), jnp.float32),
         interpret=interpret,
     )(incident, becomes_internal, was_internal)
+    return out[:, :n]
+
+
+# --------------------------------------------------------------------------
+# streaming fine-level kernels: tile the edge tables, accumulate in VMEM
+# --------------------------------------------------------------------------
+def _gain_stream_kernel(inc_ref, bi_ref, wi_ref, out_ref, *, block_m: int):
+    t = pl.program_id(1)                          # edge-table tile index
+    inc = inc_ref[...]                            # [bn, D] int32
+    bi = bi_ref[...]                              # [bm, k] table tile
+    wi = wi_ref[...]                              # [bm]
+    local = inc - t * block_m                     # edge id within the tile
+    valid = (inc >= 0) & (local >= 0) & (local < block_m)
+    safe = jnp.where(valid, local, 0)
+    rows = jnp.take(bi, safe, axis=0) * valid[..., None]   # [bn, D, k]
+    loss = jnp.take(wi, safe, axis=0) * valid              # [bn, D]
+    partial = rows.sum(axis=1) - loss.sum(axis=1, keepdims=True)
+
+    # the output tile doubles as the VMEM scratch accumulator: its index
+    # map ignores t, so the same block stays resident across the whole
+    # edge-table sweep (sequential TPU grid makes the += race-free)
+    @pl.when(t == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    out_ref[...] += partial
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "block_m",
+                                             "interpret"))
+def gain_stream_pallas(incident: jnp.ndarray, becomes_internal: jnp.ndarray,
+                       was_internal: jnp.ndarray, block_n: int | None = None,
+                       block_m: int | None = None, interpret: bool = True
+                       ) -> jnp.ndarray:
+    """Streaming gain assembly for fine levels / large k.
+
+    Same contract as ``gain_gather_pallas`` but the per-edge tables are
+    tiled over a second grid axis instead of sitting whole in VMEM, so
+    any (M, k) fits.  Block sizes default to the largest power of two
+    that keeps the [bn, D, k] gather tile and the [bm, k] table tile
+    within ``common.GAIN_STREAM_TILE_BYTES``.
+    """
+    n, d = incident.shape
+    m, k = becomes_internal.shape
+    if block_n is None:
+        block_n = _stream_bn(d, k)
+    if block_m is None:
+        block_m = _stream_bm(k)
+    incident = _pad_rows(incident, block_n, -1)
+    becomes_internal = _pad_rows(becomes_internal, block_m, 0.0)
+    was_internal = _pad_rows(was_internal, block_m, 0.0)
+    n_pad = incident.shape[0]
+    m_pad = becomes_internal.shape[0]
+    grid = (n_pad // block_n, m_pad // block_m)   # edge axis innermost
+    out = pl.pallas_call(
+        functools.partial(_gain_stream_kernel, block_m=block_m),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_n, d), lambda i, t: (i, 0)),   # vertex tile
+            pl.BlockSpec((block_m, k), lambda i, t: (t, 0)),   # table tile
+            pl.BlockSpec((block_m,), lambda i, t: (t,)),
+        ],
+        out_specs=pl.BlockSpec((block_n, k), lambda i, t: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_pad, k), jnp.float32),
+        interpret=interpret,
+    )(incident, becomes_internal, was_internal)
+    return out[:n]
+
+
+def _gain_stream_batch_kernel(inc_ref, bi_ref, wi_ref, out_ref, *,
+                              block_m: int):
+    t = pl.program_id(2)
+    inc = inc_ref[...]                            # [bn, D] (shared)
+    bi = bi_ref[...]                              # [1, bm, k] member tile
+    wi = wi_ref[...]                              # [1, bm]
+    local = inc - t * block_m
+    valid = (inc >= 0) & (local >= 0) & (local < block_m)
+    safe = jnp.where(valid, local, 0)
+    rows = jnp.take(bi[0], safe, axis=0) * valid[..., None]
+    loss = jnp.take(wi[0], safe, axis=0) * valid
+    partial = (rows.sum(axis=1) - loss.sum(axis=1, keepdims=True))[None]
+
+    @pl.when(t == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    out_ref[...] += partial
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "block_m",
+                                             "interpret"))
+def gain_stream_batch_pallas(incident: jnp.ndarray,
+                             becomes_internal: jnp.ndarray,
+                             was_internal: jnp.ndarray,
+                             block_n: int | None = None,
+                             block_m: int | None = None,
+                             interpret: bool = True) -> jnp.ndarray:
+    """Population-batched streaming gain assembly.
+
+    incident: [N, D] int32 (shared, pad = -1);
+    becomes_internal: [alpha, M, k]; was_internal: [alpha, M];
+    returns gains [alpha, N, k].  Grid ``(alpha, N//bn, M//bm)`` — the
+    shared incidence tile ignores the population index, each member
+    streams its own edge-table tiles, and the per-(member, vertex-tile)
+    output block accumulates across the edge sweep exactly like the
+    single-member kernel (bit-identical per-member results).
+    """
+    n, d = incident.shape
+    alpha, m, k = becomes_internal.shape
+    assert was_internal.shape == (alpha, m)
+    if block_n is None:
+        block_n = _stream_bn(d, k)
+    if block_m is None:
+        block_m = _stream_bm(k)
+    incident = _pad_rows(incident, block_n, -1)
+    m_tail = (-m) % block_m
+    bi = jnp.pad(becomes_internal, ((0, 0), (0, m_tail), (0, 0)))
+    wi = jnp.pad(was_internal, ((0, 0), (0, m_tail)))
+    n_pad = incident.shape[0]
+    m_pad = bi.shape[1]
+    grid = (alpha, n_pad // block_n, m_pad // block_m)
+    out = pl.pallas_call(
+        functools.partial(_gain_stream_batch_kernel, block_m=block_m),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_n, d), lambda a, i, t: (i, 0)),
+            pl.BlockSpec((1, block_m, k), lambda a, i, t: (a, t, 0)),
+            pl.BlockSpec((1, block_m), lambda a, i, t: (a, t)),
+        ],
+        out_specs=pl.BlockSpec((1, block_n, k), lambda a, i, t: (a, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((alpha, n_pad, k), jnp.float32),
+        interpret=interpret,
+    )(incident, bi, wi)
     return out[:, :n]

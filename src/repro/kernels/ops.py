@@ -1,12 +1,47 @@
 """Jit'd public wrappers around the Pallas kernels + host layout helpers.
 
 The partitioner's CSR arrays are re-blocked once per level into the padded
-matrix layouts the kernels want (pins[M, S], incident[N, D]).
+matrix layouts the kernels want (pins[M, S], incident[N, D]).  The
+incidence layout is cached ON the host ``Hypergraph`` (see
+``Hypergraph.incidence_matrix``), so it is built exactly once per level
+and reused across every refinement round, population member and V-cycle
+that revisits the level.
 
 Interpreter mode is derived from the active backend: on CPU the Pallas
 interpreter executes the kernel bodies faithfully; on TPU/GPU the real
 kernels compile.  Override with ``REPRO_PALLAS_INTERPRET=0|1`` (anything
 else, or unset, means auto).
+
+Gain-path dispatch
+------------------
+``gain_path(m, k)`` picks how ``core.metrics.gain_matrix`` assembles the
+[n, k] gain matrix from the per-edge tables, keyed on ``(m, k, backend)``
+(all static at trace time):
+
+====================  =====================================================
+path                  chosen when
+====================  =====================================================
+``"table"``           compiled backend, ``k <= KERNEL_MAX_K`` and the whole
+                      [M, k] table fits ``GAIN_TABLE_VMEM_BYTES`` (2 MiB)
+                      -> ``gain_gather_pallas`` (table resident in VMEM)
+``"stream"``          compiled backend, everything larger -> the streaming
+                      kernel tiles the edge tables over a second grid axis
+                      and accumulates partial gains in the resident output
+                      tile; nothing [M, k]- or [P, k]-sized materialises
+``"segsum"``          CPU / interpret backend, ``k <= KERNEL_MAX_K``: the
+                      XLA reference ([P, k] per-pin segment-sum)
+``"compact"``         CPU / interpret backend, ``k > KERNEL_MAX_K``: sparse
+                      XLA assembly exploiting that ``becomes_internal`` has
+                      at most two nonzeros per edge — O(P) scatter instead
+                      of O(P * k) (see ``core.metrics.gain_matrix``)
+====================  =====================================================
+
+``REPRO_GAIN_PATH=table|stream|segsum|compact`` forces a path (used by the
+parity tests and the CI benchmark smoke); ``auto``/unset means the table
+above.  The kernel paths need the dense incidence layout, which
+``HypergraphArrays.from_host`` attaches when ``gain_layout_enabled()``
+says a kernel path is reachable (so CPU test runs don't pay for layouts
+they never read).
 """
 from __future__ import annotations
 
@@ -16,10 +51,13 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.core.hypergraph import Hypergraph, _round_pow2
+from repro.core.hypergraph import Hypergraph
 from . import ref
+from .common import (GAIN_TABLE_VMEM_BYTES, GAIN_STREAM_TILE_BYTES,  # noqa: F401 (re-exported)
+                     KERNEL_MAX_K, VMEM_BUDGET_BYTES)
 from .connectivity import connectivity_pallas, cutsize_pallas
-from .gain import gain_gather_pallas, gain_gather_batch_pallas
+from .gain import (gain_gather_pallas, gain_gather_batch_pallas,
+                   gain_stream_pallas, gain_stream_batch_pallas)
 from .embedding_bag import embedding_bag_pallas
 
 _INTERPRET_CACHE: bool | None = None
@@ -43,11 +81,78 @@ def interpret_mode() -> bool:
 
 
 # --------------------------------------------------------------------------
+# gain-path dispatch
+# --------------------------------------------------------------------------
+GAIN_PATHS = ("table", "stream", "segsum", "compact")
+
+
+def _gain_env() -> str:
+    return os.environ.get("REPRO_GAIN_PATH", "auto").strip().lower()
+
+
+def gain_layout_enabled() -> bool:
+    """Should ``HypergraphArrays.from_host`` attach the dense incidence
+    layout?  True iff a Pallas gain path is reachable (compiled backend,
+    or a kernel path forced via ``REPRO_GAIN_PATH``)."""
+    env = _gain_env()
+    if env in ("table", "stream"):
+        return True
+    if env in ("segsum", "compact"):
+        return False
+    return not interpret_mode()
+
+
+def gain_path(m: int, k: int, incidence: bool = True) -> str:
+    """Resolve the gain-assembly path for padded table size ``m`` and
+    ``k`` blocks (see module docstring for the decision table).
+    ``incidence``: whether the dense incidence layout is available —
+    without it the kernel paths are unreachable and the XLA paths are
+    used regardless of backend."""
+    env = _gain_env()
+    if env in ("segsum", "compact"):
+        return env
+    if env in ("table", "stream") and incidence:
+        return env
+    if interpret_mode() or not incidence:
+        return "segsum" if k <= KERNEL_MAX_K else "compact"
+    if k <= KERNEL_MAX_K and m * k * 4 <= GAIN_TABLE_VMEM_BYTES:
+        return "table"
+    return "stream"
+
+
+def gain_assemble(incident: jnp.ndarray, becomes_internal: jnp.ndarray,
+                  was_internal: jnp.ndarray, path: str) -> jnp.ndarray:
+    """Kernel-path gain assembly (``path`` in {"table", "stream"})."""
+    if path == "table":
+        return gain_gather_pallas(incident, becomes_internal, was_internal,
+                                  interpret=interpret_mode())
+    if path == "stream":
+        return gain_stream_pallas(incident, becomes_internal, was_internal,
+                                  interpret=interpret_mode())
+    raise ValueError(f"not a kernel gain path: {path!r}")
+
+
+def gain_assemble_batch(incident: jnp.ndarray, becomes_internal: jnp.ndarray,
+                        was_internal: jnp.ndarray, path: str) -> jnp.ndarray:
+    """Population-batched kernel-path gain assembly."""
+    if path == "table":
+        return gain_gather_batch_pallas(incident, becomes_internal,
+                                        was_internal,
+                                        interpret=interpret_mode())
+    if path == "stream":
+        return gain_stream_batch_pallas(incident, becomes_internal,
+                                        was_internal,
+                                        interpret=interpret_mode())
+    raise ValueError(f"not a kernel gain path: {path!r}")
+
+
+# --------------------------------------------------------------------------
 # host layout converters
 # --------------------------------------------------------------------------
 def edge_pin_matrix(hg: Hypergraph, block_m: int = 512,
                     lane_pad: int = 8) -> np.ndarray:
     """CSR -> padded [M_pad, S_pad] pin matrix (pad = -1)."""
+    from repro.core.hypergraph import _round_pow2
     sizes = hg.edge_sizes()
     s_pad = max(int(_round_pow2(int(sizes.max()) if hg.m else 1, lane_pad)), lane_pad)
     m_pad = ((hg.m + block_m - 1) // block_m) * block_m
@@ -61,16 +166,13 @@ def edge_pin_matrix(hg: Hypergraph, block_m: int = 512,
 
 def vertex_incidence_matrix(hg: Hypergraph, block_n: int = 256,
                             lane_pad: int = 8) -> np.ndarray:
-    """dual CSR -> padded [N_pad, D_pad] incident-edge matrix (pad = -1)."""
-    incident, voff = hg.dual()
-    deg = np.diff(voff)
-    d_pad = max(int(_round_pow2(int(deg.max()) if hg.n else 1, lane_pad)), lane_pad)
-    n_pad = ((hg.n + block_n - 1) // block_n) * block_n
-    out = np.full((n_pad, d_pad), -1, np.int32)
-    rows = np.repeat(np.arange(hg.n), deg)
-    cols = np.arange(len(incident), dtype=np.int64) - np.repeat(voff[:-1], deg)
-    out[rows, cols] = incident
-    return out
+    """dual CSR -> padded [N_pad, D_pad] incident-edge matrix (pad = -1).
+
+    Delegates to the per-level cache on ``hg`` — repeated calls (rounds,
+    members, V-cycles) return the same array without rebuilding.
+    """
+    n_rows = ((hg.n + block_n - 1) // block_n) * block_n
+    return hg.incidence_matrix(max(n_rows, block_n), lane_pad=lane_pad)
 
 
 # --------------------------------------------------------------------------
@@ -78,7 +180,7 @@ def vertex_incidence_matrix(hg: Hypergraph, block_n: int = 256,
 # --------------------------------------------------------------------------
 def connectivity(pins: jnp.ndarray, part: jnp.ndarray, k: int,
                  use_kernel: bool = True) -> jnp.ndarray:
-    if use_kernel and k <= 32:
+    if use_kernel and k <= KERNEL_MAX_K:
         return connectivity_pallas(pins, part, k,
                                    interpret=interpret_mode())
     return ref.connectivity_ref(pins, part, k)
@@ -86,7 +188,7 @@ def connectivity(pins: jnp.ndarray, part: jnp.ndarray, k: int,
 
 def cutsize(pins: jnp.ndarray, part: jnp.ndarray, edge_weights: jnp.ndarray,
             k: int, use_kernel: bool = True) -> jnp.ndarray:
-    if use_kernel and k <= 32:
+    if use_kernel and k <= KERNEL_MAX_K:
         return cutsize_pallas(pins, part, edge_weights, k,
                               interpret=interpret_mode())
     return ref.cutsize_ref(pins, part, edge_weights, k)

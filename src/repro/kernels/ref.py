@@ -43,6 +43,29 @@ def gain_gather_ref(incident: jnp.ndarray, becomes_internal: jnp.ndarray,
     return bi.sum(axis=1) - wi.sum(axis=1, keepdims=True)
 
 
+def gain_stream_ref(incident: jnp.ndarray, becomes_internal: jnp.ndarray,
+                    was_internal: jnp.ndarray, block_m: int = 128
+                    ) -> jnp.ndarray:
+    """Tile-order oracle for the streaming kernel: same result as
+    ``gain_gather_ref`` but accumulated edge-tile by edge-tile, pinning
+    down the accumulation semantics ``gain_stream_pallas`` must follow
+    (each tile contributes sum-over-D of its masked rows)."""
+    m = becomes_internal.shape[0]
+    out = jnp.zeros((incident.shape[0], becomes_internal.shape[1]),
+                    jnp.float32)
+    for lo in range(0, m, block_m):
+        bi = becomes_internal[lo:lo + block_m]
+        wi = was_internal[lo:lo + block_m]
+        local = incident - lo
+        valid = (incident >= 0) & (local >= 0) & (local < bi.shape[0])
+        safe = jnp.where(valid, local, 0)
+        rows = bi[safe] * valid[..., None]
+        loss = wi[safe] * valid
+        partial = rows.sum(axis=1) - loss.sum(axis=1, keepdims=True)
+        out = out + partial        # accumulate whole partials, as the
+    return out                     # kernel's out_ref += does
+
+
 def gain_gather_batch_ref(incident: jnp.ndarray,
                           becomes_internal: jnp.ndarray,
                           was_internal: jnp.ndarray) -> jnp.ndarray:
