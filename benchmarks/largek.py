@@ -12,8 +12,9 @@ Also home of two engine benchmarks tracked PR over PR:
   (``BENCH_gain.json``).
 
 ``--smoke`` runs both at tiny sizes plus a forced sweep over every gain
-path (kernels in interpret mode), so CI fails on kernel-routing breakage
-rather than on perf graphs.
+path AND both coarsening engines (``REPRO_COARSEN_PATH=host|device``,
+kernels in interpret mode), so CI fails on kernel/engine-routing
+breakage rather than on perf graphs.
 """
 from __future__ import annotations
 
@@ -232,9 +233,62 @@ def _smoke_gain_paths(out=sys.stdout):
             assert err < 1e-4, f"gain path {path} diverged at k={k}: {err}"
 
 
+def _smoke_coarsen_paths(out=sys.stdout):
+    """Force BOTH coarsening engines end-to-end through impart + vcycle
+    on a tiny instance and require agreement — mirroring the four-path
+    gain smoke: engine-routing breakage fails CI here, not on perf
+    graphs.  Tie-breaking differs between engines, so the check is cut
+    sanity (balanced, never worse than the V-cycle input, device within
+    a loose factor of host on this tiny instance), not bit equality."""
+    import os
+    import jax
+    from repro.core.impart import impart_partition, ImpartConfig
+    from repro.core.vcycle import vcycle
+    from repro.core import metrics
+    from repro.core import refine as refine_mod
+
+    base = titan_like("gsm_switch_like", scale=0.02)
+    k, eps = 8, 0.08
+    cuts = {}
+    prior = os.environ.get("REPRO_COARSEN_PATH")
+    try:
+        for path in ("host", "device"):
+            os.environ["REPRO_COARSEN_PATH"] = path
+            jax.clear_caches()
+            hg = base.structural_copy()
+            res = impart_partition(hg, ImpartConfig(k=k, eps=eps, alpha=2,
+                                                    beta=2, seed=3,
+                                                    lp_iters=4,
+                                                    final_vcycles=0))
+            hga = hg.arrays()
+            assert bool(metrics.is_balanced(
+                hga, refine_mod.pad_part(res.part, hga.n_pad), k, eps))
+            rng = np.random.default_rng(0)
+            part0 = refine_mod.rebalance(
+                hg.vertex_weights, rng.integers(0, k, hg.n).astype(np.int32),
+                k, eps, rng)
+            c0 = float(metrics.cutsize_jit(
+                hga, refine_mod.pad_part(part0, hga.n_pad), k))
+            _, cv = vcycle(hg, part0, k, eps, seed=5)
+            assert cv <= c0 + 1e-6, f"{path} vcycle regressed: {c0} -> {cv}"
+            cuts[path] = res.cut
+            print(f"smoke,coarsen_path,{path},impart_cut={res.cut:.0f},"
+                  f"vcycle={c0:.0f}->{cv:.0f}", file=out)
+    finally:
+        if prior is None:
+            os.environ.pop("REPRO_COARSEN_PATH", None)
+        else:
+            os.environ["REPRO_COARSEN_PATH"] = prior
+        jax.clear_caches()
+    ratio = cuts["device"] / max(cuts["host"], 1e-9)
+    print(f"smoke,coarsen_path,ratio,{ratio:.3f},", file=out)
+    assert 0.7 <= ratio <= 1.3, f"coarsen engines diverged: {cuts}"
+
+
 def smoke(out=sys.stdout):
     """CI entry: tiny-size routing + engine checks (no JSON artifacts)."""
     _smoke_gain_paths(out=out)
+    _smoke_coarsen_paths(out=out)
     bench_gain(json_path=None, ks=(8, 40), scale=0.02, reps=1, out=out)
     bench_population(quick=True, smoke=True, json_path=None, out=out)
     print("# smoke OK", file=out)

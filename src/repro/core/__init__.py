@@ -6,9 +6,11 @@ Public API:
   multilevel_partition, external_memetic — baselines
   make_population_step              — distributed (shard_map) population
 """
-from .hypergraph import Hypergraph, HypergraphArrays, contract, project_partition
+from .hypergraph import (Hypergraph, HypergraphArrays, HierarchyArrays,
+                         contract, contract_arrays, project_partition)
 from .coarsen import coarsen, recombination_thresholds, Hierarchy, Level
-from .initial_partition import initial_partition
+from .dcoarsen import build_hierarchy, device_coarsen, coarsen_path
+from .initial_partition import initial_partition, initial_partition_population
 from .impart import impart_partition, ImpartConfig, ImpartResult
 from .baselines import (multilevel_partition, multilevel_best_of,
                         external_memetic, MultilevelResult)
@@ -19,9 +21,12 @@ from .population import make_population_step, population_step_fn
 from . import metrics, refine, ilp
 
 __all__ = [
-    "Hypergraph", "HypergraphArrays", "contract", "project_partition",
+    "Hypergraph", "HypergraphArrays", "HierarchyArrays", "contract",
+    "contract_arrays", "project_partition",
     "coarsen", "recombination_thresholds", "Hierarchy", "Level",
-    "initial_partition", "impart_partition", "ImpartConfig", "ImpartResult",
+    "build_hierarchy", "device_coarsen", "coarsen_path",
+    "initial_partition", "initial_partition_population",
+    "impart_partition", "ImpartConfig", "ImpartResult",
     "multilevel_partition", "multilevel_best_of", "external_memetic",
     "MultilevelResult", "recombine", "ring_recombination",
     "overlay_clustering", "mutate_population", "similarity_sets", "vcycle",

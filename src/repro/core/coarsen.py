@@ -18,7 +18,47 @@ from typing import List, Optional, Tuple
 
 import numpy as np
 
-from .hypergraph import Hypergraph, contract
+from .hypergraph import Hypergraph, HypergraphArrays, contract
+
+
+# --------------------------------------------------------------------------
+# round schedule — the single source of truth for "when does coarsening
+# stop", shared by this host coarsener and the device one (core/dcoarsen)
+# --------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class RoundSchedule:
+    """Stopping/capping policy of the round-based coarsener.
+
+    Both coarsening paths (host numpy and the device engine) derive their
+    control flow from one instance, so "same round schedule" is a
+    structural property, not a convention the parity tests merely hope
+    for."""
+    target: int        # stop once n <= target (contraction limit)
+    c_max: float       # cluster weight cap (KaHyPar-style)
+    max_rounds: int
+    min_shrink: float  # a round shrinking less than this fraction stalls
+
+    def done(self, n_cur: int) -> bool:
+        return n_cur <= self.target
+
+    def stalled(self, n_cur: int, n_new: int) -> bool:
+        return n_new >= n_cur * (1.0 - self.min_shrink)
+
+
+def round_schedule(hg: Hypergraph, k: int, *,
+                   contraction_limit_factor: int = 64, max_rounds: int = 64,
+                   min_shrink: float = 0.02,
+                   max_cluster_frac: float = 1.0) -> RoundSchedule:
+    """Coarsen down to ~``contraction_limit_factor * k`` vertices, capping
+    cluster weight so the coarsest vertices stay refinable."""
+    target = max(contraction_limit_factor * k, 8)
+    total_w = hg.total_weight
+    c_max = max_cluster_frac * max(
+        total_w / target * 4.0,
+        float(hg.vertex_weights.max()) if hg.n else 1.0,
+    )
+    return RoundSchedule(target=target, c_max=c_max, max_rounds=max_rounds,
+                         min_shrink=min_shrink)
 
 
 @dataclasses.dataclass
@@ -27,11 +67,20 @@ class Level:
     the finer level's vertices onto it."""
     hg: Hypergraph
     cluster_id: np.ndarray  # [n_finer] -> [0, hg.n)
+    # partition-aware hierarchies carry the input partition projected to
+    # this level (exact: only same-block vertices merge)
+    part: Optional[np.ndarray] = None
 
 
 @dataclasses.dataclass
 class Hierarchy:
-    """levels[0] is the original hypergraph (cluster_id = identity)."""
+    """levels[0] is the original hypergraph (cluster_id = identity).
+
+    The driver-facing accessors below (``num_levels`` .. ``project_pop``)
+    form the hierarchy protocol shared with the device-resident
+    ``dcoarsen.HierarchyArrays`` — ``impart_partition`` and ``vcycle``
+    are written against the protocol and never ask which engine built
+    the hierarchy."""
     levels: List[Level]
 
     @property
@@ -53,6 +102,32 @@ class Hierarchy:
         for li in range(from_level, to_level, -1):
             part = part[self.levels[li].cluster_id]
         return part
+
+    # -------------------------------------------------- hierarchy protocol
+    @property
+    def num_levels(self) -> int:
+        return len(self.levels)
+
+    def level_n(self, li: int) -> int:
+        return self.levels[li].hg.n
+
+    def level_arrays(self, li: int) -> HypergraphArrays:
+        """Device arrays for refinement at level ``li`` (cached on the
+        host hypergraph — built once per level)."""
+        return self.levels[li].hg.arrays()
+
+    def level_host(self, li: int) -> Hypergraph:
+        """Host CSR hypergraph at level ``li`` (for the irregular host
+        operators: recombination overlays, mutation reweighting)."""
+        return self.levels[li].hg
+
+    def level_part(self, li: int) -> Optional[np.ndarray]:
+        return self.levels[li].part
+
+    def project_pop(self, parts, li: int) -> np.ndarray:
+        """Project a (possibly padded) population [alpha, >= n_li] at
+        level ``li`` onto the finer level ``li - 1``."""
+        return np.asarray(parts)[:, self.levels[li].cluster_id]
 
 
 # --------------------------------------------------------------------------
@@ -192,32 +267,32 @@ def coarsen(hg: Hypergraph, k: int, *, contraction_limit_factor: int = 64,
     vertices.  ``restrict_part`` enables partition-aware (V-cycle)
     coarsening: only same-block vertices may merge."""
     rng = np.random.default_rng(seed)
-    target = max(contraction_limit_factor * k, 8)
-    total_w = hg.total_weight
-    # cluster weight cap: keep coarsest vertices refinable (KaHyPar-style)
-    c_max = max_cluster_frac * max(
-        total_w / target * 4.0, float(hg.vertex_weights.max())
-    )
-    levels = [Level(hg=hg, cluster_id=np.arange(hg.n, dtype=np.int32))]
+    sched = round_schedule(
+        hg, k, contraction_limit_factor=contraction_limit_factor,
+        max_rounds=max_rounds, min_shrink=min_shrink,
+        max_cluster_frac=max_cluster_frac)
+    cur_part = (None if restrict_part is None
+                else np.asarray(restrict_part, np.int32))
+    levels = [Level(hg=hg, cluster_id=np.arange(hg.n, dtype=np.int32),
+                    part=cur_part)]
     cur = hg
-    cur_part = None if restrict_part is None else np.asarray(restrict_part)
-    for _ in range(max_rounds):
-        if cur.n <= target:
+    for _ in range(sched.max_rounds):
+        if sched.done(cur.n):
             break
         u, v, r = _candidate_pairs(cur, restrict_part=cur_part)
         cluster = _mutual_match(cur.n, u, v, r, cur.vertex_weights,
-                                c_max, rng)
+                                sched.c_max, rng)
         n_new = int(cluster.max()) + 1 if len(cluster) else 0
-        if n_new >= cur.n * (1.0 - min_shrink):
-            break  # stalled
+        if sched.stalled(cur.n, n_new):
+            break
         # do not overshoot far below the target
         coarse, cmap = contract(cur, cluster, n_new)
-        levels.append(Level(hg=coarse, cluster_id=cmap))
         if cur_part is not None:
             # block id of each cluster = block of any member (same by constr.)
             newp = np.zeros(n_new, cur_part.dtype)
             newp[cmap] = cur_part
             cur_part = newp
+        levels.append(Level(hg=coarse, cluster_id=cmap, part=cur_part))
         cur = coarse
     return Hierarchy(levels=levels)
 

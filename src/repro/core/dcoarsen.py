@@ -1,0 +1,345 @@
+"""Device-resident coarsening engine (DESIGN.md §3).
+
+The host coarsener (``core/coarsen``) rates, matches and contracts in
+numpy and then re-ships every level to the device for refinement.  This
+module runs the identical per-round pipeline as jitted JAX ops on fixed
+padded shapes, so every level's ``HypergraphArrays`` is *born on
+device* and uncoarsening never pays a host->device transfer:
+
+1. **pair rating** — heavy-edge candidates from stride-shifted views of
+   the edge-contiguous pin array (full coverage for small edges, a
+   structured sample for large ones, exactly like the host
+   ``_candidate_pairs``); duplicate pairs are made adjacent with two
+   stable argsorts and their ratings ``r(u, v) = sum_e w_e / (|e| - 1)``
+   aggregated through the ``kernels.ops.rating_segment_sum`` dispatcher
+   (Pallas MXU scatter kernel on compiled backends for coarse/mid
+   rounds, XLA segment-sum otherwise), then normalised by
+   ``c(u) * c(v)``;
+2. **best-partner mutual matching** — argmax by scatter-max with
+   reproducible tie-jitter from a threaded PRNG key, weight-cap
+   filtering, mutual-pair extraction and the same single-vertex second
+   chance the host matcher gives, then dense renumbering by cumsum;
+3. **contraction** — ``hypergraph.contract_arrays`` (within-edge pin
+   dedup, single-pin drop, identical-edge merge, dense edge renumber).
+
+Both engines derive their control flow from one ``coarsen.round_schedule``
+— same contraction target, same cluster-weight cap, same stall rule — so
+the parity harness (``tests/test_dcoarsen.py``) checks cut parity of the
+resulting hierarchies knowing only tie-breaking differs.
+
+``REPRO_COARSEN_PATH=device|host`` forces an engine; ``auto`` (unset)
+picks the device engine on compiled backends and keeps the numpy
+reference path on CPU.  ``build_hierarchy`` is the single entry point —
+``impart_partition``, ``vcycle`` (and through it mutation and
+recombination) route through it and consume either hierarchy via the
+shared protocol.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+from functools import partial
+from typing import Optional, Union
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from .hypergraph import (Hypergraph, HypergraphArrays, HierarchyArrays,
+                         DeviceLevel, contract_arrays, _round_pow2,
+                         _INCIDENCE_LANE_PAD, _INCIDENCE_MAX_EXPANSION)
+from .coarsen import Hierarchy, coarsen, round_schedule
+
+#: Pair-candidate sampling, mirroring the host ``_candidate_pairs``
+#: defaults: strides 1..MAX_STRIDE within each edge; edges larger than
+#: MAX_EDGE_SIZE carry almost no locality signal and are skipped.
+MAX_STRIDE = 4
+MAX_EDGE_SIZE = 512
+
+COARSEN_PATHS = ("device", "host")
+
+
+def coarsen_path() -> str:
+    """Engine selection: ``REPRO_COARSEN_PATH=device|host`` forces one;
+    auto keeps the numpy reference on CPU and goes device-resident on
+    compiled backends."""
+    env = os.environ.get("REPRO_COARSEN_PATH", "auto").strip().lower()
+    if env in COARSEN_PATHS:
+        return env
+    from repro.kernels import ops
+    return "host" if ops.interpret_mode() else "device"
+
+
+def build_hierarchy(hg: Hypergraph, k: int, *, seed: int = 0,
+                    restrict_part=None, contraction_limit_factor: int = 64,
+                    max_rounds: int = 64, min_shrink: float = 0.02,
+                    max_cluster_frac: float = 1.0,
+                    path: Optional[str] = None
+                    ) -> Union[Hierarchy, HierarchyArrays]:
+    """Build the multilevel hierarchy with the engine picked by
+    ``coarsen_path()`` (or forced via ``path``).  Both return types
+    implement the hierarchy protocol the drivers consume."""
+    path = path or coarsen_path()
+    if path == "host":
+        return coarsen(hg, k, contraction_limit_factor=contraction_limit_factor,
+                       max_rounds=max_rounds, min_shrink=min_shrink,
+                       seed=seed, restrict_part=restrict_part,
+                       max_cluster_frac=max_cluster_frac)
+    return device_coarsen(hg, k,
+                          contraction_limit_factor=contraction_limit_factor,
+                          max_rounds=max_rounds, min_shrink=min_shrink,
+                          seed=seed, restrict_part=restrict_part,
+                          max_cluster_frac=max_cluster_frac)
+
+
+# --------------------------------------------------------------------------
+# the jitted round: rate -> match -> contract
+# --------------------------------------------------------------------------
+def _pair_ratings(hga: HypergraphArrays, part, *, max_stride: int,
+                  max_edge_size: int):
+    """Aggregated, weight-normalised heavy-edge pair ratings.
+
+    Returns ``(lo, hi, rating)``, each [C = max_stride * p_pad]: one
+    slot per *distinct* candidate pair (at its first sorted position),
+    ghost slots carrying ``lo == hi == n_pad - 1`` and rating 0.
+    ``part`` (optional) restricts candidates to same-block pairs
+    (partition-aware / V-cycle coarsening).
+    """
+    from repro.kernels import ops
+    n_pad, m_pad, p_pad = hga.n_pad, hga.m_pad, hga.p_pad
+    ghost_v = jnp.int32(n_pad - 1)
+    pv, pe = hga.pin_vertex, hga.pin_edge
+    sizes = hga.edge_sizes
+    unit = jnp.where(sizes > 1,
+                     hga.edge_weights / jnp.maximum(sizes - 1, 1), 0.0)
+    ok_edge = (sizes > 1) & (sizes <= max_edge_size)
+
+    los, his, rs = [], [], []
+    for d in range(1, max_stride + 1):
+        u = pv
+        v = jnp.concatenate([pv[d:], jnp.full(d, ghost_v, jnp.int32)])
+        e2 = jnp.concatenate([pe[d:],
+                              jnp.full(d, m_pad - 1, jnp.int32)])
+        valid = (pe == e2) & ok_edge[pe] & (u != v)
+        if part is not None:
+            valid = valid & (part[u] == part[v])
+        los.append(jnp.where(valid, jnp.minimum(u, v), ghost_v))
+        his.append(jnp.where(valid, jnp.maximum(u, v), ghost_v))
+        rs.append(jnp.where(valid, unit[pe], 0.0))
+    lo = jnp.concatenate(los)
+    hi = jnp.concatenate(his)
+    r = jnp.concatenate(rs)
+
+    # make duplicate pairs adjacent (ghosts sort last: lo == hi == ghost);
+    # one variadic sort carrying the ratings — aggregation is
+    # order-insensitive, so no stability is needed
+    lo, hi, r = jax.lax.sort((lo, hi, r), num_keys=2, is_stable=False)
+    c = lo.shape[0]
+    newg = jnp.ones(c, bool).at[1:].set(
+        (lo[1:] != lo[:-1]) | (hi[1:] != hi[:-1]))
+    seg = (jnp.cumsum(newg.astype(jnp.int32)) - 1).astype(jnp.int32)
+    agg = ops.rating_segment_sum(r, seg, c)
+
+    # representative (lo, hi) per segment + weight normalisation
+    lo_g = jnp.full(c, ghost_v, jnp.int32).at[seg].min(lo)
+    hi_g = jnp.full(c, ghost_v, jnp.int32).at[seg].min(hi)
+    cw = hga.vertex_weights
+    agg = agg / jnp.maximum(cw[lo_g] * cw[hi_g], 1e-12)
+    return lo_g, hi_g, agg
+
+
+def _mutual_match_dev(hga: HypergraphArrays, lo: jnp.ndarray,
+                      hi: jnp.ndarray, rating: jnp.ndarray,
+                      key: jnp.ndarray, c_max: jnp.ndarray):
+    """Best-partner mutual matching on device.
+
+    Same structure as the host ``_mutual_match`` — both directions,
+    reproducible rating tie-jitter, weight cap, mutual pairs, second
+    chance for singles whose best partner stayed single — with scatter
+    argmax/argmin replacing the lexsorts (tie-break order may differ
+    from the host; cut parity is the contract, not bit-equal matchings).
+    Returns ``(cid, n_new)``: dense cluster ids [n_pad] (ghost/pad slots
+    -> ``n_pad - 1``).
+    """
+    n_pad = hga.n_pad
+    arange = jnp.arange(n_pad, dtype=jnp.int32)
+    cw = hga.vertex_weights
+
+    uu = jnp.concatenate([lo, hi])
+    vv = jnp.concatenate([hi, lo])
+    # tie-jitter must be visible at f32 resolution (the host jitters
+    # 1e-9 in float64; here 1 + 1e-9 would round to exactly 1.0 and the
+    # key would have no effect) — 1e-6 relative stays far below any real
+    # rating difference while making ties key-dependent
+    jit_r = 1.0 + 1e-6 * jax.random.uniform(key, uu.shape)
+    rr = jnp.concatenate([rating, rating]) * jit_r
+    ok = (jnp.concatenate([lo, lo]) != jnp.concatenate([hi, hi])) \
+        & (cw[uu] + cw[vv] <= c_max) & (rr > 0)
+
+    score = jnp.where(ok, rr, -1.0)
+    best = jnp.full(n_pad, -1.0).at[uu].max(score)
+    hit = ok & (score == best[uu])
+    partner = jnp.full(n_pad, n_pad, jnp.int32).at[uu].min(
+        jnp.where(hit, vv, n_pad))
+    has = partner < n_pad
+    p_of = jnp.where(has, partner, 0)
+    mutual = has & (partner[p_of] == arange) & (partner != arange)
+    cluster = jnp.where(mutual & (arange > partner), p_of, arange)
+
+    # second chance: unmatched vertex whose best partner stayed single
+    single = (cluster == arange) & ~mutual
+    cand = single & has
+    tgt = jnp.where(cand, p_of, n_pad - 1)
+    tgt_ok = single[tgt] & (cw[arange] + cw[tgt] <= c_max) & (tgt != arange)
+    want = cand & tgt_ok
+    winner = jnp.full(n_pad, n_pad, jnp.int32).at[tgt].min(
+        jnp.where(want, arange, n_pad))
+    win = want & (winner[tgt] == arange)
+    # a chosen target must not itself be a source
+    sel = win & ~win[tgt]
+    cluster = jnp.where(sel, tgt, cluster)
+
+    # dense renumbering (roots keep ascending order, like np.unique)
+    is_root = (cluster == arange) & (arange < hga.n)
+    new_id = (jnp.cumsum(is_root.astype(jnp.int32)) - 1).astype(jnp.int32)
+    n_new = is_root.sum()
+    cid = jnp.where(arange < hga.n, new_id[cluster], jnp.int32(n_pad - 1))
+    return cid, n_new
+
+
+def _coarsen_round_impl(hga: HypergraphArrays, part, key, c_max,
+                        max_stride: int, max_edge_size: int):
+    lo, hi, rating = _pair_ratings(hga, part, max_stride=max_stride,
+                                   max_edge_size=max_edge_size)
+    cid, n_new = _mutual_match_dev(hga, lo, hi, rating, key, c_max)
+    coarse, p_new = contract_arrays(hga, cid, n_new)
+    new_part = None
+    if part is not None:
+        # block of each cluster = block of any member (same by constr.)
+        new_part = jnp.zeros(hga.n_pad, jnp.int32).at[cid].max(part)
+    return coarse, cid, new_part, p_new
+
+
+_coarsen_round = jax.jit(_coarsen_round_impl,
+                         static_argnames=("max_stride", "max_edge_size"))
+
+
+# --------------------------------------------------------------------------
+# host-side schedule loop (readbacks: 3 scalars per round)
+# --------------------------------------------------------------------------
+@partial(jax.jit, static_argnames=("n_pad2", "m_pad2", "p_pad2"))
+def _rebucket_jit(hga: HypergraphArrays, cid, part,
+                  n_pad2: int, m_pad2: int, p_pad2: int):
+    """Slice a freshly contracted level down to its own pow2 padding
+    bucket (device-side; ghost ids remapped).  Keeps the per-level jit
+    cache hot across levels and designs, exactly like the host path's
+    ``arrays()`` bucketing."""
+    ghost_v = jnp.int32(n_pad2 - 1)
+    ghost_e = jnp.int32(m_pad2 - 1)
+    pv = hga.pin_vertex[:p_pad2]
+    pe = hga.pin_edge[:p_pad2]
+    pv = jnp.where(pv >= hga.n, ghost_v, pv)
+    pe = jnp.where(pe >= hga.m, ghost_e, pe)
+    out = HypergraphArrays(
+        pin_vertex=pv, pin_edge=pe,
+        vertex_weights=hga.vertex_weights[:n_pad2],
+        edge_weights=hga.edge_weights[:m_pad2],
+        edge_sizes=hga.edge_sizes[:m_pad2],
+        n=hga.n, m=hga.m, incident=None,
+    )
+    cid = jnp.where(cid >= hga.n, ghost_v, cid)
+    part = None if part is None else part[:n_pad2]
+    return out, cid, part
+
+
+@partial(jax.jit, static_argnames=("d_pad",))
+def _incidence_dev(hga: HypergraphArrays, d_pad: int) -> jnp.ndarray:
+    """Dense [n_pad, d_pad] incident-edge layout (pad = -1) built on
+    device — the coarse-level analogue of ``Hypergraph.incidence_matrix``
+    so the Pallas gain kernels stay reachable without any host trip."""
+    p_pad = hga.p_pad
+    ghost_e = jnp.int32(hga.m_pad - 1)
+    pv, pe = jax.lax.sort((hga.pin_vertex, hga.pin_edge), num_keys=2,
+                          is_stable=False)
+    arange_p = jnp.arange(p_pad, dtype=jnp.int32)
+    first = jnp.full(hga.n_pad, p_pad, jnp.int32).at[pv].min(arange_p)
+    col = arange_p - first[pv]
+    live = pe != ghost_e
+    row = jnp.where(live, pv, hga.n_pad - 1)
+    col = jnp.where(live, col, d_pad)  # pushed out of bounds -> dropped
+    return jnp.full((hga.n_pad, d_pad), -1, jnp.int32).at[
+        row, col].set(pe, mode="drop")
+
+
+def _attach_incident(hga: HypergraphArrays, m: int,
+                     p: int) -> HypergraphArrays:
+    """Attach the kernel gain layout when a kernel path is reachable,
+    mirroring ``HypergraphArrays.from_host``'s policy (lane padding and
+    the hub-vertex expansion guard)."""
+    from repro.kernels import ops
+    if not m or not ops.gain_layout_enabled():
+        return hga
+    deg = jnp.zeros(hga.n_pad, jnp.int32).at[hga.pin_vertex].add(
+        (hga.pin_edge != hga.m_pad - 1).astype(jnp.int32))
+    deg = deg.at[hga.n_pad - 1].set(0)
+    d_max = int(deg.max())  # one scalar readback, once per level
+    d_pad = max(_round_pow2(max(d_max, 1), _INCIDENCE_LANE_PAD),
+                _INCIDENCE_LANE_PAD)
+    if hga.n_pad * d_pad > _INCIDENCE_MAX_EXPANSION * max(p, 1):
+        return hga
+    return dataclasses.replace(hga, incident=_incidence_dev(hga, d_pad))
+
+
+def device_coarsen(hg: Hypergraph, k: int, *,
+                   contraction_limit_factor: int = 64, max_rounds: int = 64,
+                   min_shrink: float = 0.02, seed: int = 0,
+                   restrict_part=None,
+                   max_cluster_frac: float = 1.0) -> HierarchyArrays:
+    """Build the multilevel hierarchy entirely on device.
+
+    The host keeps only the round schedule (shared with the numpy
+    coarsener via ``coarsen.round_schedule``): each round it reads back
+    three scalars (n, m, live-pin count), decides done/stalled, and
+    re-buckets the new level into its own pow2 padding so the jitted
+    round and every downstream refinement dispatch hit their compile
+    caches.  ``restrict_part`` projects through the levels on device —
+    partition-aware hierarchies carry their partition with them.
+    """
+    sched = round_schedule(hg, k,
+                           contraction_limit_factor=contraction_limit_factor,
+                           max_rounds=max_rounds, min_shrink=min_shrink,
+                           max_cluster_frac=max_cluster_frac)
+    hga = hg.arrays()
+    part = None
+    if restrict_part is not None:
+        pp = np.zeros(hga.n_pad, np.int32)
+        pp[: hg.n] = np.asarray(restrict_part, np.int32)[: hg.n]
+        part = jnp.asarray(pp)
+    levels = [DeviceLevel(hga=hga, cluster_id=None, n=hg.n, m=hg.m,
+                          p=hg.num_pins, part=part, host_hg=hg)]
+    key = jax.random.PRNGKey(seed)
+    cur, cur_part, n_cur = hga, part, hg.n
+    for _ in range(sched.max_rounds):
+        if sched.done(n_cur):
+            break
+        key, sub = jax.random.split(key)
+        coarse, cid, new_part, p_new = _coarsen_round(
+            cur, cur_part, sub, jnp.float32(sched.c_max),
+            max_stride=MAX_STRIDE, max_edge_size=MAX_EDGE_SIZE)
+        n_new = int(coarse.n)
+        if sched.stalled(n_cur, n_new):
+            break
+        m_new, p_new = int(coarse.m), int(p_new)
+        n_pad2 = _round_pow2(n_new + 1)
+        m_pad2 = _round_pow2(m_new + 1)
+        p_pad2 = _round_pow2(p_new + 1)
+        if (n_pad2, m_pad2, p_pad2) != (coarse.n_pad, coarse.m_pad,
+                                        coarse.p_pad):
+            coarse, cid, new_part = _rebucket_jit(
+                coarse, cid, new_part,
+                n_pad2=n_pad2, m_pad2=m_pad2, p_pad2=p_pad2)
+        coarse = _attach_incident(coarse, m_new, p_new)
+        levels.append(DeviceLevel(hga=coarse, cluster_id=cid, n=n_new,
+                                  m=m_new, p=p_new, part=new_part))
+        cur, cur_part, n_cur = coarse, new_part, n_new
+    return HierarchyArrays(levels=levels)

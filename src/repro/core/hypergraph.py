@@ -15,7 +15,7 @@ from __future__ import annotations
 
 import dataclasses
 from functools import partial
-from typing import Optional, Tuple
+from typing import List, Optional, Tuple
 
 import numpy as np
 import jax
@@ -51,6 +51,11 @@ class Hypergraph:
     # differ per instance, so this one is NOT shared across reweights)
     _arrays_cache: dict = dataclasses.field(default_factory=dict,
                                             repr=False, compare=False)
+    # reweighted copies point back at the hypergraph they were derived
+    # from: arrays() then swaps only the edge-weight leaf of the donor's
+    # cached device arrays instead of re-shipping the structure
+    _arrays_donor: Optional["Hypergraph"] = dataclasses.field(
+        default=None, repr=False, compare=False)
 
     # ---------------------------------------------------------------- util
     @property
@@ -145,6 +150,18 @@ class Hypergraph:
         hg.validate()
         return hg
 
+    def structural_copy(self) -> "Hypergraph":
+        """Copy sharing the structural numpy arrays but NONE of the
+        caches (arrays/layout/dual/donor) — benchmarks and parity tests
+        use it so every timed run pays its real host->device
+        conversions."""
+        return Hypergraph(
+            n=self.n, m=self.m, pins=self.pins,
+            edge_offsets=self.edge_offsets,
+            vertex_weights=self.vertex_weights,
+            edge_weights=self.edge_weights,
+        )
+
     def with_edge_weights(self, new_weights: np.ndarray) -> "Hypergraph":
         hg = Hypergraph(
             n=self.n, m=self.m, pins=self.pins,
@@ -156,6 +173,12 @@ class Hypergraph:
         # structure is unchanged: the reweighted copy shares the kernel
         # layout cache (mutation's reweighted V-cycles hit it for free)
         hg._layout_cache = self._layout_cache
+        # ... and donates its device structure arrays: arrays() on the
+        # reweighted copy swaps only the edge-weight leaf instead of
+        # re-shipping pins/incidence (mutation builds one reweighted copy
+        # per member per round — this keeps those host->device free)
+        hg._arrays_donor = self if self._arrays_donor is None \
+            else self._arrays_donor
         return hg
 
     def arrays(self, pad_pins: Optional[int] = None,
@@ -168,8 +191,18 @@ class Hypergraph:
         key = (pad_pins, pad_edges, pad_vertices, gain_layout_enabled())
         hit = self._arrays_cache.get(key)
         if hit is None:
-            hit = HypergraphArrays.from_host(self, pad_pins, pad_edges,
-                                             pad_vertices)
+            donor = self._arrays_donor
+            base = donor._arrays_cache.get(key) if donor is not None else None
+            if base is not None:
+                # same structure, different edge weights: reuse every
+                # structural device leaf from the donor's arrays
+                ew = np.zeros(base.m_pad, np.float32)
+                ew[: self.m] = self.edge_weights
+                hit = dataclasses.replace(base,
+                                          edge_weights=jnp.asarray(ew))
+            else:
+                hit = HypergraphArrays.from_host(self, pad_pins, pad_edges,
+                                                 pad_vertices)
             self._arrays_cache[key] = hit
         return hit
 
@@ -387,3 +420,226 @@ def contract(hg: Hypergraph, cluster_id: np.ndarray, n_new: int,
 def project_partition(part_coarse: np.ndarray, cluster_id: np.ndarray) -> np.ndarray:
     """Project a coarse partition vector through a contraction mapping."""
     return np.asarray(part_coarse)[np.asarray(cluster_id)]
+
+
+# --------------------------------------------------------------------------
+# Contraction (device): fixed-shape jit-safe analogue of ``contract``
+# --------------------------------------------------------------------------
+def _compact_ghosts(live: jnp.ndarray, arrays, fills):
+    """Scatter live entries to the front, ghosts to the tail, preserving
+    relative order — a cumsum/scatter partition, cheaper than the
+    argsort it replaces (no comparator pass)."""
+    csum = jnp.cumsum(live.astype(jnp.int32))
+    n_live = csum[-1]
+    csum_g = jnp.cumsum((~live).astype(jnp.int32))
+    dest = jnp.where(live, csum - 1, n_live + csum_g - 1)
+    return [jnp.full(a.shape, fill, a.dtype).at[dest].set(a)
+            for a, fill in zip(arrays, fills)]
+
+
+def contract_arrays(hga: HypergraphArrays, cid: jnp.ndarray,
+                    n_new: jnp.ndarray):
+    """Contract a padded device hypergraph by cluster assignment ``cid``.
+
+    ``cid`` maps every fine vertex slot [n_pad] onto dense coarse ids
+    [0, n_new) with padded/ghost slots pointing at the coarse ghost
+    ``n_pad - 1``.  Fixed shapes throughout (the coarse hypergraph keeps
+    the fine padding; the host loop re-buckets afterwards).  Semantics
+    match the host ``contract`` exactly: within-edge duplicate pins are
+    removed, single-pin edges dropped, parallel edges merged with weights
+    summed onto the lowest original edge id, edges renumbered densely in
+    original order, pins sorted by (edge, vertex) with ghosts compacted
+    to the tail.
+
+    Returns ``(coarse_arrays, p_new)`` where ``p_new`` is the live pin
+    count (for host-side re-bucketing).
+    """
+    n_pad, m_pad, p_pad = hga.n_pad, hga.m_pad, hga.p_pad
+    ghost_v = jnp.int32(n_pad - 1)
+    ghost_e = jnp.int32(m_pad - 1)
+    arange_m = jnp.arange(m_pad, dtype=jnp.int32)
+    arange_p = jnp.arange(p_pad, dtype=jnp.int32)
+
+    new_vw = jnp.zeros(n_pad, jnp.float32).at[cid].add(hga.vertex_weights)
+
+    # map pins onto clusters; sort by (edge, vertex) so duplicates are
+    # adjacent and pins end up sorted within each edge.  Variadic
+    # two-key lax.sort, NOT a composite key: ``edge * n_pad + vertex``
+    # would overflow int32 exactly in the fine-level regime
+    # (n_pad * m_pad > 2**31) this code exists for, and int64 is
+    # unavailable without jax_enable_x64.
+    pv = cid[hga.pin_vertex]
+    pe, pv = jax.lax.sort((hga.pin_edge, pv), num_keys=2, is_stable=False)
+    dup = jnp.zeros(p_pad, bool).at[1:].set(
+        (pe[1:] == pe[:-1]) & (pv[1:] == pv[:-1]) & (pe[1:] != ghost_e))
+    pv = jnp.where(dup, ghost_v, pv)
+    pe = jnp.where(dup, ghost_e, pe)
+
+    # post-dedup sizes; single-pin (and empty) edges vanish
+    live_pin = pe != ghost_e
+    sizes = jnp.zeros(m_pad, jnp.int32).at[pe].add(live_pin.astype(jnp.int32))
+    edge_alive = (arange_m < hga.m) & (sizes >= 2)
+    keep_pin = live_pin & edge_alive[pe]
+    pv = jnp.where(keep_pin, pv, ghost_v)
+    pe = jnp.where(keep_pin, pe, ghost_e)
+
+    # parallel-edge detection: two independent uint32 polynomial hashes
+    # over each edge's (sorted) pin sequence — the uint32-pair analogue of
+    # the host contract's 64-bit hash (int64 needs jax_enable_x64).
+    # Positions are LIVE-pin ranks within the edge, not raw array offsets:
+    # removed duplicate pins leave holes, and two now-identical edges with
+    # different hole patterns must still hash equal (the host hashes over
+    # the compacted pin list).
+    live_rank = jnp.cumsum(keep_pin.astype(jnp.int32)) - 1
+    first_rank = jnp.full(m_pad, p_pad, jnp.int32).at[pe].min(
+        jnp.where(keep_pin, live_rank, p_pad))
+    pos = (live_rank - first_rank[pe]).astype(jnp.uint32)
+    pu = pv.astype(jnp.uint32)
+    a1 = (pu + jnp.uint32(0x9E3779B9)) * (pos * jnp.uint32(2) + jnp.uint32(1))
+    a2 = (pu ^ jnp.uint32(0x85EBCA6B)) * (pos + jnp.uint32(0xC2B2AE35))
+    m1 = a1 * (a1 >> jnp.uint32(15))
+    m2 = a2 ^ (a2 << jnp.uint32(7))
+    live_u = keep_pin.astype(jnp.uint32)
+    h1 = jnp.zeros(m_pad, jnp.uint32).at[pe].add(m1 * live_u)
+    h2 = jnp.zeros(m_pad, jnp.uint32).at[pe].add(m2 * live_u)
+    su = sizes.astype(jnp.uint32)
+    h1 = h1 ^ (su * jnp.uint32(0x27D4EB2F))
+    h2 = h2 ^ su
+    # dead edges must not group with anything (nor with each other)
+    h1 = jnp.where(edge_alive, h1, jnp.uint32(0xFFFFFFFF))
+    h2 = jnp.where(edge_alive, h2, arange_m.astype(jnp.uint32))
+
+    h1s, h2s, eo = jax.lax.sort((h1, h2, arange_m), num_keys=2,
+                                is_stable=False)
+    newg = jnp.ones(m_pad, bool).at[1:].set(
+        (h1s[1:] != h1s[:-1]) | (h2s[1:] != h2s[:-1]))
+    grp = jnp.cumsum(newg.astype(jnp.int32)) - 1
+    alive_s = edge_alive[eo]
+    gw = jnp.zeros(m_pad, jnp.float32).at[grp].add(
+        jnp.where(alive_s, hga.edge_weights[eo], 0.0))
+    rep = jnp.full(m_pad, m_pad, jnp.int32).at[grp].min(
+        jnp.where(alive_s, eo, m_pad))
+    grp_of = jnp.zeros(m_pad, jnp.int32).at[eo].set(grp)
+    keep_edge = edge_alive & (arange_m == rep[grp_of])
+    merged_w = jnp.where(keep_edge, gw[grp_of], 0.0)
+
+    # drop pins of merged-away edges, renumber kept edges densely
+    # (cumsum keeps the original edge order, like the host contract)
+    pin_ok = keep_edge[pe] & (pe != ghost_e)
+    pv = jnp.where(pin_ok, pv, ghost_v)
+    pe = jnp.where(pin_ok, pe, ghost_e)
+    new_eid = (jnp.cumsum(keep_edge.astype(jnp.int32)) - 1).astype(jnp.int32)
+    m_new = keep_edge.sum()
+    pe = jnp.where(pe != ghost_e, new_eid[pe], ghost_e)
+    tgt = jnp.where(keep_edge, new_eid, ghost_e)
+    new_ew = jnp.zeros(m_pad, jnp.float32).at[tgt].add(
+        jnp.where(keep_edge, merged_w, 0.0))
+    new_es = jnp.zeros(m_pad, jnp.int32).at[tgt].add(
+        jnp.where(keep_edge, sizes, 0))
+
+    # compact ghosts to the tail (order-preserving: live pins stay
+    # (edge, vertex) sorted, so the next round's stride pairing sees
+    # contiguous edges)
+    live_now = pe != ghost_e
+    pv, pe = _compact_ghosts(live_now, [pv, pe], [ghost_v, ghost_e])
+    p_new = live_now.sum()
+
+    coarse = HypergraphArrays(
+        pin_vertex=pv, pin_edge=pe,
+        vertex_weights=new_vw, edge_weights=new_ew, edge_sizes=new_es,
+        n=n_new, m=m_new, incident=None,
+    )
+    return coarse, p_new
+
+
+# --------------------------------------------------------------------------
+# Device-resident hierarchy (built by core/dcoarsen): every per-level
+# HypergraphArrays is born on device — uncoarsening never re-ships
+# --------------------------------------------------------------------------
+@dataclasses.dataclass
+class DeviceLevel:
+    """One device-resident coarsening level.
+
+    ``cluster_id`` maps the FINER level's padded vertex slots onto this
+    level's padded ids (ghost -> ghost); ``part`` carries the projected
+    input partition for partition-aware hierarchies.  ``n``/``m``/``p``
+    are host ints (read back once per round by the schedule loop).
+    """
+    hga: HypergraphArrays
+    cluster_id: Optional[jnp.ndarray]
+    n: int
+    m: int
+    p: int
+    part: Optional[jnp.ndarray] = None
+    host_hg: Optional[Hypergraph] = None  # lazy, cached
+
+
+def _arrays_to_host(hga: HypergraphArrays, n: int, m: int) -> Hypergraph:
+    """Materialise a host CSR hypergraph from device arrays (used only
+    where an operator is genuinely host-side: recombination overlays,
+    mutation reweighting)."""
+    pv = np.asarray(hga.pin_vertex)
+    pe = np.asarray(hga.pin_edge)
+    keep = pe < m
+    pv, pe = pv[keep], pe[keep]
+    order = np.argsort(pe, kind="stable")
+    pv, pe = pv[order], pe[order]
+    sizes = np.bincount(pe, minlength=m)
+    offsets = np.concatenate([[0], np.cumsum(sizes)]).astype(np.int64)
+    hg = Hypergraph(
+        n=n, m=m, pins=pv.astype(np.int32), edge_offsets=offsets,
+        vertex_weights=np.asarray(hga.vertex_weights)[:n].astype(np.float32),
+        edge_weights=np.asarray(hga.edge_weights)[:m].astype(np.float32),
+    )
+    hg.validate()
+    return hg
+
+
+@dataclasses.dataclass
+class HierarchyArrays:
+    """Device-resident multilevel hierarchy.  Implements the same
+    hierarchy protocol as ``coarsen.Hierarchy`` (num_levels, level_n,
+    level_arrays, level_host, level_part, project_pop, sizes), so the
+    drivers never branch on which engine built it."""
+    levels: List["DeviceLevel"]
+
+    @property
+    def num_levels(self) -> int:
+        return len(self.levels)
+
+    def sizes(self) -> List[int]:
+        return [lv.n for lv in self.levels]
+
+    def level_n(self, li: int) -> int:
+        return self.levels[li].n
+
+    def level_arrays(self, li: int) -> HypergraphArrays:
+        return self.levels[li].hga
+
+    def level_host(self, li: int) -> Hypergraph:
+        lv = self.levels[li]
+        if lv.host_hg is None:
+            lv.host_hg = _arrays_to_host(lv.hga, lv.n, lv.m)
+            # the level's arrays already live on device: seed the host
+            # copy's cache so recombination/mutation (and reweighted
+            # donees) reuse them instead of re-paying the from_host
+            # ship this engine exists to eliminate
+            from repro.kernels.ops import gain_layout_enabled
+            lv.host_hg._arrays_cache[
+                (None, None, None, gain_layout_enabled())] = lv.hga
+        return lv.host_hg
+
+    def level_part(self, li: int) -> Optional[jnp.ndarray]:
+        return self.levels[li].part
+
+    def project_pop(self, parts, li: int) -> jnp.ndarray:
+        """Project a population at level ``li`` onto level ``li - 1``
+        entirely on device (``cluster_id`` gather, ghost -> ghost)."""
+        lv = self.levels[li]
+        parts = jnp.asarray(parts, jnp.int32)
+        n_pad = lv.hga.n_pad
+        if parts.shape[1] < n_pad:  # host operators hand back sliced parts
+            pad = jnp.zeros((parts.shape[0], n_pad - parts.shape[1]),
+                            jnp.int32)
+            parts = jnp.concatenate([parts, pad], axis=1)
+        return jnp.take(parts, lv.cluster_id, axis=1)

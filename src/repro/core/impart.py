@@ -4,6 +4,13 @@ One coarsening hierarchy; alpha solutions uncoarsen *together*; at the
 beta geometric thresholds (Sec. 3.1.1) a ring-recombination round runs,
 followed by the diversity-enhancement mutation; every member is refined
 at every level.  Best member wins.
+
+The hierarchy is built by ``dcoarsen.build_hierarchy`` (host numpy or
+the device-resident coarsening engine, ``REPRO_COARSEN_PATH``); the
+driver consumes it through the shared hierarchy protocol, so with the
+device engine coarsening, projection and refinement all stay on device
+— the host only touches the recombination/mutation levels (irregular
+overlay work) through ``level_host``.
 """
 from __future__ import annotations
 
@@ -14,8 +21,9 @@ from typing import List, Optional
 import numpy as np
 
 from .hypergraph import Hypergraph
-from .coarsen import coarsen, recombination_thresholds, Hierarchy
-from .initial_partition import initial_partition
+from .coarsen import recombination_thresholds
+from .dcoarsen import build_hierarchy
+from .initial_partition import initial_partition_population
 from . import refine as refine_mod
 from . import metrics
 from .recombine import ring_recombination
@@ -55,71 +63,65 @@ class ImpartResult:
 def impart_partition(hg: Hypergraph, cfg: ImpartConfig) -> ImpartResult:
     t0 = time.perf_counter()
     k, eps = cfg.k, cfg.eps
-    hier = coarsen(hg, k, seed=cfg.seed,
-                   contraction_limit_factor=cfg.contraction_limit_factor)
-    coarsest = hier.coarsest
-    n, n_c = hg.n, coarsest.n
+    hier = build_hierarchy(hg, k, seed=cfg.seed,
+                           contraction_limit_factor=cfg.contraction_limit_factor)
+    num_levels = hier.num_levels
+    n, n_c = hg.n, hier.level_n(num_levels - 1)
     thresholds = recombination_thresholds(n, n_c, cfg.beta)
 
     # alpha diverse initial solutions (distinct seeds, like the paper's
-    # seeds -1..5); from here on the population lives as ONE stacked
+    # seeds -1..5), the whole portfolio x population stack refined in ONE
+    # batched dispatch; from here on the population lives as one stacked
     # tensor parts[alpha, n] and every refinement is a batched dispatch.
-    init: List[np.ndarray] = []
-    cuts = np.zeros(cfg.alpha, np.float64)
-    for i in range(cfg.alpha):
-        p, c = initial_partition(coarsest, k, eps, seed=cfg.seed * 101 + i,
-                                 tries_per_strategy=1)
-        init.append(np.asarray(p, np.int32)[: n_c])
-        cuts[i] = c
-    parts = np.stack(init)                                   # [alpha, n_c]
+    parts, cuts = initial_partition_population(
+        hier.level_host(num_levels - 1), k, eps,
+        seeds=[cfg.seed * 101 + i for i in range(cfg.alpha)],
+        tries_per_strategy=1, hga=hier.level_arrays(num_levels - 1))
 
     trace: List[tuple] = [(n_c, list(cuts), "init")]
     next_thr = 0
-    num_levels = len(hier.levels)
 
     for li in range(num_levels - 1, -1, -1):
-        lv = hier.levels[li]
         if li < num_levels - 1:
-            cmap = hier.levels[li + 1].cluster_id
-            parts = parts[:, cmap]
-        # arrays() is cached per level (kernel layouts included), so the
-        # host->device conversion and the incidence re-blocking happen
-        # once however many rounds/recombinations revisit this level
-        hga = lv.hg.arrays()
+            parts = hier.project_pop(parts, li + 1)
+        n_li = hier.level_n(li)
+        # level arrays are cached (host path) or born on device (device
+        # path), so no host->device conversion repeats per round
+        hga = hier.level_arrays(li)
         # device-resident refinement: all alpha members refine together,
         # and each LP round (attempts included) is a single dispatch
         parts, cuts = refine_mod.refine_population(
             hga, parts, k, eps, fm_node_limit=cfg.fm_node_limit,
             max_iters=cfg.lp_iters)
-        parts = parts[:, : lv.hg.n]
-        trace.append((lv.hg.n, list(cuts), "refine"))
+        trace.append((n_li, list(cuts), "refine"))
 
-        # fire the geometric-threshold recombination rounds
-        while (next_thr < cfg.beta and lv.hg.n >= thresholds[next_thr] - 1e-9
+        # fire the geometric-threshold recombination rounds (irregular
+        # host overlay work: materialise the level once via level_host)
+        while (next_thr < cfg.beta and n_li >= thresholds[next_thr] - 1e-9
                and cfg.recombination_enabled):
+            lv_host = hier.level_host(li)
             parts, cuts = ring_recombination(
-                lv.hg, parts, cuts, k, eps,
+                lv_host, np.asarray(parts)[:, : n_li], cuts, k, eps,
                 seed=cfg.seed * 31 + next_thr)
-            trace.append((lv.hg.n, list(cuts), f"recombine@{next_thr}"))
+            trace.append((n_li, list(cuts), f"recombine@{next_thr}"))
             if cfg.mutation_enabled:
                 parts, cuts = mutate_population(
-                    lv.hg, parts, cuts, k, eps,
+                    lv_host, parts, cuts, k, eps,
                     threshold=cfg.similarity_threshold,
                     mu=cfg.mutation_mu, seed=cfg.seed * 17 + next_thr)
-                trace.append((lv.hg.n, list(cuts), f"mutate@{next_thr}"))
+                trace.append((n_li, list(cuts), f"mutate@{next_thr}"))
             next_thr += 1
         if cfg.time_budget_s and time.perf_counter() - t0 > cfg.time_budget_s:
             # fast-forward: project straight to the finest level and refine
             for lj in range(li - 1, -1, -1):
-                cmapj = hier.levels[lj + 1].cluster_id
-                parts = parts[:, cmapj]
-            hga0 = hier.original.arrays()
+                parts = hier.project_pop(parts, lj + 1)
+            hga0 = hier.level_arrays(0)
             parts, cuts = refine_mod.lp_refine_population(
                 hga0, parts, k, eps, max_iters=4)
-            parts = parts[:, : hg.n]
             trace.append((hg.n, list(cuts), "budget-exhausted"))
             break
 
+    parts = np.asarray(parts)
     best = int(np.argmin(cuts))
     part, cut = parts[best][: hg.n], float(cuts[best])
     for v in range(cfg.final_vcycles):

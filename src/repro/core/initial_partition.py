@@ -86,17 +86,54 @@ def bfs_growth(hg: Hypergraph, k: int, rng: np.random.Generator
 STRATEGIES = (random_balanced, linear_blocks, bfs_growth)
 
 
+def initial_partition_population(hg: Hypergraph, k: int, eps: float,
+                                 seeds, tries_per_strategy: int = 2,
+                                 hga=None):
+    """Portfolio x population initial partitioning in ONE batched
+    refinement dispatch.
+
+    The cheap host constructions (``STRATEGIES``) run per (member, try)
+    with each member's own rng — identical draws to the sequential
+    ``initial_partition`` loop — and the whole
+    ``len(seeds) * len(STRATEGIES) * tries_per_strategy`` candidate stack
+    then refines through ``refine_population`` (LP + coarse FM) in one
+    batch instead of one dispatch chain per candidate.  Per-candidate
+    trajectories are bit-identical to the scalar path, so the best-of
+    selection returns exactly what the sequential loop returned.
+
+    ``hga``: pass the (possibly device-born) arrays of ``hg`` to avoid a
+    host->device re-ship when the caller already holds them.
+
+    Returns ``(parts [len(seeds), n], cuts [len(seeds)])``.
+    """
+    hga = hga if hga is not None else hg.arrays()
+    cands, owner = [], []
+    for i, seed in enumerate(seeds):
+        rng = np.random.default_rng(seed)
+        for strat in STRATEGIES:
+            for _ in range(tries_per_strategy):
+                part = strat(hg, k, rng)
+                part = refine_mod.rebalance(hg.vertex_weights, part, k,
+                                            eps, rng)
+                cands.append(np.asarray(part, np.int32)[: hg.n])
+                owner.append(i)
+    parts, cuts = refine_mod.refine_population(hga, np.stack(cands), k, eps)
+    parts = np.asarray(parts)
+    owner = np.asarray(owner)
+    out_p = np.zeros((len(seeds), hg.n), np.int32)
+    out_c = np.zeros(len(seeds), np.float64)
+    for i in range(len(seeds)):
+        idx = np.nonzero(owner == i)[0]
+        best = idx[int(np.argmin(cuts[idx]))]
+        out_p[i] = parts[best][: hg.n]
+        out_c[i] = cuts[best]
+    return out_p, out_c
+
+
 def initial_partition(hg: Hypergraph, k: int, eps: float, seed: int,
                       tries_per_strategy: int = 2) -> Tuple[np.ndarray, float]:
-    """Best-of-portfolio initial partition, FM-refined."""
-    rng = np.random.default_rng(seed)
-    hga = hg.arrays()
-    best_part, best_cut = None, np.inf
-    for strat in STRATEGIES:
-        for _ in range(tries_per_strategy):
-            part = strat(hg, k, rng)
-            part = refine_mod.rebalance(hg.vertex_weights, part, k, eps, rng)
-            part, cut = refine_mod.refine(hga, part, k, eps)
-            if cut < best_cut:
-                best_part, best_cut = part, cut
-    return best_part[: hg.n].copy(), best_cut
+    """Best-of-portfolio initial partition, FM-refined.  The portfolio
+    refines as one batch (population of one member)."""
+    parts, cuts = initial_partition_population(
+        hg, k, eps, [seed], tries_per_strategy=tries_per_strategy)
+    return parts[0].copy(), float(cuts[0])

@@ -11,6 +11,13 @@ already cuts become expensive, steering S_j into unexplored cut
 structures.  The re-partition is an in-framework V-cycle (the paper calls
 the base partitioner here; staying inside the single multilevel process is
 exactly IMPart's point).
+
+Each mutated member's V-cycle builds its own partition-aware hierarchy
+of the reweighted hypergraph.  Under ``REPRO_COARSEN_PATH=device`` that
+hierarchy is built by the device coarsening engine, and because
+``Hypergraph.with_edge_weights`` donates the base structure's device
+arrays (only the edge-weight leaf is replaced), the per-member reweights
+ship no pins to the device at all.
 """
 from __future__ import annotations
 
@@ -56,7 +63,9 @@ def mutate_population(hg: Hypergraph, parts, cuts, k: int, eps: float,
     The per-member cut indicators C(e) come from one batched connectivity
     dispatch over the whole population; the V-cycle re-partition stays
     per-member because each runs on a DIFFERENTLY reweighted hypergraph
-    (its own partition-aware hierarchy).
+    (its own partition-aware hierarchy — see the ROADMAP item on
+    batching these through a shared-hierarchy approximation, now
+    unblocked by the partition-aware device coarsener).
     """
     hga = hg.arrays()
     alpha = len(parts)

@@ -5,15 +5,23 @@ mutation operator to re-partition the reweighted hypergraph.
 Partition-aware coarsening: only same-block vertices merge, so the input
 partition projects exactly (same cut) onto every level; refinement then
 improves it on the way back up.
+
+The hierarchy comes from ``dcoarsen.build_hierarchy`` — the numpy
+reference coarsener or the device-resident engine, selected by
+``REPRO_COARSEN_PATH`` — and the uncoarsening loop below is written
+against the shared hierarchy protocol, so with the device engine the
+whole V-cycle (coarsen included) stays on device except the final
+elitism readback.
 """
 from __future__ import annotations
 
 from typing import Tuple
 
 import numpy as np
+import jax.numpy as jnp
 
 from .hypergraph import Hypergraph
-from .coarsen import coarsen
+from .dcoarsen import build_hierarchy
 from . import refine as refine_mod
 from . import metrics
 
@@ -30,33 +38,25 @@ def vcycle(hg: Hypergraph, part: np.ndarray, k: int, eps: float,
     Never returns a worse partition than the input (elitism on true cut).
     """
     part = np.asarray(part, np.int32)
-    hier = coarsen(hg, k, seed=seed, restrict_part=part,
-                   contraction_limit_factor=contraction_limit_factor)
-    # project the partition to the coarsest level
-    parts_per_level = [part]
-    cur = part
-    for lv in hier.levels[1:]:
-        newp = np.zeros(lv.hg.n, np.int32)
-        newp[lv.cluster_id] = cur  # all members share the block
-        parts_per_level.append(newp)
-        cur = newp
+    hier = build_hierarchy(hg, k, seed=seed, restrict_part=part,
+                           contraction_limit_factor=contraction_limit_factor)
+    num = hier.num_levels
 
     # uncoarsen + refine (the batched engine with a population of one —
     # vcycle shares the exact dispatch path impart's alpha-population
-    # uses, including the fused on-device LP attempt loop; arrays() is
-    # cached per level, and mutation's reweighted hypergraphs share the
-    # structural layout cache, so repeated V-cycles re-block nothing)
-    cur = parts_per_level[-1]
-    for li in range(len(hier.levels) - 1, -1, -1):
-        lv = hier.levels[li]
-        if li < len(hier.levels) - 1:
-            cur = cur[hier.levels[li + 1].cluster_id]
-        hga = lv.hg.arrays()
-        pp, _ = refine_mod.refine_population(hga, cur[None, :], k, eps,
-                                             fm_node_limit=fm_node_limit)
-        cur = np.asarray(pp[0][: lv.hg.n])
+    # uses, including the fused on-device LP attempt loop; level arrays
+    # are cached/born per level, and mutation's reweighted hypergraphs
+    # share the structural device arrays, so repeated V-cycles re-ship
+    # nothing)
+    cur = jnp.asarray(hier.level_part(num - 1), jnp.int32)[None, :]
+    for li in range(num - 1, -1, -1):
+        if li < num - 1:
+            cur = hier.project_pop(cur, li + 1)
+        hga = hier.level_arrays(li)
+        cur, _ = refine_mod.refine_population(hga, cur, k, eps,
+                                              fm_node_limit=fm_node_limit)
 
-    out = cur
+    out = np.asarray(cur[0])[: hg.n]
     # elitism on the true objective
     true_hg = hg if eval_weights is None else hg.with_edge_weights(eval_weights)
     hga0 = true_hg.arrays()

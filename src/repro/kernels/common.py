@@ -37,6 +37,21 @@ GAIN_TABLE_VMEM_BYTES = VMEM_BUDGET_BYTES // 8
 GAIN_STREAM_TILE_BYTES = VMEM_BUDGET_BYTES // 8
 
 
+#: Budget for one tile pair of the rating scatter kernel
+#: (``kernels/rating.py``): the [block_c, block_s] one-hot membership
+#: matrix is the largest tensor it materialises (the segment-sum runs as
+#: a matmul against it on the MXU).
+RATING_TILE_BYTES = VMEM_BUDGET_BYTES // 8
+
+#: Routing bound for the rating kernel.  Its grid is dense over
+#: (segment tiles x candidate tiles) — quadratic in the candidate count,
+#: like the whole-table gain kernel it is the coarse/mid-level tool.
+#: Above this candidate count the dispatcher falls back to the XLA
+#: segment-sum (sorted-scatter, linear).  32K candidates with the
+#: default 512x1024 tiles is ~2K grid steps.
+RATING_KERNEL_MAX_C = 32768
+
+
 def pad_rows(x: jnp.ndarray, mult: int, fill) -> jnp.ndarray:
     """Pad axis 0 of ``x`` up to a multiple of ``mult`` with ``fill``.
 
@@ -69,3 +84,12 @@ def stream_block_m(k: int) -> int:
     """Edge-table tile rows for the streaming gain kernels: the
     [bm, k] table tile must fit ``GAIN_STREAM_TILE_BYTES``."""
     return _pow2_floor(GAIN_STREAM_TILE_BYTES // max(k * 4, 1), 8, 512)
+
+
+def rating_blocks() -> tuple:
+    """(block_s, block_c) for the rating scatter kernel: segment-tile
+    lanes x candidate-tile rows, sized so the [block_c, block_s] one-hot
+    matrix fits ``RATING_TILE_BYTES``."""
+    bs = 512
+    bc = _pow2_floor(RATING_TILE_BYTES // (bs * 4), 128, 1024)
+    return bs, bc

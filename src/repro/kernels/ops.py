@@ -54,11 +54,12 @@ import jax.numpy as jnp
 from repro.core.hypergraph import Hypergraph
 from . import ref
 from .common import (GAIN_TABLE_VMEM_BYTES, GAIN_STREAM_TILE_BYTES,  # noqa: F401 (re-exported)
-                     KERNEL_MAX_K, VMEM_BUDGET_BYTES)
+                     KERNEL_MAX_K, RATING_KERNEL_MAX_C, VMEM_BUDGET_BYTES)
 from .connectivity import connectivity_pallas, cutsize_pallas
 from .gain import (gain_gather_pallas, gain_gather_batch_pallas,
                    gain_stream_pallas, gain_stream_batch_pallas)
 from .embedding_bag import embedding_bag_pallas
+from .rating import rating_scatter_pallas
 
 _INTERPRET_CACHE: bool | None = None
 
@@ -144,6 +145,37 @@ def gain_assemble_batch(incident: jnp.ndarray, becomes_internal: jnp.ndarray,
                                         was_internal,
                                         interpret=interpret_mode())
     raise ValueError(f"not a kernel gain path: {path!r}")
+
+
+# --------------------------------------------------------------------------
+# rating-path dispatch (device coarsener, see core/dcoarsen)
+# --------------------------------------------------------------------------
+RATING_PATHS = ("pallas", "xla")
+
+
+def rating_path(c: int) -> str:
+    """How the device coarsener aggregates pair ratings for ``c``
+    (padded) candidates: ``"pallas"`` — the MXU scatter kernel, chosen on
+    compiled backends while its dense (segment x candidate) tile grid
+    stays small (``c <= RATING_KERNEL_MAX_C``, the coarse/mid rounds) —
+    or ``"xla"`` — the linear segment-sum, CPU / interpret / fine rounds.
+    ``REPRO_RATING_PATH=pallas|xla`` forces it (parity tests / smoke)."""
+    env = os.environ.get("REPRO_RATING_PATH", "auto").strip().lower()
+    if env in RATING_PATHS:
+        return env
+    if interpret_mode() or c > RATING_KERNEL_MAX_C:
+        return "xla"
+    return "pallas"
+
+
+def rating_segment_sum(vals: jnp.ndarray, segs: jnp.ndarray,
+                       num_segments: int) -> jnp.ndarray:
+    """Segment-sum of candidate-pair ratings by SORTED segment id
+    (ids < 0 are dropped), routed by ``rating_path()``."""
+    if rating_path(vals.shape[0]) == "pallas":
+        return rating_scatter_pallas(vals, segs, num_segments,
+                                     interpret=interpret_mode())
+    return ref.rating_segment_sum_ref(vals, segs, num_segments)
 
 
 # --------------------------------------------------------------------------

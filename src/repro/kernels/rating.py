@@ -1,0 +1,95 @@
+"""Pallas TPU kernel: heavy-edge pair-rating aggregation.
+
+Hot spot of the device coarsener (``core/dcoarsen``): after the
+per-round candidate pairs are lexicographically sorted, duplicate pairs
+(the same (u, v) rated by several incident edges) occupy a contiguous
+run and carry a *sorted* segment id.  Their ratings
+
+    r(u, v) = sum_e w_e / (|e| - 1)
+
+must be segment-summed into one slot per distinct pair — a scatter over
+up to ``max_stride * P_pad`` candidates every round.
+
+The kernel tiles exactly like ``gain_stream_pallas``: the output
+segment tile stays resident in VMEM across the whole candidate sweep
+(grid axis 1, sequential on TPU, accumulates race-free with ``+=``)
+while (value, segment-id) tiles stream through.  Each tile's partial
+sums are computed as a matmul against the [block_c, block_s] one-hot
+membership matrix — the MXU does the scatter, no per-element stores.
+Because the segment ids are sorted, at most
+``ceil(block_c / block_s) + 1`` candidate tiles overlap any output
+tile; every other (i, t) pair short-circuits through ``pl.when``.
+
+The grid itself is still dense over (segment tiles x candidate tiles)
+— quadratic in the candidate count, which is fine exactly where the
+whole-table gain kernel is fine: the coarse/mid rounds.  The
+``kernels.ops.rating_path`` dispatcher bounds it at
+``common.RATING_KERNEL_MAX_C`` candidates and routes the fine rounds
+to the linear XLA segment-sum.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import pad_rows as _pad_rows, rating_blocks as _rating_blocks
+
+
+def _rating_scatter_kernel(seg_ref, val_ref, out_ref, *, block_s: int):
+    i = pl.program_id(0)                       # output segment tile
+    t = pl.program_id(1)                       # candidate tile (streamed)
+    seg = seg_ref[...]                         # [bc] int32, sorted, pad -1
+    val = val_ref[...]                         # [bc] f32, pad 0
+    local = seg - i * block_s
+    valid = (seg >= 0) & (local >= 0) & (local < block_s)
+
+    @pl.when(t == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    @pl.when(valid.any())                      # sorted ids: most tiles skip
+    def _accumulate():
+        lanes = jax.lax.broadcasted_iota(jnp.int32,
+                                         (local.shape[0], block_s), 1)
+        onehot = (jnp.where(valid, local, -1)[:, None] == lanes
+                  ).astype(jnp.float32)        # [bc, bs]
+        out_ref[...] += jnp.dot(jnp.where(valid, val, 0.0), onehot,
+                                preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("num_segments", "block_s",
+                                             "block_c", "interpret"))
+def rating_scatter_pallas(vals: jnp.ndarray, segs: jnp.ndarray,
+                          num_segments: int, block_s: int | None = None,
+                          block_c: int | None = None,
+                          interpret: bool = True) -> jnp.ndarray:
+    """Sorted-segment sum: out[s] = sum over candidates with segs == s.
+
+    vals: [C] f32; segs: [C] int32 ascending (invalid/pad entries may
+    carry any id — their vals must be 0; ids < 0 are ignored outright).
+    Returns [num_segments] f32.
+    """
+    if block_s is None or block_c is None:
+        dbs, dbc = _rating_blocks()
+        block_s = block_s or dbs
+        block_c = block_c or dbc
+    segs = _pad_rows(segs, block_c, -1)
+    vals = _pad_rows(vals, block_c, 0.0)
+    c_pad = segs.shape[0]
+    s_pad = ((num_segments + block_s - 1) // block_s) * block_s
+    grid = (s_pad // block_s, c_pad // block_c)  # candidate axis innermost
+    out = pl.pallas_call(
+        functools.partial(_rating_scatter_kernel, block_s=block_s),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_c,), lambda i, t: (t,)),
+            pl.BlockSpec((block_c,), lambda i, t: (t,)),
+        ],
+        out_specs=pl.BlockSpec((block_s,), lambda i, t: (i,)),
+        out_shape=jax.ShapeDtypeStruct((s_pad,), jnp.float32),
+        interpret=interpret,
+    )(segs, vals)
+    return out[:num_segments]

@@ -75,6 +75,32 @@ def gain_gather_batch_ref(incident: jnp.ndarray,
         becomes_internal, was_internal)
 
 
+def rating_segment_sum_ref(vals: jnp.ndarray, segs: jnp.ndarray,
+                           num_segments: int) -> jnp.ndarray:
+    """Ground truth for the pair-rating aggregation: plain segment-sum
+    (ids < 0 dropped)."""
+    ok = segs >= 0
+    return jax.ops.segment_sum(jnp.where(ok, vals, 0.0),
+                               jnp.where(ok, segs, num_segments - 1),
+                               num_segments=num_segments)
+
+
+def rating_scatter_ref(vals: jnp.ndarray, segs: jnp.ndarray,
+                       num_segments: int, block_c: int = 128) -> jnp.ndarray:
+    """Tile-order oracle for ``rating_scatter_pallas``: identical result,
+    accumulated candidate-tile by candidate-tile — pins down the
+    accumulation semantics the kernel's ``out_ref += partial`` follows."""
+    out = jnp.zeros(num_segments, jnp.float32)
+    c = vals.shape[0]
+    for lo in range(0, c, block_c):
+        s = segs[lo:lo + block_c]
+        v = vals[lo:lo + block_c]
+        ok = (s >= 0) & (s < num_segments)
+        out = out + jnp.zeros(num_segments, jnp.float32).at[
+            jnp.where(ok, s, 0)].add(jnp.where(ok, v, 0.0))
+    return out
+
+
 def embedding_bag_ref(table: jnp.ndarray, indices: jnp.ndarray,
                       combiner: str = "sum") -> jnp.ndarray:
     """EmbeddingBag: gather + segment-reduce over the bag dimension.
