@@ -2,19 +2,24 @@
 cut vs the multilevel baseline; the paper's claim is that IMPart's margin
 holds/grows with k.
 
-Also home of two engine benchmarks tracked PR over PR:
+Also home of three engine benchmarks tracked PR over PR:
 
 * ``bench_population`` — batched-vs-looped uncoarsening+refinement at
   alpha=7, k=64 (``BENCH_population.json``), now exercising the fused
   on-device LP attempt loop;
 * ``bench_gain`` — the gain-path k-sweep (k = 64, 256, 1024): the old
   [P, k] segment-sum vs the ``kernels.ops`` dispatcher
-  (``BENCH_gain.json``).
+  (``BENCH_gain.json``);
+* ``bench_mutation`` — the population-batched mutation V-cycle vs the
+  per-member reference loop (``BENCH_mutation.json``): one shared-
+  structure cohort hierarchy either way, batched vs per-member
+  dispatches, bit-identical per-member partitions asserted every run.
 
-``--smoke`` runs both at tiny sizes plus a forced sweep over every gain
-path AND both coarsening engines (``REPRO_COARSEN_PATH=host|device``,
-kernels in interpret mode), so CI fails on kernel/engine-routing
-breakage rather than on perf graphs.
+``--smoke`` runs all three at tiny sizes plus a forced sweep over every
+gain path, both coarsening engines (``REPRO_COARSEN_PATH=host|device``)
+AND both mutation paths (``REPRO_MUTATE_PATH=batch|loop``, kernels in
+interpret mode), so CI fails on kernel/engine-routing breakage rather
+than on perf graphs.
 """
 from __future__ import annotations
 
@@ -285,12 +290,56 @@ def _smoke_coarsen_paths(out=sys.stdout):
     assert 0.7 <= ratio <= 1.3, f"coarsen engines diverged: {cuts}"
 
 
+def _smoke_mutate_paths(out=sys.stdout):
+    """Force BOTH mutation paths through ``mutate_population`` on a tiny
+    instance and require bit-identical per-member partitions and cuts —
+    the cohort V-cycle's acceptance bar, enforced in CI."""
+    import os
+    import numpy as np
+    from repro.core import metrics
+    from repro.core import refine as refine_mod
+    from repro.core.mutate import mutate_population
+
+    hg = titan_like("gsm_switch_like", scale=0.01)
+    k, eps = 8, 0.08
+    rng = np.random.default_rng(0)
+    hga = hg.arrays()
+    base = refine_mod.rebalance(
+        hg.vertex_weights, rng.integers(0, k, hg.n).astype(np.int32),
+        k, eps)
+    base, _ = refine_mod.lp_refine(hga, base, k, eps, max_iters=2)
+    parts = np.stack([np.asarray(base)[: hg.n]] * 3)
+    cuts = [float(metrics.cutsize_jit(
+        hga, refine_mod.pad_part(p, hga.n_pad), k)) for p in parts]
+    results = {}
+    prior = os.environ.get("REPRO_MUTATE_PATH")
+    try:
+        for path in ("loop", "batch"):
+            os.environ["REPRO_MUTATE_PATH"] = path
+            results[path] = mutate_population(hg, parts, cuts, k, eps,
+                                              seed=1)
+            print(f"smoke,mutate_path,{path},"
+                  f"cuts={[round(c) for c in results[path][1]]}", file=out)
+    finally:
+        if prior is None:
+            os.environ.pop("REPRO_MUTATE_PATH", None)
+        else:
+            os.environ["REPRO_MUTATE_PATH"] = prior
+    assert np.array_equal(results["batch"][0], results["loop"][0]), \
+        "mutation paths diverged (partitions)"
+    assert np.array_equal(results["batch"][1], results["loop"][1]), \
+        "mutation paths diverged (cuts)"
+    print("smoke,mutate_path,parity,bit-identical", file=out)
+
+
 def smoke(out=sys.stdout):
     """CI entry: tiny-size routing + engine checks (no JSON artifacts)."""
     _smoke_gain_paths(out=out)
     _smoke_coarsen_paths(out=out)
+    _smoke_mutate_paths(out=out)
     bench_gain(json_path=None, ks=(8, 40), scale=0.02, reps=1, out=out)
     bench_population(quick=True, smoke=True, json_path=None, out=out)
+    bench_mutation(quick=True, smoke=True, json_path=None, out=out)
     print("# smoke OK", file=out)
 
 
@@ -374,6 +423,125 @@ def bench_population(quick: bool = False, out=sys.stdout,
     return record
 
 
+def bench_mutation(quick: bool = False, out=sys.stdout,
+                   json_path: str | None = "BENCH_mutation.json",
+                   smoke: bool = False):
+    """Population-batched mutation V-cycle vs the per-member loop.
+
+    A flagged cohort (identical warm starts, mutation-style per-member
+    reweights w'_e = w_e * (1 + 0.1 * C(e)) from the other members' cut
+    indicators) runs ``vcycle_population`` both ways: ``batch`` — every
+    per-member stage one cohort dispatch — and ``loop`` — the identical
+    pipeline member-at-a-time.  Both build the same shared-structure
+    hierarchy, so per-member partitions must match bit-for-bit (asserted
+    every run; the speedup never compares non-equivalent work).
+
+    A third timed row, ``legacy``, replays the pre-cohort mutation path
+    (one scalar ``vcycle`` per member, each building its OWN per-member
+    hierarchy on its reweighted copy) so the JSON also records the
+    speedup over the true "before" — its cuts come from different
+    hierarchies and are NOT expected to match, so it never enters the
+    parity assertion.
+    """
+    import numpy as np
+    from repro.core import metrics
+    from repro.core import refine as refine_mod
+    from repro.core.vcycle import vcycle, vcycle_population
+
+    design = "gsm_switch_like"
+    if smoke:
+        alpha, k, eps = 3, 16, 0.08
+        hg = titan_like(design, scale=0.01)
+    else:
+        alpha, k, eps = 5, 64, 0.08
+        hg = titan_like(design, scale=0.02)
+    rng = np.random.default_rng(0)
+    hga = hg.arrays()
+    base = refine_mod.rebalance(
+        hg.vertex_weights, rng.integers(0, k, hg.n).astype(np.int32),
+        k, eps)
+    base, _ = refine_mod.lp_refine(hga, base, k, eps, max_iters=4)
+    parts = np.stack([np.asarray(base)[: hg.n]] * alpha)
+    # mutation-style reweights: member j pays for edges the others cut
+    lam = np.asarray(metrics.connectivity_population(
+        hga, refine_mod.pad_parts(parts, hga.n_pad), k))[:, : hg.m]
+    cut_ind = (lam > 1).astype(np.float64)
+    w_pop = np.stack([
+        hg.edge_weights * (1.0 + 0.1 * np.delete(cut_ind, j, 0).sum(0))
+        for j in range(alpha)]).astype(np.float32)
+
+    def legacy():  # the pre-cohort path: one hierarchy per member
+        outs, cuts = [], []
+        for a in range(alpha):
+            rw = hg.with_edge_weights(w_pop[a])
+            p, c = vcycle(rw, parts[a], k, eps, seed=3 * 7919 + a)
+            outs.append(np.asarray(p)[: hg.n])
+            cuts.append(c)
+        return np.stack(outs), np.asarray(cuts)
+
+    reps = 1 if (quick or smoke) else 2
+    results = {}
+    for mode in ("legacy", "loop", "batch"):
+        runner = legacy if mode == "legacy" else (
+            lambda: vcycle_population(hg, parts, w_pop, k, eps, seed=3,
+                                      path=mode))
+        runner()  # warm-up / compile
+        times = []
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            pout, cout = runner()
+            times.append(time.perf_counter() - t0)
+        results[mode] = {"wall_s": min(times), "parts": pout, "cuts": cout}
+
+    looped, batched = results["loop"], results["batch"]
+    parts_equal = bool(
+        np.array_equal(looped["parts"], batched["parts"])
+        and np.array_equal(looped["cuts"], batched["cuts"]))
+    if not parts_equal:
+        raise RuntimeError(
+            "batched mutation diverged from the per-member loop: "
+            f"loop={looped['cuts']} batch={batched['cuts']} — the "
+            "speedup below would compare non-equivalent work")
+    speedup = looped["wall_s"] / batched["wall_s"]
+    speedup_legacy = results["legacy"]["wall_s"] / batched["wall_s"]
+    print("table,design,alpha,k,engine,wall_s,speedup,parts_equal",
+          file=out)
+    for mode, sp in (("legacy", 1.0), ("loop", 1.0), ("batch", speedup)):
+        print(f"mutation,{design},{alpha},{k},{mode},"
+              f"{results[mode]['wall_s']:.2f},{sp:.2f},"
+              f"{parts_equal if mode != 'legacy' else 'n/a'}", file=out)
+
+    if json_path:
+        import jax
+        from repro.kernels import ops
+        record = {
+            "bench": "mutation_vcycle",
+            "design": design, "n": hg.n, "m": hg.m, "pins": hg.num_pins,
+            "alpha_flagged": alpha, "k": k, "eps": eps,
+            "backend": jax.default_backend(),
+            "interpret": ops.interpret_mode(),
+            "legacy_per_member_wall_s": round(results["legacy"]["wall_s"],
+                                              3),
+            "looped_wall_s": round(looped["wall_s"], 3),
+            "batched_wall_s": round(batched["wall_s"], 3),
+            "speedup": round(speedup, 3),
+            "speedup_vs_legacy": round(speedup_legacy, 3),
+            "parts_equal": parts_equal,
+            "per_member_cuts": [float(c) for c in batched["cuts"]],
+            "note": ("legacy = the pre-cohort path, one scalar vcycle + "
+                     "per-member hierarchy per flagged member (its cuts "
+                     "come from different hierarchies and are excluded "
+                     "from the parity assertion); loop/batch share one "
+                     "cohort hierarchy and must match bit-for-bit"),
+        }
+        with open(json_path, "w") as f:
+            json.dump(record, f, indent=2)
+            f.write("\n")
+        print(f"# wrote {json_path} (speedup {speedup:.2f}x, "
+              f"parts_equal={parts_equal})", file=out)
+    return results
+
+
 def run(quick: bool = False, out=sys.stdout):
     hg = titan_like("gsm_switch_like", scale=0.04 if quick else 0.06)
     ks = [4, 10] if quick else [4, 10, 16, 32]
@@ -389,6 +557,7 @@ def run(quick: bool = False, out=sys.stdout):
                   f"{res[m]['wall_s']:.1f}", file=out)
     bench_population(quick=quick, out=out)
     bench_gain(quick=quick, out=out)
+    bench_mutation(quick=quick, out=out)
     return None
 
 

@@ -1,5 +1,5 @@
-"""Roofline table builder: reads reports/dryrun/*.json, emits the
-EXPERIMENTS.md §Roofline markdown table + reports/roofline.csv."""
+"""Roofline table builder: reads reports/dryrun/*.json, emits a
+markdown roofline table + reports/roofline.csv (DESIGN.md §7)."""
 from __future__ import annotations
 
 import csv

@@ -1,0 +1,97 @@
+#!/usr/bin/env python3
+"""Docs consistency check (CI docs job; pure stdlib, no jax needed).
+
+Three invariants:
+
+1. **Links resolve** — every relative markdown link in README.md,
+   DESIGN.md, ROADMAP.md and docs/*.md points at a file that exists
+   (external http(s) links and pure #anchors are skipped).
+2. **§ citations resolve** — every ``DESIGN.md §N`` citation in the
+   source tree (docstrings are the API reference; DESIGN.md is the
+   architecture reference they cite) names a section that actually
+   exists in DESIGN.md, so renumbering sections without auditing the
+   citations fails CI instead of silently pointing readers wrong.
+3. **Doc-file references resolve** — any ``SOMETHING.md`` named in a
+   Python docstring/comment exists in the repo (catches references to
+   docs that were planned but never written, or later renamed).
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+
+DOC_FILES = [ROOT / "README.md", ROOT / "DESIGN.md", ROOT / "ROADMAP.md",
+             *sorted((ROOT / "docs").glob("*.md"))]
+SRC_DIRS = [ROOT / "src", ROOT / "benchmarks", ROOT / "examples",
+            ROOT / "scripts", ROOT / "tests"]
+
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+CITE_RE = re.compile(r"DESIGN\.md\s+§(\d+)")
+SECTION_RE = re.compile(r"^##\s+§(\d+)\b", re.MULTILINE)
+MD_REF_RE = re.compile(r"\b([A-Za-z][A-Za-z0-9_/.-]*\.md)\b")
+
+
+def check_links() -> list:
+    errors = []
+    for doc in DOC_FILES:
+        if not doc.exists():
+            errors.append(f"{doc.relative_to(ROOT)}: file missing")
+            continue
+        for target in LINK_RE.findall(doc.read_text()):
+            if target.startswith(("http://", "https://", "#", "mailto:")):
+                continue
+            path = (doc.parent / target.split("#")[0]).resolve()
+            if not path.exists():
+                errors.append(
+                    f"{doc.relative_to(ROOT)}: broken link -> {target}")
+    return errors
+
+
+def check_design_citations() -> list:
+    design = (ROOT / "DESIGN.md").read_text()
+    sections = {int(s) for s in SECTION_RE.findall(design)}
+    errors = []
+    for src_dir in SRC_DIRS:
+        for py in sorted(src_dir.rglob("*.py")):
+            for num in CITE_RE.findall(py.read_text()):
+                if int(num) not in sections:
+                    errors.append(
+                        f"{py.relative_to(ROOT)}: cites DESIGN.md §{num}, "
+                        f"but DESIGN.md has only §{sorted(sections)}")
+    return errors
+
+
+def check_md_references() -> list:
+    errors = []
+    self_path = Path(__file__).resolve()
+    for src_dir in SRC_DIRS:
+        for py in sorted(src_dir.rglob("*.py")):
+            if py.resolve() == self_path:  # this docstring is all examples
+                continue
+            for name in set(MD_REF_RE.findall(py.read_text())):
+                base = name.split("/")[-1]
+                if not (list(ROOT.glob(f"**/{base}"))):
+                    errors.append(
+                        f"{py.relative_to(ROOT)}: references {name}, "
+                        "which does not exist anywhere in the repo")
+    return errors
+
+
+def main() -> int:
+    errors = check_links() + check_design_citations() + check_md_references()
+    for err in errors:
+        print(f"check_docs: {err}", file=sys.stderr)
+    if errors:
+        print(f"check_docs: {len(errors)} problem(s)", file=sys.stderr)
+        return 1
+    n_docs = sum(1 for d in DOC_FILES if d.exists())
+    print(f"check_docs: OK ({n_docs} doc files, links + §-citations + "
+          "md-references consistent)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -9,14 +9,15 @@ Public API:
 from .hypergraph import (Hypergraph, HypergraphArrays, HierarchyArrays,
                          contract, contract_arrays, project_partition)
 from .coarsen import coarsen, recombination_thresholds, Hierarchy, Level
-from .dcoarsen import build_hierarchy, device_coarsen, coarsen_path
+from .dcoarsen import (build_hierarchy, device_coarsen, coarsen_path,
+                       population_coarsen, PopulationHierarchy)
 from .initial_partition import initial_partition, initial_partition_population
 from .impart import impart_partition, ImpartConfig, ImpartResult
 from .baselines import (multilevel_partition, multilevel_best_of,
                         external_memetic, MultilevelResult)
 from .recombine import recombine, ring_recombination, overlay_clustering
-from .mutate import mutate_population, similarity_sets
-from .vcycle import vcycle
+from .mutate import mutate_population, mutate_path, similarity_sets
+from .vcycle import vcycle, vcycle_population
 from .population import make_population_step, population_step_fn
 from . import metrics, refine, ilp
 
@@ -25,10 +26,12 @@ __all__ = [
     "contract_arrays", "project_partition",
     "coarsen", "recombination_thresholds", "Hierarchy", "Level",
     "build_hierarchy", "device_coarsen", "coarsen_path",
+    "population_coarsen", "PopulationHierarchy",
     "initial_partition", "initial_partition_population",
     "impart_partition", "ImpartConfig", "ImpartResult",
     "multilevel_partition", "multilevel_best_of", "external_memetic",
     "MultilevelResult", "recombine", "ring_recombination",
-    "overlay_clustering", "mutate_population", "similarity_sets", "vcycle",
+    "overlay_clustering", "mutate_population", "mutate_path",
+    "similarity_sets", "vcycle", "vcycle_population",
     "make_population_step", "population_step_fn", "metrics", "refine", "ilp",
 ]

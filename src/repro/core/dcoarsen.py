@@ -30,9 +30,21 @@ resulting hierarchies knowing only tie-breaking differs.
 ``REPRO_COARSEN_PATH=device|host`` forces an engine; ``auto`` (unset)
 picks the device engine on compiled backends and keeps the numpy
 reference path on CPU.  ``build_hierarchy`` is the single entry point —
-``impart_partition``, ``vcycle`` (and through it mutation and
-recombination) route through it and consume either hierarchy via the
-shared protocol.
+``impart_partition``, ``vcycle`` (and through it recombination) route
+through it and consume either hierarchy via the shared protocol.
+
+The mutation cohort takes a third road (DESIGN.md §10):
+``population_coarsen`` builds ONE shared-structure hierarchy for all
+flagged members at once — candidate pairs restricted to vertices that
+are same-block in EVERY member (so every member's partition projects
+cut-exactly through every level), per-member heavy-edge ratings
+aggregated in one batched dispatch (``ops.rating_segment_sum_batch``),
+one consensus matching from the summed member ratings, one contraction
+that pushes every member's edge-weight row through the same edge map.
+Structure leaves are broadcast; only edge weights and partitions carry
+the alpha axis.  The round schedule is the same ``coarsen.round_schedule``
+— it depends only on vertex weights and structure, which the cohort
+shares by construction — so one jitted round serves all members.
 """
 from __future__ import annotations
 
@@ -95,6 +107,35 @@ def build_hierarchy(hg: Hypergraph, k: int, *, seed: int = 0,
 # --------------------------------------------------------------------------
 # the jitted round: rate -> match -> contract
 # --------------------------------------------------------------------------
+def _stride_candidates(hga: HypergraphArrays, *, max_stride: int,
+                       max_edge_size: int):
+    """Stride-shifted candidate pairs over the edge-contiguous pin array,
+    shared by the scalar and population rating paths (one source for the
+    coverage/sampling policy, so the engines cannot desynchronise).
+
+    Returns ``(u, v, valid, pe_cat)``, each [C = max_stride * p_pad]:
+    the raw endpoints, the STRUCTURE-only validity mask (same edge,
+    rateable edge size, distinct endpoints — callers AND in their
+    partition restriction), and the edge id of every candidate slot.
+    """
+    m_pad = hga.m_pad
+    ghost_v = jnp.int32(hga.n_pad - 1)
+    pv, pe = hga.pin_vertex, hga.pin_edge
+    sizes = hga.edge_sizes
+    ok_edge = (sizes > 1) & (sizes <= max_edge_size)
+    us, vs, valids = [], [], []
+    for d in range(1, max_stride + 1):
+        u = pv
+        v = jnp.concatenate([pv[d:], jnp.full(d, ghost_v, jnp.int32)])
+        e2 = jnp.concatenate([pe[d:],
+                              jnp.full(d, m_pad - 1, jnp.int32)])
+        us.append(u)
+        vs.append(v)
+        valids.append((pe == e2) & ok_edge[pe] & (u != v))
+    return (jnp.concatenate(us), jnp.concatenate(vs),
+            jnp.concatenate(valids), jnp.tile(pe, max_stride))
+
+
 def _pair_ratings(hga: HypergraphArrays, part, *, max_stride: int,
                   max_edge_size: int):
     """Aggregated, weight-normalised heavy-edge pair ratings.
@@ -106,29 +147,18 @@ def _pair_ratings(hga: HypergraphArrays, part, *, max_stride: int,
     (partition-aware / V-cycle coarsening).
     """
     from repro.kernels import ops
-    n_pad, m_pad, p_pad = hga.n_pad, hga.m_pad, hga.p_pad
+    n_pad = hga.n_pad
     ghost_v = jnp.int32(n_pad - 1)
-    pv, pe = hga.pin_vertex, hga.pin_edge
     sizes = hga.edge_sizes
     unit = jnp.where(sizes > 1,
                      hga.edge_weights / jnp.maximum(sizes - 1, 1), 0.0)
-    ok_edge = (sizes > 1) & (sizes <= max_edge_size)
-
-    los, his, rs = [], [], []
-    for d in range(1, max_stride + 1):
-        u = pv
-        v = jnp.concatenate([pv[d:], jnp.full(d, ghost_v, jnp.int32)])
-        e2 = jnp.concatenate([pe[d:],
-                              jnp.full(d, m_pad - 1, jnp.int32)])
-        valid = (pe == e2) & ok_edge[pe] & (u != v)
-        if part is not None:
-            valid = valid & (part[u] == part[v])
-        los.append(jnp.where(valid, jnp.minimum(u, v), ghost_v))
-        his.append(jnp.where(valid, jnp.maximum(u, v), ghost_v))
-        rs.append(jnp.where(valid, unit[pe], 0.0))
-    lo = jnp.concatenate(los)
-    hi = jnp.concatenate(his)
-    r = jnp.concatenate(rs)
+    u, v, valid, pe_cat = _stride_candidates(
+        hga, max_stride=max_stride, max_edge_size=max_edge_size)
+    if part is not None:
+        valid = valid & (part[u] == part[v])
+    lo = jnp.where(valid, jnp.minimum(u, v), ghost_v)
+    hi = jnp.where(valid, jnp.maximum(u, v), ghost_v)
+    r = jnp.where(valid, unit[pe_cat], 0.0)
 
     # make duplicate pairs adjacent (ghosts sort last: lo == hi == ghost);
     # one variadic sort carrying the ratings — aggregation is
@@ -343,3 +373,216 @@ def device_coarsen(hg: Hypergraph, k: int, *,
                                   m=m_new, p=p_new, part=new_part))
         cur, cur_part, n_cur = coarse, new_part, n_new
     return HierarchyArrays(levels=levels)
+
+
+# --------------------------------------------------------------------------
+# population-batched coarsening for the mutation cohort (DESIGN.md §10):
+# one shared structure, alpha edge-weight rows, alpha partitions
+# --------------------------------------------------------------------------
+def _pair_ratings_population(hga: HypergraphArrays, parts: jnp.ndarray,
+                             ew_pop: jnp.ndarray, *, max_stride: int,
+                             max_edge_size: int, batch: bool):
+    """Per-member aggregated, weight-normalised heavy-edge ratings over
+    ONE shared candidate structure.
+
+    ``parts`` [alpha, n_pad] restricts candidates to pairs that are
+    same-block in EVERY member (the intersection of the per-member
+    partition-aware restrictions — the invariant that lets one hierarchy
+    serve the whole cohort with every member's cut projecting exactly).
+    ``ew_pop`` [alpha, m_pad] are the per-member reweighted edge weights.
+    Returns ``(lo, hi, rating_pop)`` with ``rating_pop`` [alpha, C].
+
+    ``batch`` picks how the per-member segment sums dispatch: one
+    batched call (``rating_segment_sum_batch``) or a per-member loop of
+    scalar calls — the ``REPRO_MUTATE_PATH=loop`` reference.  Both give
+    bit-identical rows (the sort permutation is stable and shared, and
+    each aggregation path adds in the same order per member).
+    """
+    from repro.kernels import ops
+    n_pad = hga.n_pad
+    alpha = parts.shape[0]
+    ghost_v = jnp.int32(n_pad - 1)
+    sizes = hga.edge_sizes
+    unit_pop = jnp.where(sizes[None, :] > 1,
+                         ew_pop / jnp.maximum(sizes - 1, 1)[None, :], 0.0)
+    u, v, valid, pe_cat = _stride_candidates(
+        hga, max_stride=max_stride, max_edge_size=max_edge_size)
+    valid = valid & (parts[:, u] == parts[:, v]).all(axis=0)
+    lo = jnp.where(valid, jnp.minimum(u, v), ghost_v)
+    hi = jnp.where(valid, jnp.maximum(u, v), ghost_v)
+    r_pop = jnp.where(valid[None, :], unit_pop[:, pe_cat], 0.0)  # [alpha, C]
+
+    # make duplicate pairs adjacent; a STABLE key sort yields one
+    # permutation shared by every member's value row (and by both the
+    # batch and loop dispatch paths), so per-member aggregation order —
+    # hence every f32 sum — is identical across paths
+    c = lo.shape[0]
+    lo, hi, perm = jax.lax.sort(
+        (lo, hi, jnp.arange(c, dtype=jnp.int32)), num_keys=2,
+        is_stable=True)
+    r_pop = r_pop[:, perm]
+    newg = jnp.ones(c, bool).at[1:].set(
+        (lo[1:] != lo[:-1]) | (hi[1:] != hi[:-1]))
+    seg = (jnp.cumsum(newg.astype(jnp.int32)) - 1).astype(jnp.int32)
+    if batch:
+        agg_pop = ops.rating_segment_sum_batch(r_pop, seg, c)
+    else:  # the per-member reference loop (alpha scalar dispatches)
+        agg_pop = jnp.stack([ops.rating_segment_sum(r_pop[a], seg, c)
+                             for a in range(alpha)])
+
+    lo_g = jnp.full(c, ghost_v, jnp.int32).at[seg].min(lo)
+    hi_g = jnp.full(c, ghost_v, jnp.int32).at[seg].min(hi)
+    cw = hga.vertex_weights
+    agg_pop = agg_pop / jnp.maximum(cw[lo_g] * cw[hi_g], 1e-12)[None, :]
+    return lo_g, hi_g, agg_pop
+
+
+def _coarsen_round_population_impl(hga: HypergraphArrays, parts, ew_pop,
+                                   key, c_max, max_stride: int,
+                                   max_edge_size: int, batch: bool):
+    """One cohort coarsening round: batched rating, consensus matching
+    (summed member ratings — degenerates to the member's own rating for
+    a cohort of one), shared contraction carrying every weight row."""
+    lo, hi, rating_pop = _pair_ratings_population(
+        hga, parts, ew_pop, max_stride=max_stride,
+        max_edge_size=max_edge_size, batch=batch)
+    cid, n_new = _mutual_match_dev(hga, lo, hi, rating_pop.sum(axis=0),
+                                   key, c_max)
+    coarse, p_new, ew_new = contract_arrays(hga, cid, n_new, ew_pop=ew_pop)
+    # block of each cluster = block of any member (same by construction:
+    # the candidate restriction required agreement in every member)
+    new_parts = jax.vmap(
+        lambda p: jnp.zeros(hga.n_pad, jnp.int32).at[cid].max(p))(parts)
+    return coarse, cid, new_parts, ew_new, p_new
+
+
+_coarsen_round_population = jax.jit(
+    _coarsen_round_population_impl,
+    static_argnames=("max_stride", "max_edge_size", "batch"))
+
+
+@partial(jax.jit, static_argnames=("n_pad2", "m_pad2", "p_pad2"))
+def _rebucket_pop_jit(hga: HypergraphArrays, cid, parts, ew_pop,
+                      n_pad2: int, m_pad2: int, p_pad2: int):
+    """Population analogue of ``_rebucket_jit``: slice the shared
+    structure AND the alpha-carried leaves down to the level's own pow2
+    bucket."""
+    out, cid, _ = _rebucket_jit(hga, cid, None, n_pad2=n_pad2,
+                                m_pad2=m_pad2, p_pad2=p_pad2)
+    return out, cid, parts[:, :n_pad2], ew_pop[:, :m_pad2]
+
+
+@dataclasses.dataclass
+class PopulationLevel:
+    """One shared-structure cohort level: broadcast structure (``hga``,
+    ``cluster_id``) plus the alpha-carried leaves (``ew_pop`` per-member
+    edge weights, ``parts`` per-member projected partitions)."""
+    hga: HypergraphArrays
+    cluster_id: Optional[jnp.ndarray]
+    ew_pop: jnp.ndarray            # [alpha, m_pad]
+    parts: jnp.ndarray             # [alpha, n_pad]
+    n: int
+    m: int
+    p: int
+
+
+@dataclasses.dataclass
+class PopulationHierarchy:
+    """Shared-structure multilevel hierarchy for the mutation cohort.
+
+    The narrow population analogue of the hierarchy protocol: one
+    structure per level (broadcast), per-member edge weights and
+    partitions stacked on a leading alpha axis."""
+    levels: List["PopulationLevel"]
+
+    @property
+    def num_levels(self) -> int:
+        return len(self.levels)
+
+    def sizes(self) -> List[int]:
+        return [lv.n for lv in self.levels]
+
+    def level_n(self, li: int) -> int:
+        return self.levels[li].n
+
+    def level_arrays(self, li: int) -> HypergraphArrays:
+        return self.levels[li].hga
+
+    def level_ew(self, li: int) -> jnp.ndarray:
+        return self.levels[li].ew_pop
+
+    def level_parts(self, li: int) -> jnp.ndarray:
+        return self.levels[li].parts
+
+    def project_pop(self, parts, li: int) -> jnp.ndarray:
+        """Project the cohort at level ``li`` onto level ``li - 1`` on
+        device (same gather ``HierarchyArrays.project_pop`` does)."""
+        lv = self.levels[li]
+        parts = jnp.asarray(parts, jnp.int32)
+        n_pad = lv.hga.n_pad
+        if parts.shape[1] < n_pad:
+            pad = jnp.zeros((parts.shape[0], n_pad - parts.shape[1]),
+                            jnp.int32)
+            parts = jnp.concatenate([parts, pad], axis=1)
+        return jnp.take(parts, lv.cluster_id, axis=1)
+
+
+def population_coarsen(hg: Hypergraph, parts, ew_pop, k: int, *,
+                       contraction_limit_factor: int = 64,
+                       max_rounds: int = 64, min_shrink: float = 0.02,
+                       seed: int = 0, max_cluster_frac: float = 1.0,
+                       batch: bool = True) -> PopulationHierarchy:
+    """Build ONE partition-aware hierarchy for the whole mutation cohort.
+
+    ``parts`` [alpha, n] warm-start partitions, ``ew_pop`` [alpha, m]
+    per-member reweighted edge weights — both over ``hg``'s structure.
+    The schedule is the shared ``coarsen.round_schedule`` (it reads only
+    vertex weights and sizes, identical for every member), the matching
+    is one consensus matching per round, and every level's structure is
+    born once and broadcast: only the weight/partition leaves carry the
+    alpha axis.  ``batch=False`` dispatches the per-member rating
+    aggregation as a loop of scalar calls (the ``REPRO_MUTATE_PATH=loop``
+    reference) — the resulting hierarchy is bit-identical either way.
+    """
+    sched = round_schedule(hg, k,
+                           contraction_limit_factor=contraction_limit_factor,
+                           max_rounds=max_rounds, min_shrink=min_shrink,
+                           max_cluster_frac=max_cluster_frac)
+    hga = hg.arrays()
+    alpha = len(parts)
+    pp = np.zeros((alpha, hga.n_pad), np.int32)
+    pp[:, : hg.n] = np.asarray(parts, np.int32)[:, : hg.n]
+    parts = jnp.asarray(pp)
+    ww = np.zeros((alpha, hga.m_pad), np.float32)
+    ww[:, : hg.m] = np.asarray(ew_pop, np.float32)[:, : hg.m]
+    ew_pop = jnp.asarray(ww)
+
+    levels = [PopulationLevel(hga=hga, cluster_id=None, ew_pop=ew_pop,
+                              parts=parts, n=hg.n, m=hg.m, p=hg.num_pins)]
+    key = jax.random.PRNGKey(seed)
+    cur, cur_parts, cur_ew, n_cur = hga, parts, ew_pop, hg.n
+    for _ in range(sched.max_rounds):
+        if sched.done(n_cur):
+            break
+        key, sub = jax.random.split(key)
+        coarse, cid, new_parts, new_ew, p_new = _coarsen_round_population(
+            cur, cur_parts, cur_ew, sub, jnp.float32(sched.c_max),
+            max_stride=MAX_STRIDE, max_edge_size=MAX_EDGE_SIZE, batch=batch)
+        n_new = int(coarse.n)
+        if sched.stalled(n_cur, n_new):
+            break
+        m_new, p_new = int(coarse.m), int(p_new)
+        n_pad2 = _round_pow2(n_new + 1)
+        m_pad2 = _round_pow2(m_new + 1)
+        p_pad2 = _round_pow2(p_new + 1)
+        if (n_pad2, m_pad2, p_pad2) != (coarse.n_pad, coarse.m_pad,
+                                        coarse.p_pad):
+            coarse, cid, new_parts, new_ew = _rebucket_pop_jit(
+                coarse, cid, new_parts, new_ew,
+                n_pad2=n_pad2, m_pad2=m_pad2, p_pad2=p_pad2)
+        coarse = _attach_incident(coarse, m_new, p_new)
+        levels.append(PopulationLevel(hga=coarse, cluster_id=cid,
+                                      ew_pop=new_ew, parts=new_parts,
+                                      n=n_new, m=m_new, p=p_new))
+        cur, cur_parts, cur_ew, n_cur = coarse, new_parts, new_ew, n_new
+    return PopulationHierarchy(levels=levels)

@@ -438,7 +438,7 @@ def _compact_ghosts(live: jnp.ndarray, arrays, fills):
 
 
 def contract_arrays(hga: HypergraphArrays, cid: jnp.ndarray,
-                    n_new: jnp.ndarray):
+                    n_new: jnp.ndarray, ew_pop: jnp.ndarray | None = None):
     """Contract a padded device hypergraph by cluster assignment ``cid``.
 
     ``cid`` maps every fine vertex slot [n_pad] onto dense coarse ids
@@ -453,6 +453,13 @@ def contract_arrays(hga: HypergraphArrays, cid: jnp.ndarray,
 
     Returns ``(coarse_arrays, p_new)`` where ``p_new`` is the live pin
     count (for host-side re-bucketing).
+
+    ``ew_pop`` ([alpha, m_pad], optional) is a stack of per-member edge
+    weights sharing the structure (the mutation cohort, DESIGN.md §10):
+    the merge/drop/renumber decisions are structural, so every row is
+    pushed through the SAME edge map the structural weights take, and a
+    third return value ``ew_pop_new`` [alpha, m_pad] carries the
+    contracted member weights.
     """
     n_pad, m_pad, p_pad = hga.n_pad, hga.m_pad, hga.p_pad
     ghost_v = jnp.int32(n_pad - 1)
@@ -549,7 +556,20 @@ def contract_arrays(hga: HypergraphArrays, cid: jnp.ndarray,
         vertex_weights=new_vw, edge_weights=new_ew, edge_sizes=new_es,
         n=n_new, m=m_new, incident=None,
     )
-    return coarse, p_new
+    if ew_pop is None:
+        return coarse, p_new
+
+    # per-member weights ride the structural edge map: same parallel-edge
+    # groups (grp/rep), same survivors (keep_edge), same dense renumber
+    def _contract_row(w_row):
+        gw_r = jnp.zeros(m_pad, jnp.float32).at[grp].add(
+            jnp.where(alive_s, w_row[eo], 0.0))
+        merged_r = jnp.where(keep_edge, gw_r[grp_of], 0.0)
+        return jnp.zeros(m_pad, jnp.float32).at[tgt].add(
+            jnp.where(keep_edge, merged_r, 0.0))
+
+    ew_pop_new = jax.vmap(_contract_row)(ew_pop)
+    return coarse, p_new, ew_pop_new
 
 
 # --------------------------------------------------------------------------

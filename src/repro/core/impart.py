@@ -10,7 +10,10 @@ the device-resident coarsening engine, ``REPRO_COARSEN_PATH``); the
 driver consumes it through the shared hierarchy protocol, so with the
 device engine coarsening, projection and refinement all stay on device
 — the host only touches the recombination/mutation levels (irregular
-overlay work) through ``level_host``.
+overlay work) through ``level_host``.  Mutation's re-partitions run as
+one population V-cycle over the flagged cohort (shared hierarchy
+structure, per-member edge-weight rows — DESIGN.md §10), routed by
+``cfg.mutation_path`` / ``REPRO_MUTATE_PATH``.
 """
 from __future__ import annotations
 
@@ -47,6 +50,21 @@ class ImpartConfig:
     time_budget_s: Optional[float] = None  # equal-time comparisons
     mutation_enabled: bool = True
     recombination_enabled: bool = True
+    # cohort dispatch for mutation's population V-cycle: "batch"/"loop";
+    # None defers to REPRO_MUTATE_PATH (auto = batch)
+    mutation_path: Optional[str] = None
+
+    def __post_init__(self):
+        # fail at construction, not minutes in at the first (or never-
+        # firing) mutation event
+        if self.mutation_path is not None:
+            from .mutate import MUTATE_PATHS
+            self.mutation_path = self.mutation_path.strip().lower()
+            if self.mutation_path not in MUTATE_PATHS:
+                raise ValueError(
+                    f"unknown mutation_path {self.mutation_path!r}; "
+                    f"expected one of {MUTATE_PATHS} (or None for "
+                    "REPRO_MUTATE_PATH routing)")
 
 
 @dataclasses.dataclass
@@ -108,7 +126,8 @@ def impart_partition(hg: Hypergraph, cfg: ImpartConfig) -> ImpartResult:
                 parts, cuts = mutate_population(
                     lv_host, parts, cuts, k, eps,
                     threshold=cfg.similarity_threshold,
-                    mu=cfg.mutation_mu, seed=cfg.seed * 17 + next_thr)
+                    mu=cfg.mutation_mu, seed=cfg.seed * 17 + next_thr,
+                    path=cfg.mutation_path)
                 trace.append((n_li, list(cuts), f"mutate@{next_thr}"))
             next_thr += 1
         if cfg.time_budget_s and time.perf_counter() - t0 > cfg.time_budget_s:

@@ -8,12 +8,21 @@ affect cut terms.
 """
 from __future__ import annotations
 
+import dataclasses
 from functools import partial
 
 import jax
 import jax.numpy as jnp
 
 from .hypergraph import HypergraphArrays
+
+
+def member_arrays(hga: HypergraphArrays, ew_row: jnp.ndarray
+                  ) -> HypergraphArrays:
+    """One mutation-cohort member's view of a shared-structure hypergraph
+    (DESIGN.md §10): every structural leaf broadcast, only the
+    edge-weight leaf swapped for the member's row."""
+    return dataclasses.replace(hga, edge_weights=ew_row)
 
 
 def block_weights(hga: HypergraphArrays, part: jnp.ndarray, k: int) -> jnp.ndarray:
@@ -216,8 +225,24 @@ cutsize_population = jax.jit(
     _over_parts(cutsize), static_argnums=2)             # [alpha]
 
 
+def _cutsize_population_weighted_impl(hga: HypergraphArrays,
+                                      parts: jnp.ndarray,
+                                      ew_pop: jnp.ndarray, k: int
+                                      ) -> jnp.ndarray:
+    return jax.vmap(
+        lambda p, ew: cutsize(member_arrays(hga, ew), p, k))(parts, ew_pop)
+
+
+#: [alpha] cuts where each member is measured with ITS OWN edge-weight
+#: row ``ew_pop[alpha, m_pad]`` over the shared structure — the mutation
+#: cohort's objective (each flagged member optimises its own reweight).
+cutsize_population_weighted = jax.jit(
+    _cutsize_population_weighted_impl, static_argnums=3)
+
+
 def _gain_matrix_population_impl(hga: HypergraphArrays, parts: jnp.ndarray,
-                                 k: int, assemble: str = "auto"
+                                 k: int, assemble: str = "auto",
+                                 ew_pop: jnp.ndarray | None = None
                                  ) -> jnp.ndarray:
     """Population gain matrices [alpha, n_pad, k] in one dispatch.
 
@@ -225,15 +250,29 @@ def _gain_matrix_population_impl(hga: HypergraphArrays, parts: jnp.ndarray,
     kernel paths call the explicitly alpha-gridded batch kernels instead
     of vmapping a ``pallas_call`` (same tile program per member, so each
     member still matches its single-member launch bit-for-bit).
+
+    ``ew_pop`` [alpha, m_pad] (optional) gives every member its own
+    edge-weight row over the shared structure (mutation cohort): weights
+    only enter through the per-edge gain terms, so the kernel paths keep
+    the one shared incidence layout and simply stream per-member tables.
     """
     path = _resolve_gain_path(hga, k, assemble)
     if path in ("segsum", "compact") or hga.incident is None:
-        return _over_parts(
-            lambda h, p, kk: gain_matrix(h, p, kk, assemble=path))(
-                hga, parts, k)
+        if ew_pop is None:
+            return _over_parts(
+                lambda h, p, kk: gain_matrix(h, p, kk, assemble=path))(
+                    hga, parts, k)
+        return jax.vmap(
+            lambda p, ew: gain_matrix(member_arrays(hga, ew), p, k,
+                                      assemble=path))(parts, ew_pop)
     from repro.kernels import ops
     phi = _over_parts(pins_in_block)(hga, parts, k)     # [alpha, m_pad, k]
-    bi, wi = jax.vmap(_edge_gain_terms, in_axes=(None, 0))(hga, phi)
+    if ew_pop is None:
+        bi, wi = jax.vmap(_edge_gain_terms, in_axes=(None, 0))(hga, phi)
+    else:
+        bi, wi = jax.vmap(
+            lambda ew, ph: _edge_gain_terms(member_arrays(hga, ew), ph))(
+                ew_pop, phi)
     g = ops.gain_assemble_batch(hga.incident, bi, wi, path)
     return jax.vmap(
         lambda gg, p: gg.at[jnp.arange(hga.n_pad), p].set(0.0))(g, parts)

@@ -1,4 +1,4 @@
-"""Mutation / diversity enhancement (paper Sec. 3.2).
+"""Mutation / diversity enhancement (paper Sec. 3.2; DESIGN.md §10).
 
 After a recombination round: sort offspring by cut (ascending); for each
 offspring S_j, M(S_j) = { better offspring S_i : d_e(S_i, S_j) < t }.
@@ -12,23 +12,46 @@ structures.  The re-partition is an in-framework V-cycle (the paper calls
 the base partitioner here; staying inside the single multilevel process is
 exactly IMPart's point).
 
-Each mutated member's V-cycle builds its own partition-aware hierarchy
-of the reweighted hypergraph.  Under ``REPRO_COARSEN_PATH=device`` that
-hierarchy is built by the device coarsening engine, and because
-``Hypergraph.with_edge_weights`` donates the base structure's device
-arrays (only the edge-weight leaf is replaced), the per-member reweights
-ship no pins to the device at all.
+All flagged members share ONE hypergraph structure and differ only in
+their edge-weight leaf, so the whole cohort mutates in one population
+V-cycle (``vcycle.vcycle_population``): one shared partition-aware
+hierarchy (structure broadcast, weights and partitions on a leading
+alpha axis), per-round batched rating/matching/contraction and batched
+refinement — the last per-member loop in the engine, retired.
+
+``REPRO_MUTATE_PATH=batch|loop`` routes the cohort: ``batch`` (the
+``auto`` default on every backend — the pipeline is plain jitted XLA
+plus the same kernels the scalar path uses) dispatches each per-member
+stage once for the whole cohort; ``loop`` runs the identical pipeline
+member-at-a-time and is the reference the batched path must reproduce
+bit-for-bit (asserted by ``tests/test_mutation_batch.py`` and the
+``largek --smoke`` CI step).
 """
 from __future__ import annotations
 
-from typing import List, Tuple
+import os
+from typing import List, Optional, Tuple
 
 import numpy as np
 
 from .hypergraph import Hypergraph
 from . import metrics
 from . import refine as refine_mod
-from .vcycle import vcycle
+from .vcycle import vcycle_population
+
+MUTATE_PATHS = ("batch", "loop")
+
+
+def mutate_path() -> str:
+    """Cohort dispatch selection: ``REPRO_MUTATE_PATH=batch|loop`` forces
+    one; ``auto`` (unset) batches everywhere — the population V-cycle is
+    ordinary jitted XLA + the dispatcher-routed kernels, so there is no
+    backend where the loop is the better production path (it exists as
+    the bit-identical parity/benchmark reference)."""
+    env = os.environ.get("REPRO_MUTATE_PATH", "auto").strip().lower()
+    if env in MUTATE_PATHS:
+        return env
+    return "batch"
 
 
 def similarity_sets(hga, parts, cuts, k: int,
@@ -56,16 +79,18 @@ def similarity_sets(hga, parts, cuts, k: int,
 
 def mutate_population(hg: Hypergraph, parts, cuts, k: int, eps: float,
                       threshold: float = 20.0, mu: float = 0.1,
-                      seed: int = 0) -> Tuple[np.ndarray, np.ndarray]:
+                      seed: int = 0, path: Optional[str] = None
+                      ) -> Tuple[np.ndarray, np.ndarray]:
     """Apply the mutation operator to every offspring with a non-empty
     similarity set.  Returns the updated population (stacked).
 
     The per-member cut indicators C(e) come from one batched connectivity
-    dispatch over the whole population; the V-cycle re-partition stays
-    per-member because each runs on a DIFFERENTLY reweighted hypergraph
-    (its own partition-aware hierarchy — see the ROADMAP item on
-    batching these through a shared-hierarchy approximation, now
-    unblocked by the partition-aware device coarsener).
+    dispatch over the whole population; the V-cycle re-partitions run as
+    ONE population V-cycle over the flagged cohort — the members share
+    ``hg``'s structure and differ only in their reweighted edge-weight
+    rows, so the hierarchy is built once and every refinement dispatch
+    covers the whole cohort (``path``/``REPRO_MUTATE_PATH`` routes the
+    batched engine vs the per-member reference loop).
     """
     hga = hg.arrays()
     alpha = len(parts)
@@ -78,22 +103,23 @@ def mutate_population(hg: Hypergraph, parts, cuts, k: int, eps: float,
         hga, refine_mod.pad_parts(parts, hga.n_pad), k))[:, : hg.m]
     cut_ind = (lam_all > 1).astype(np.float64)
 
-    mutated_js: List[int] = []
-    for j, mset in enumerate(msets):
-        if not mset:
-            continue
-        c_e = cut_ind[np.asarray(mset, np.int64)].sum(axis=0)
-        w_prime = hg.edge_weights * (1.0 + mu * c_e)
-        reweighted = hg.with_edge_weights(w_prime.astype(np.float32))
-        # V-cycle on the reweighted hypergraph, warm from S_j
-        mutated, _ = vcycle(reweighted, new_parts[j], k, eps,
-                            seed=seed * 7919 + j)
-        new_parts[j] = np.asarray(mutated, np.int32)[: hg.n]
-        mutated_js.append(j)
+    mutated_js = [j for j, mset in enumerate(msets) if mset]
+    if not mutated_js:
+        return new_parts, new_cuts
 
-    if mutated_js:  # report true (unweighted) cuts, one batched dispatch
-        true = np.asarray(metrics.cutsize_population(
-            hga, refine_mod.pad_parts(new_parts[mutated_js], hga.n_pad), k),
-            np.float64)
-        new_cuts[mutated_js] = true
+    # per-member reweights over the SHARED structure: [alpha_f, m]
+    w_pop = np.stack([
+        hg.edge_weights * (1.0 + mu * cut_ind[np.asarray(msets[j],
+                                                         np.int64)]
+                           .sum(axis=0))
+        for j in mutated_js]).astype(np.float32)
+    mutated, _ = vcycle_population(hg, new_parts[mutated_js], w_pop, k,
+                                   eps, seed=seed * 7919, path=path)
+    new_parts[mutated_js] = mutated
+
+    # report true (unweighted) cuts, one batched dispatch
+    true = np.asarray(metrics.cutsize_population(
+        hga, refine_mod.pad_parts(new_parts[mutated_js], hga.n_pad), k),
+        np.float64)
+    new_cuts[mutated_js] = true
     return new_parts, new_cuts

@@ -149,13 +149,20 @@ def lp_round(hga: HypergraphArrays, part: jnp.ndarray, k: int,
 
 def _lp_round_population_impl(hga: HypergraphArrays, parts: jnp.ndarray,
                               k: int, cap: jnp.ndarray, fracs: jnp.ndarray,
-                              edge_weight_override: jnp.ndarray | None = None
+                              edge_weight_override: jnp.ndarray | None = None,
+                              edge_weights_pop: jnp.ndarray | None = None
                               ) -> jnp.ndarray:
     """lp_round for all members: gains come from the batched dispatcher
     (one kernel launch for the population), the proposal/acceptance tail
-    is vmapped — per-lane ops identical to the scalar round."""
+    is vmapped — per-lane ops identical to the scalar round.
+
+    ``edge_weights_pop`` [alpha, m_pad] gives each member its OWN edge
+    weights over the shared structure (the mutation cohort, DESIGN.md
+    §10); ``edge_weight_override`` [m_pad] stays the shared-bias variant.
+    """
     h = _with_weights(hga, edge_weight_override)
-    gains = metrics._gain_matrix_population_impl(h, parts, k)
+    gains = metrics._gain_matrix_population_impl(
+        h, parts, k, ew_pop=edge_weights_pop)
     return jax.vmap(
         lambda p, f, g: _lp_round_from_gains(h, p, k, cap, f, g))(
             parts, fracs, gains)
@@ -177,7 +184,8 @@ def lp_round_population(hga: HypergraphArrays, parts: jnp.ndarray, k: int,
 def _lp_attempt_population(hga: HypergraphArrays, parts: jnp.ndarray,
                            cuts: jnp.ndarray, fracs: jnp.ndarray,
                            attempts: jnp.ndarray, k: int, cap: jnp.ndarray,
-                           edge_weight_override: jnp.ndarray | None = None):
+                           edge_weight_override: jnp.ndarray | None = None,
+                           edge_weights_pop: jnp.ndarray | None = None):
     """Device-resident LP attempt loop fused into one ``lax.while_loop``.
 
     Per member (mirroring the scalar ``lp_refine`` inner loop exactly):
@@ -202,8 +210,13 @@ def _lp_attempt_population(hga: HypergraphArrays, parts: jnp.ndarray,
     def body(carry):
         parts, cuts, fracs, improved, t = carry
         cands = _lp_round_population_impl(hga, parts, k, cap, fracs,
-                                          edge_weight_override)
-        cs = jax.vmap(lambda p: metrics.cutsize(hga, p, k))(cands)
+                                          edge_weight_override,
+                                          edge_weights_pop)
+        if edge_weights_pop is None:
+            cs = jax.vmap(lambda p: metrics.cutsize(hga, p, k))(cands)
+        else:  # each member's acceptance cut on its own reweight
+            cs = metrics._cutsize_population_weighted_impl(
+                hga, cands, edge_weights_pop, k)
         take = cs < cuts - 1e-6
         parts = jnp.where(take[:, None], cands, parts)
         cuts = jnp.where(take, cs, cuts)
@@ -249,7 +262,7 @@ def lp_refine(hga: HypergraphArrays, part: np.ndarray, k: int, eps: float,
 
 def lp_refine_population(hga: HypergraphArrays, parts, k: int, eps: float,
                          max_iters: int = 24, patience: int = 3,
-                         edge_weight_override=None
+                         edge_weight_override=None, edge_weights_pop=None
                          ) -> Tuple[np.ndarray, np.ndarray]:
     """Batched ``lp_refine``: ONE device dispatch per round covers the
     whole population, attempts included.
@@ -261,11 +274,22 @@ def lp_refine_population(hga: HypergraphArrays, parts, k: int, eps: float,
     give it — the batched and looped paths agree bit-for-bit on
     integer-weight instances.
     Returns (parts [alpha, n_pad], cuts [alpha]).
+
+    ``edge_weights_pop`` [alpha, m_pad]: per-member edge weights over the
+    shared structure (the mutation cohort, DESIGN.md §10) — each member's
+    gains AND acceptance cuts use its own row, exactly as if it refined
+    its own reweighted hypergraph.
     """
     cap = metrics.balance_cap(hga.total_weight, k, eps)
     parts = pad_parts(parts, hga.n_pad)
     alpha = parts.shape[0]
-    cuts = np.asarray(metrics.cutsize_population(hga, parts, k), np.float64)
+    if edge_weights_pop is not None:
+        edge_weights_pop = jnp.asarray(edge_weights_pop, jnp.float32)
+        cuts = np.asarray(metrics.cutsize_population_weighted(
+            hga, parts, edge_weights_pop, k), np.float64)
+    else:
+        cuts = np.asarray(metrics.cutsize_population(hga, parts, k),
+                          np.float64)
     stall = np.zeros(alpha, np.int32)
     done = np.zeros(alpha, bool)
     for _ in range(max_iters):
@@ -289,11 +313,16 @@ def lp_refine_population(hga: HypergraphArrays, parts, k: int, eps: float,
         remaining = 5
         while remaining > 0 and len(idx):
             sub = parts[jnp.asarray(idx)] if len(idx) < alpha else parts
+            sub_ew = None
+            if edge_weights_pop is not None:
+                sub_ew = (edge_weights_pop[jnp.asarray(idx)]
+                          if len(idx) < alpha else edge_weights_pop)
             new_sub, new_cuts, improved, new_fracs, used = \
                 _lp_attempt_population(
                     hga, sub, jnp.asarray(cuts[idx], jnp.float32),
                     jnp.asarray(fracs[idx]), jnp.int32(remaining), k, cap,
-                    edge_weight_override=edge_weight_override)
+                    edge_weight_override=edge_weight_override,
+                    edge_weights_pop=sub_ew)
             improved = np.asarray(improved)
             if len(idx) < alpha:
                 parts = parts.at[jnp.asarray(idx)].set(new_sub)
@@ -391,12 +420,18 @@ _fm_pass = jax.jit(_fm_pass_impl, static_argnames=("k", "steps"))
 
 @partial(jax.jit, static_argnames=("k", "steps"))
 def _fm_pass_population(hga: HypergraphArrays, parts: jnp.ndarray, k: int,
-                        cap: jnp.ndarray, steps: int
+                        cap: jnp.ndarray, steps: int,
+                        edge_weights_pop: jnp.ndarray | None = None
                         ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """One FM pass for all members: a single [alpha]-batched move scan
-    instead of alpha sequential scans."""
+    instead of alpha sequential scans.  With ``edge_weights_pop`` each
+    member's lane runs on its own edge-weight row (shared structure)."""
+    if edge_weights_pop is None:
+        return jax.vmap(
+            lambda p: _fm_pass_impl(hga, p, k, cap, steps))(parts)
     return jax.vmap(
-        lambda p: _fm_pass_impl(hga, p, k, cap, steps))(parts)
+        lambda p, ew: _fm_pass_impl(metrics.member_arrays(hga, ew), p, k,
+                                    cap, steps))(parts, edge_weights_pop)
 
 
 def fm_refine(hga: HypergraphArrays, part: np.ndarray, k: int, eps: float,
@@ -457,7 +492,8 @@ def _device_put_cached(obj, device):
 
 def fm_refine_population(hga: HypergraphArrays, parts, k: int, eps: float,
                          max_passes: int = 8,
-                         step_budget: int | None = None
+                         step_budget: int | None = None,
+                         edge_weights_pop=None
                          ) -> Tuple[np.ndarray, np.ndarray]:
     """Batched ``fm_refine`` with per-member pass acceptance: a member
     stops improving exactly when the scalar loop would have broken.
@@ -471,7 +507,14 @@ def fm_refine_population(hga: HypergraphArrays, parts, k: int, eps: float,
     cap = metrics.balance_cap(hga.total_weight, k, eps)
     parts = np.array(pad_parts(parts, hga.n_pad))  # writable host copy
     alpha = parts.shape[0]
-    cuts = np.asarray(metrics.cutsize_population(hga, parts, k), np.float64)
+    if edge_weights_pop is not None:
+        edge_weights_pop = np.asarray(edge_weights_pop, np.float32)
+        cuts = np.asarray(metrics.cutsize_population_weighted(
+            hga, jnp.asarray(parts), jnp.asarray(edge_weights_pop), k),
+            np.float64)
+    else:
+        cuts = np.asarray(metrics.cutsize_population(hga, parts, k),
+                          np.float64)
     steps = step_budget or int(min(hga.n_pad, 1024))
     done = np.zeros(alpha, bool)
     devs = _population_shard_devices() if alpha > 1 else None
@@ -483,6 +526,8 @@ def fm_refine_population(hga: HypergraphArrays, parts, k: int, eps: float,
         if len(idx) == 0:
             break
         sub = parts[idx]
+        sub_ew = (edge_weights_pop[idx]
+                  if edge_weights_pop is not None else None)
         if devs and len(idx) > 1:
             ndev = min(len(devs), len(idx))
             bounds = [len(idx) * d // ndev for d in range(ndev + 1)]
@@ -490,14 +535,22 @@ def fm_refine_population(hga: HypergraphArrays, parts, k: int, eps: float,
             for di in range(ndev):  # async dispatch -> concurrent chunks
                 chunk = jax.device_put(
                     jnp.asarray(sub[bounds[di]:bounds[di + 1]]), devs[di])
+                ew_chunk = None
+                if sub_ew is not None:
+                    ew_chunk = jax.device_put(
+                        jnp.asarray(sub_ew[bounds[di]:bounds[di + 1]]),
+                        devs[di])
                 outs.append(_fm_pass_population(
-                    hga_d[di], chunk, k, cap_d[di], steps))
+                    hga_d[di], chunk, k, cap_d[di], steps,
+                    edge_weights_pop=ew_chunk))
             cands = np.concatenate([np.asarray(o[0]) for o in outs])
             cs = np.concatenate(
                 [np.asarray(o[1]) for o in outs]).astype(np.float64)
         else:
-            cands, cs = _fm_pass_population(hga, jnp.asarray(sub), k, cap,
-                                            steps)
+            cands, cs = _fm_pass_population(
+                hga, jnp.asarray(sub), k, cap, steps,
+                edge_weights_pop=None if sub_ew is None
+                else jnp.asarray(sub_ew))
             cands = np.asarray(cands)
             cs = np.asarray(cs, np.float64)
         take = cs < cuts[idx] - 1e-6
@@ -521,14 +574,18 @@ def refine(hga: HypergraphArrays, part: np.ndarray, k: int, eps: float,
 
 
 def refine_population(hga: HypergraphArrays, parts, k: int, eps: float,
-                      fm_node_limit: int = 4096, **kw
+                      fm_node_limit: int = 4096, edge_weights_pop=None, **kw
                       ) -> Tuple[np.ndarray, np.ndarray]:
     """Two-tier refinement for the whole population in batched dispatches
-    (the production path of ``impart_partition`` and ``vcycle``).
+    (the production path of ``impart_partition``, ``vcycle`` and the
+    mutation cohort's population V-cycle).
     Returns (parts [alpha, n_pad], cuts [alpha])."""
-    parts, cuts = lp_refine_population(hga, parts, k, eps, **kw)
+    parts, cuts = lp_refine_population(hga, parts, k, eps,
+                                       edge_weights_pop=edge_weights_pop,
+                                       **kw)
     if int(hga.n) <= fm_node_limit:
-        parts, cuts = fm_refine_population(hga, parts, k, eps)
+        parts, cuts = fm_refine_population(
+            hga, parts, k, eps, edge_weights_pop=edge_weights_pop)
     return parts, cuts
 
 

@@ -6,22 +6,30 @@ Partition-aware coarsening: only same-block vertices merge, so the input
 partition projects exactly (same cut) onto every level; refinement then
 improves it on the way back up.
 
-The hierarchy comes from ``dcoarsen.build_hierarchy`` — the numpy
-reference coarsener or the device-resident engine, selected by
-``REPRO_COARSEN_PATH`` — and the uncoarsening loop below is written
-against the shared hierarchy protocol, so with the device engine the
-whole V-cycle (coarsen included) stays on device except the final
-elitism readback.
+The scalar ``vcycle`` builds its hierarchy via ``dcoarsen.build_hierarchy``
+— the numpy reference coarsener or the device-resident engine, selected
+by ``REPRO_COARSEN_PATH`` — and the uncoarsening loop is written against
+the shared hierarchy protocol, so with the device engine the whole
+V-cycle (coarsen included) stays on device except the final elitism
+readback.
+
+``vcycle_population`` (DESIGN.md §10) is the mutation cohort's V-cycle:
+all flagged members share ONE hierarchy structure (they differ only in
+the edge-weight leaf, which ``dcoarsen.population_coarsen`` carries on a
+leading alpha axis), and the whole cohort coarsens, refines and
+uncoarsens in per-round batched dispatches.  ``path="loop"`` runs the
+identical pipeline member-at-a-time (populations of one) — the
+``REPRO_MUTATE_PATH=loop`` reference, bit-identical per member.
 """
 from __future__ import annotations
 
-from typing import Tuple
+from typing import Optional, Tuple
 
 import numpy as np
 import jax.numpy as jnp
 
 from .hypergraph import Hypergraph
-from .dcoarsen import build_hierarchy
+from .dcoarsen import build_hierarchy, population_coarsen
 from . import refine as refine_mod
 from . import metrics
 
@@ -71,3 +79,84 @@ def _pad_part(part: np.ndarray, n_pad: int) -> np.ndarray:
     out = np.zeros(n_pad, np.int32)
     out[: len(part)] = part
     return out
+
+
+def vcycle_population(hg: Hypergraph, parts, ew_pop, k: int, eps: float,
+                      seed: int = 0, fm_node_limit: int = 4096,
+                      contraction_limit_factor: int = 64,
+                      path: Optional[str] = None
+                      ) -> Tuple[np.ndarray, np.ndarray]:
+    """One V-cycle for the whole mutation cohort (DESIGN.md §10).
+
+    ``parts`` [alpha, n] warm-start partitions; ``ew_pop`` [alpha, m]
+    per-member reweighted edge weights over ``hg``'s shared structure.
+    One shared partition-aware hierarchy is built for the cohort
+    (``dcoarsen.population_coarsen``); on the way back up every level
+    refines all members in batched dispatches, each member optimising
+    its OWN weight row.  Per-member elitism on the member's own
+    (reweighted) objective, exactly like the scalar ``vcycle`` it
+    batches.  Returns ``(parts [alpha, n], cuts [alpha])`` with cuts
+    measured on each member's own weights.
+
+    ``path``: "batch" (default, via ``mutate.mutate_path``) runs every
+    per-member stage as one batched dispatch; "loop" runs the identical
+    pipeline member-at-a-time — the scalar reference whose per-member
+    results the batched path reproduces bit-for-bit.
+    """
+    from .mutate import MUTATE_PATHS, mutate_path
+    if path is None:
+        path = mutate_path()
+    else:
+        path = path.strip().lower()
+        if path not in MUTATE_PATHS:
+            raise ValueError(f"unknown mutation path {path!r}; "
+                             f"expected one of {MUTATE_PATHS}")
+    batch = path == "batch"
+    parts = np.asarray(parts, np.int32)
+    alpha = parts.shape[0]
+    hier = population_coarsen(
+        hg, parts, ew_pop, k, seed=seed, batch=batch,
+        contraction_limit_factor=contraction_limit_factor)
+    num = hier.num_levels
+
+    cur = hier.level_parts(num - 1)
+    for li in range(num - 1, -1, -1):
+        if li < num - 1:
+            cur = hier.project_pop(cur, li + 1)
+        hga = hier.level_arrays(li)
+        ew_li = hier.level_ew(li)
+        if batch:
+            cur, _ = refine_mod.refine_population(
+                hga, cur, k, eps, fm_node_limit=fm_node_limit,
+                edge_weights_pop=ew_li)
+        else:  # per-member reference: populations of one, same dispatches
+            rows = []
+            for a in range(alpha):
+                row, _ = refine_mod.refine_population(
+                    hga, jnp.asarray(cur)[a][None, :], k, eps,
+                    fm_node_limit=fm_node_limit,
+                    edge_weights_pop=ew_li[a][None, :])
+                rows.append(np.asarray(row)[0])
+            cur = jnp.asarray(np.stack(rows))
+
+    # per-member elitism on each member's own (reweighted) objective
+    hga0 = hier.level_arrays(0)
+    ew0 = hier.level_ew(0)
+    out = refine_mod.pad_parts(np.asarray(cur)[:, : hg.n], hga0.n_pad)
+    warm = refine_mod.pad_parts(parts[:, : hg.n], hga0.n_pad)
+    if batch:
+        cut_new = np.asarray(metrics.cutsize_population_weighted(
+            hga0, out, ew0, k), np.float64)
+        cut_old = np.asarray(metrics.cutsize_population_weighted(
+            hga0, warm, ew0, k), np.float64)
+    else:
+        cut_new = np.asarray([float(metrics.cutsize_population_weighted(
+            hga0, out[a][None, :], ew0[a][None, :], k)[0])
+            for a in range(alpha)])
+        cut_old = np.asarray([float(metrics.cutsize_population_weighted(
+            hga0, warm[a][None, :], ew0[a][None, :], k)[0])
+            for a in range(alpha)])
+    take = cut_new <= cut_old + 1e-9
+    final = np.where(take[:, None], np.asarray(out), np.asarray(warm))
+    cuts = np.where(take, cut_new, cut_old)
+    return final[:, : hg.n].astype(np.int32), cuts

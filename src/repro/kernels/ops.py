@@ -59,7 +59,7 @@ from .connectivity import connectivity_pallas, cutsize_pallas
 from .gain import (gain_gather_pallas, gain_gather_batch_pallas,
                    gain_stream_pallas, gain_stream_batch_pallas)
 from .embedding_bag import embedding_bag_pallas
-from .rating import rating_scatter_pallas
+from .rating import rating_scatter_pallas, rating_scatter_batch_pallas
 
 _INTERPRET_CACHE: bool | None = None
 
@@ -176,6 +176,21 @@ def rating_segment_sum(vals: jnp.ndarray, segs: jnp.ndarray,
         return rating_scatter_pallas(vals, segs, num_segments,
                                      interpret=interpret_mode())
     return ref.rating_segment_sum_ref(vals, segs, num_segments)
+
+
+def rating_segment_sum_batch(vals: jnp.ndarray, segs: jnp.ndarray,
+                             num_segments: int) -> jnp.ndarray:
+    """Population-batched rating aggregation for the mutation cohort
+    (DESIGN.md §10): ``vals`` [alpha, C] per-member candidate ratings
+    over one SHARED sorted segment structure ``segs`` [C].  Routed by
+    ``rating_path()`` on the shared candidate count — the batch kernel
+    mirrors the scalar kernel's tile program per lane, the XLA fallback
+    vmaps the scalar segment-sum, so each member's row is bit-equal to
+    its own ``rating_segment_sum`` call on either path."""
+    if rating_path(vals.shape[1]) == "pallas":
+        return rating_scatter_batch_pallas(vals, segs, num_segments,
+                                           interpret=interpret_mode())
+    return ref.rating_segment_sum_batch_ref(vals, segs, num_segments)
 
 
 # --------------------------------------------------------------------------

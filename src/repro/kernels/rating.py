@@ -26,6 +26,15 @@ whole-table gain kernel is fine: the coarse/mid rounds.  The
 ``kernels.ops.rating_path`` dispatcher bounds it at
 ``common.RATING_KERNEL_MAX_C`` candidates and routes the fine rounds
 to the linear XLA segment-sum.
+
+The population-batched variant (``rating_scatter_batch_pallas``,
+DESIGN.md §10) prepends an ``alpha`` grid axis exactly like
+``gain_stream_batch_pallas``: the mutation cohort shares one candidate
+structure (the segment-id tile index map ignores the population index)
+while each flagged member streams its own reweighted rating values —
+one launch aggregates every member's heavy-edge ratings.  Each member's
+lane runs the identical tile program in the identical order, so a
+member's slice is bit-equal to its own single-member launch.
 """
 from __future__ import annotations
 
@@ -93,3 +102,67 @@ def rating_scatter_pallas(vals: jnp.ndarray, segs: jnp.ndarray,
         interpret=interpret,
     )(segs, vals)
     return out[:num_segments]
+
+
+def _rating_scatter_batch_kernel(seg_ref, val_ref, out_ref, *, block_s: int):
+    i = pl.program_id(1)                       # output segment tile
+    t = pl.program_id(2)                       # candidate tile (streamed)
+    seg = seg_ref[...]                         # [bc] int32 (cohort-shared)
+    val = val_ref[...][0]                      # [bc] f32 member values
+    local = seg - i * block_s
+    valid = (seg >= 0) & (local >= 0) & (local < block_s)
+
+    @pl.when(t == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    @pl.when(valid.any())                      # sorted ids: most tiles skip
+    def _accumulate():
+        lanes = jax.lax.broadcasted_iota(jnp.int32,
+                                         (local.shape[0], block_s), 1)
+        onehot = (jnp.where(valid, local, -1)[:, None] == lanes
+                  ).astype(jnp.float32)        # [bc, bs]
+        out_ref[...] += jnp.dot(jnp.where(valid, val, 0.0), onehot,
+                                preferred_element_type=jnp.float32)[None]
+
+
+@functools.partial(jax.jit, static_argnames=("num_segments", "block_s",
+                                             "block_c", "interpret"))
+def rating_scatter_batch_pallas(vals: jnp.ndarray, segs: jnp.ndarray,
+                                num_segments: int, block_s: int | None = None,
+                                block_c: int | None = None,
+                                interpret: bool = True) -> jnp.ndarray:
+    """Population-batched sorted-segment sum for the mutation cohort.
+
+    vals: [alpha, C] f32 per-member candidate ratings; segs: [C] int32
+    ascending, SHARED by all members (one candidate structure, ids < 0
+    dropped; their vals must be 0 in every row).  Returns
+    [alpha, num_segments] f32.  Grid ``(alpha, s_tiles, c_tiles)``: the
+    segment tile index map ignores the population index, so the same
+    candidate tile serves every member while per-member value tiles
+    stream through — and each member reproduces its single-member launch
+    bit-for-bit (same tiles, same accumulation order).
+    """
+    if block_s is None or block_c is None:
+        dbs, dbc = _rating_blocks()
+        block_s = block_s or dbs
+        block_c = block_c or dbc
+    alpha = vals.shape[0]
+    assert segs.shape[0] == vals.shape[1]
+    segs = _pad_rows(segs, block_c, -1)
+    vals = _pad_rows(vals.T, block_c, 0.0).T   # pad the candidate axis
+    c_pad = segs.shape[0]
+    s_pad = ((num_segments + block_s - 1) // block_s) * block_s
+    grid = (alpha, s_pad // block_s, c_pad // block_c)
+    out = pl.pallas_call(
+        functools.partial(_rating_scatter_batch_kernel, block_s=block_s),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_c,), lambda a, i, t: (t,)),      # shared
+            pl.BlockSpec((1, block_c), lambda a, i, t: (a, t)),  # member
+        ],
+        out_specs=pl.BlockSpec((1, block_s), lambda a, i, t: (a, i)),
+        out_shape=jax.ShapeDtypeStruct((alpha, s_pad), jnp.float32),
+        interpret=interpret,
+    )(segs, vals)
+    return out[:, :num_segments]

@@ -85,6 +85,15 @@ def rating_segment_sum_ref(vals: jnp.ndarray, segs: jnp.ndarray,
                                num_segments=num_segments)
 
 
+def rating_segment_sum_batch_ref(vals: jnp.ndarray, segs: jnp.ndarray,
+                                 num_segments: int) -> jnp.ndarray:
+    """Population-batched rating aggregation oracle: vals [alpha, C] per
+    member, segs [C] shared -> [alpha, num_segments] (per-row identical
+    to ``rating_segment_sum_ref``)."""
+    return jax.vmap(lambda v: rating_segment_sum_ref(v, segs,
+                                                     num_segments))(vals)
+
+
 def rating_scatter_ref(vals: jnp.ndarray, segs: jnp.ndarray,
                        num_segments: int, block_c: int = 128) -> jnp.ndarray:
     """Tile-order oracle for ``rating_scatter_pallas``: identical result,

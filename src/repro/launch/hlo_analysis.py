@@ -1,4 +1,4 @@
-"""Static HLO analysis for the roofline (DESIGN.md §7, EXPERIMENTS.md).
+"""Static HLO analysis for the roofline (DESIGN.md §7).
 
 XLA's ``compiled.cost_analysis()`` counts every ``while`` body exactly
 once — a ~100x undercount for scanned-layer models.  This module parses
@@ -130,7 +130,7 @@ class HloModuleStats:
     def _collective_wire(self, rec: dict, comp: str | None = None
                          ) -> Tuple[str, float, float]:
         """TPU-fidelity wire model.  Two XLA:CPU artifacts are corrected
-        (verified against the partitioned HLO, see EXPERIMENTS.md §Perf):
+        (verified against the partitioned HLO text):
 
         * XLA:CPU emits NO reduce-scatter — would-be RS ops appear as
           all-reduce followed only by (dynamic-)slice consumers.  Cost

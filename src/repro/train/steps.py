@@ -368,7 +368,7 @@ def dlrm_train_cell(spec: ArchSpec, shape: ShapeSpec, multi_pod: bool,
     """DLRM train step.  ``sparse_update``: lazy touched-rows-only AdamW
     for the tables (O(B x S x D) instead of the O(R x D) dense sweep).
 
-    MEASURED (EXPERIMENTS.md §Perf, refuted-but-kept): at MLPerf scale
+    MEASURED (dryrun sweeps; refuted-but-kept): at MLPerf scale
     (188M rows / 256 chips = 734k LOCAL rows per device) the dense sweep
     is elementwise-local and cheaper than the sparse path's global
     sort + cross-shard scatter of 1.7M touched rows (hbm 6.8 -> 20 GB,

@@ -1,0 +1,337 @@
+"""The population-batched mutation V-cycle (DESIGN.md §10).
+
+Four layers under test:
+
+* batched rating kernel/dispatcher parity — ``rating_scatter_batch_pallas``
+  rows bit-equal to the scalar kernel and allclose to the vmapped XLA
+  reference, through both ``REPRO_RATING_PATH`` routes;
+* vmapped-round vs per-member parity — a cohort of one reproduces the
+  scalar device round's aggregated pair ratings, and per-member edge
+  weights contract through the shared edge map exactly as the host
+  ``contract`` contracts each member's reweighted hypergraph;
+* shared-structure hierarchy invariants — structure leaves broadcast
+  (one ``HypergraphArrays`` per level), weight/partition leaves carrying
+  the alpha axis, monotone sizes, and EVERY member's partition projecting
+  through every level with its own reweighted cut preserved;
+* routing + end-to-end — ``REPRO_MUTATE_PATH`` selection, and the batch
+  path producing bit-identical per-member partitions and cuts vs the
+  ``loop`` reference, both via ``vcycle_population`` directly and through
+  ``mutate_population``.
+"""
+import os
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import metrics
+from repro.core import refine as refine_mod
+from repro.core.dcoarsen import (MAX_EDGE_SIZE, MAX_STRIDE, _pair_ratings,
+                                 _pair_ratings_population,
+                                 population_coarsen)
+from repro.core.hypergraph import Hypergraph, contract, contract_arrays
+from repro.core.mutate import (MUTATE_PATHS, mutate_path, mutate_population,
+                               similarity_sets)
+from repro.core.vcycle import vcycle_population
+from repro.kernels import ops, ref
+from repro.kernels.rating import (rating_scatter_batch_pallas,
+                                  rating_scatter_pallas)
+
+
+def _random_hg(seed, n=160, m=240, max_size=8):
+    rng = np.random.default_rng(seed)
+    edges = [rng.choice(n, size=rng.integers(2, max_size + 1), replace=False)
+             for _ in range(m)]
+    ew = rng.integers(1, 5, m).astype(np.float32)
+    hg = Hypergraph.from_edge_lists(edges, n=n, edge_weights=ew)
+    hg.vertex_weights[:] = rng.integers(1, 4, n).astype(np.float32)
+    return hg
+
+
+def _cohort(hg, k, eps, alpha, seed=0):
+    """Warm-start partitions + per-member mutation-style reweights."""
+    rng = np.random.default_rng(seed)
+    hga = hg.arrays()
+    base = refine_mod.rebalance(
+        hg.vertex_weights, rng.integers(0, k, hg.n).astype(np.int32),
+        k, eps)
+    base, _ = refine_mod.lp_refine(hga, base, k, eps, max_iters=2)
+    parts = np.stack([np.asarray(base)[: hg.n]] * alpha)
+    w_pop = np.stack([
+        hg.edge_weights * (1.0 + 0.1 * rng.integers(0, 3, hg.m))
+        for _ in range(alpha)]).astype(np.float32)
+    return parts, w_pop
+
+
+# --------------------------------------------------------------------------
+# batched rating kernel + dispatcher
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("alpha,c,s", [(1, 512, 512), (3, 1000, 300),
+                                       (5, 130, 1000)])
+def test_rating_batch_kernel_parity(alpha, c, s):
+    rng = np.random.default_rng(alpha * 1000 + c + s)
+    segs = np.sort(rng.integers(0, s, c)).astype(np.int32)
+    vals = rng.normal(size=(alpha, c)).astype(np.float32)
+    nin = min(c // 8, 7)
+    segs[:nin] = -1                      # invalid candidates are dropped
+    vals[:, :nin] = 0.0
+    got = rating_scatter_batch_pallas(jnp.asarray(vals), jnp.asarray(segs),
+                                      s, interpret=True)
+    want = ref.rating_segment_sum_batch_ref(jnp.asarray(vals),
+                                            jnp.asarray(segs), s)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+    # each member's row is bit-equal to its own single-member launch
+    for a in range(alpha):
+        row = rating_scatter_pallas(jnp.asarray(vals[a]), jnp.asarray(segs),
+                                    s, interpret=True)
+        np.testing.assert_array_equal(np.asarray(got[a]), np.asarray(row))
+
+
+def test_rating_batch_dispatch_routing():
+    rng = np.random.default_rng(1)
+    alpha, c, s = 3, 512, 256
+    segs = jnp.asarray(np.sort(rng.integers(0, s, c)).astype(np.int32))
+    vals = jnp.asarray(rng.normal(size=(alpha, c)).astype(np.float32))
+    want = np.asarray(ref.rating_segment_sum_batch_ref(vals, segs, s))
+    for path in ops.RATING_PATHS:
+        os.environ["REPRO_RATING_PATH"] = path
+        try:
+            got = np.asarray(ops.rating_segment_sum_batch(vals, segs, s))
+            np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+            # per-row bit-equality with the scalar dispatcher on this path
+            for a in range(alpha):
+                np.testing.assert_array_equal(
+                    got[a],
+                    np.asarray(ops.rating_segment_sum(vals[a], segs, s)))
+        finally:
+            os.environ.pop("REPRO_RATING_PATH", None)
+
+
+# --------------------------------------------------------------------------
+# vmapped round vs per-member pipeline
+# --------------------------------------------------------------------------
+def test_pair_ratings_cohort_of_one_matches_scalar():
+    """A cohort of one with the base weights reproduces the scalar device
+    round's aggregated pair ratings under the same part restriction."""
+    hg = _random_hg(0)
+    rng = np.random.default_rng(0)
+    part = rng.integers(0, 3, hg.n).astype(np.int32)
+    hga = hg.arrays()
+    padded = np.zeros(hga.n_pad, np.int32)
+    padded[: hg.n] = part
+    lo, hi, agg = _pair_ratings(hga, jnp.asarray(padded),
+                                max_stride=MAX_STRIDE,
+                                max_edge_size=MAX_EDGE_SIZE)
+    ew = np.zeros((1, hga.m_pad), np.float32)
+    ew[0, : hg.m] = hg.edge_weights
+    plo, phi_, pagg = _pair_ratings_population(
+        hga, jnp.asarray(padded)[None, :], jnp.asarray(ew),
+        max_stride=MAX_STRIDE, max_edge_size=MAX_EDGE_SIZE, batch=True)
+    lo, hi, agg = np.asarray(lo), np.asarray(hi), np.asarray(agg)
+    plo, phi_, pagg = np.asarray(plo), np.asarray(phi_), np.asarray(pagg[0])
+    want = {(int(a), int(b)): float(c)
+            for a, b, c in zip(lo, hi, agg) if a != b and c > 0}
+    got = {(int(a), int(b)): float(c)
+           for a, b, c in zip(plo, phi_, pagg) if a != b and c > 0}
+    assert set(want) == set(got)
+    for key, val in want.items():
+        assert abs(val - got[key]) <= 1e-5 * max(abs(val), 1e-9)
+
+
+def test_pair_ratings_population_restricts_to_cohort_agreement():
+    """A pair is a candidate only if it is same-block in EVERY member."""
+    hg = _random_hg(1)
+    rng = np.random.default_rng(1)
+    hga = hg.arrays()
+    parts = np.zeros((2, hga.n_pad), np.int32)
+    parts[0, : hg.n] = rng.integers(0, 3, hg.n)
+    parts[1, : hg.n] = rng.integers(0, 3, hg.n)
+    ew = np.zeros((2, hga.m_pad), np.float32)
+    ew[:, : hg.m] = hg.edge_weights
+    lo, hi, agg = _pair_ratings_population(
+        hga, jnp.asarray(parts), jnp.asarray(ew),
+        max_stride=MAX_STRIDE, max_edge_size=MAX_EDGE_SIZE, batch=True)
+    lo, hi = np.asarray(lo), np.asarray(hi)
+    sel = (lo != hi) & (np.asarray(agg).sum(0) > 0)
+    assert sel.any()
+    for a in range(2):
+        assert (parts[a][lo[sel]] == parts[a][hi[sel]]).all()
+
+
+@pytest.mark.parametrize("seed,n_new", [(0, 60), (2, 100)])
+def test_contract_arrays_ew_pop_matches_host_per_member(seed, n_new):
+    """Per-member edge weights pushed through the shared edge map equal
+    the host ``contract`` of each member's reweighted hypergraph."""
+    hg = _random_hg(seed, n=180, m=260, max_size=6)
+    rng = np.random.default_rng(seed + 100)
+    cid = rng.integers(0, n_new, hg.n).astype(np.int32)
+    w_pop = np.stack([
+        hg.edge_weights * (1.0 + 0.1 * rng.integers(0, 4, hg.m))
+        for _ in range(3)]).astype(np.float32)
+
+    hga = hg.arrays()
+    cid_dev = np.full(hga.n_pad, hga.n_pad - 1, np.int32)
+    cid_dev[: hg.n] = cid
+    ew = np.zeros((3, hga.m_pad), np.float32)
+    ew[:, : hg.m] = w_pop
+    got, p_new, ew_new = contract_arrays(hga, jnp.asarray(cid_dev),
+                                         jnp.int32(n_new),
+                                         ew_pop=jnp.asarray(ew))
+    p_new = int(p_new)
+    pv = np.asarray(got.pin_vertex)[:p_new]
+    pe = np.asarray(got.pin_edge)[:p_new]
+
+    def canon(pins, eids, ew_row):
+        by_edge = {}
+        for p, e in zip(pins, eids):
+            by_edge.setdefault(int(e), []).append(int(p))
+        return sorted((tuple(sorted(v)), round(float(ew_row[e]), 3))
+                      for e, v in by_edge.items())
+
+    for a in range(3):
+        want, _ = contract(hg.with_edge_weights(w_pop[a]), cid, n_new)
+        assert canon(pv, pe, np.asarray(ew_new[a])) \
+            == canon(want.pins, want.pin_edge_ids(), want.edge_weights)
+
+
+# --------------------------------------------------------------------------
+# shared-structure hierarchy invariants
+# --------------------------------------------------------------------------
+def test_population_hierarchy_invariants(small_hg):
+    k, eps, alpha = 4, 0.08, 3
+    parts, w_pop = _cohort(small_hg, k, eps, alpha, seed=2)
+    # diversify the warm starts a little so the intersection restriction
+    # is actually an intersection (still balanced is not required here)
+    rng = np.random.default_rng(3)
+    flips = rng.integers(0, small_hg.n, 20)
+    parts[1, flips] = (parts[1, flips] + 1) % k
+    hier = population_coarsen(small_hg, parts, w_pop, k, seed=1,
+                              contraction_limit_factor=8)
+    sizes = hier.sizes()
+    assert sizes[0] == small_hg.n
+    assert all(a > b for a, b in zip(sizes, sizes[1:]))
+    assert hier.num_levels >= 2
+    for li in range(hier.num_levels):
+        lv = hier.levels[li]
+        # broadcast structure, alpha-carried weights/partitions
+        assert lv.ew_pop.shape == (alpha, lv.hga.m_pad)
+        assert lv.parts.shape == (alpha, lv.hga.n_pad)
+        # every member's projected partition preserves ITS OWN cut
+        cuts = np.asarray(metrics.cutsize_population_weighted(
+            lv.hga, lv.parts, lv.ew_pop, k))
+        if li == 0:
+            cuts0 = cuts
+        np.testing.assert_allclose(cuts, cuts0, rtol=1e-5)
+        # the contracted member weights keep each member's total mass of
+        # surviving edges consistent with its own row (sanity: ghost = 0)
+        assert float(np.asarray(lv.ew_pop)[:, lv.hga.m_pad - 1].max()) == 0.0
+
+
+def test_population_coarsen_batch_and_loop_build_identical_hierarchies(
+        small_hg):
+    k, eps = 4, 0.08
+    parts, w_pop = _cohort(small_hg, k, eps, alpha=2, seed=4)
+    h_batch = population_coarsen(small_hg, parts, w_pop, k, seed=7,
+                                 contraction_limit_factor=8, batch=True)
+    h_loop = population_coarsen(small_hg, parts, w_pop, k, seed=7,
+                                contraction_limit_factor=8, batch=False)
+    assert h_batch.num_levels == h_loop.num_levels
+    for lb, ll in zip(h_batch.levels, h_loop.levels):
+        np.testing.assert_array_equal(np.asarray(lb.hga.pin_vertex),
+                                      np.asarray(ll.hga.pin_vertex))
+        np.testing.assert_array_equal(np.asarray(lb.parts),
+                                      np.asarray(ll.parts))
+        np.testing.assert_array_equal(np.asarray(lb.ew_pop),
+                                      np.asarray(ll.ew_pop))
+
+
+# --------------------------------------------------------------------------
+# routing + end-to-end parity
+# --------------------------------------------------------------------------
+def test_mutate_path_routing():
+    assert mutate_path() == "batch"          # auto batches everywhere
+    for path in MUTATE_PATHS:
+        os.environ["REPRO_MUTATE_PATH"] = path
+        try:
+            assert mutate_path() == path
+        finally:
+            os.environ.pop("REPRO_MUTATE_PATH", None)
+
+
+def test_vcycle_population_batch_equals_loop(small_hg):
+    """The acceptance bar: bit-identical per-member partitions AND cuts
+    between the batched cohort V-cycle and the per-member loop."""
+    k, eps = 4, 0.08
+    parts, w_pop = _cohort(small_hg, k, eps, alpha=3, seed=5)
+    pb, cb = vcycle_population(small_hg, parts, w_pop, k, eps, seed=9,
+                               path="batch")
+    pl, cl = vcycle_population(small_hg, parts, w_pop, k, eps, seed=9,
+                               path="loop")
+    np.testing.assert_array_equal(pb, pl)
+    np.testing.assert_array_equal(cb, cl)
+    # per-member elitism on each member's own reweighted objective
+    hga = small_hg.arrays()
+    warm = refine_mod.pad_parts(parts, hga.n_pad)
+    ew = np.zeros((3, hga.m_pad), np.float32)
+    ew[:, : small_hg.m] = w_pop
+    cuts0 = np.asarray(metrics.cutsize_population_weighted(
+        hga, warm, jnp.asarray(ew), k))
+    assert (cb <= cuts0 + 1e-6).all()
+    for a in range(3):
+        assert bool(metrics.is_balanced(
+            hga, refine_mod.pad_part(pb[a], hga.n_pad), k, eps))
+
+
+def test_mutate_population_paths_agree_and_keep_invariants(small_hg):
+    k, eps = 4, 0.08
+    hga = small_hg.arrays()
+    parts, _ = _cohort(small_hg, k, eps, alpha=3, seed=6)
+    cuts = [float(metrics.cutsize_jit(
+        hga, refine_mod.pad_part(p, hga.n_pad), k)) for p in parts]
+    # identical twins: all but the best copy must be flagged
+    msets = similarity_sets(hga, list(parts), cuts, k, threshold=20.0)
+    assert sum(1 for m in msets if m) == 2
+    results = {}
+    for path in MUTATE_PATHS:
+        os.environ["REPRO_MUTATE_PATH"] = path
+        try:
+            results[path] = mutate_population(
+                small_hg, parts, cuts, k, eps, threshold=20.0, seed=1)
+        finally:
+            os.environ.pop("REPRO_MUTATE_PATH", None)
+    (p_b, c_b), (p_l, c_l) = results["batch"], results["loop"]
+    np.testing.assert_array_equal(p_b, p_l)
+    np.testing.assert_array_equal(c_b, c_l)
+    for p, c in zip(p_b, c_b):
+        assert bool(metrics.is_balanced(
+            hga, refine_mod.pad_part(p, hga.n_pad), k, eps))
+        assert c == pytest.approx(float(metrics.cutsize_jit(
+            hga, refine_mod.pad_part(p, hga.n_pad), k)))
+
+
+def test_refine_population_per_member_weights_match_reweighted_hga(tiny_hg):
+    """``edge_weights_pop`` rows behave exactly like refining on a
+    reweighted hypergraph's arrays (the scalar semantics the cohort path
+    batches)."""
+    k, eps = 2, 0.10
+    rng = np.random.default_rng(7)
+    hga = tiny_hg.arrays()
+    parts = np.stack([
+        refine_mod.rebalance(tiny_hg.vertex_weights,
+                             rng.integers(0, k, tiny_hg.n).astype(np.int32),
+                             k, eps)
+        for _ in range(2)])
+    w_pop = np.stack([tiny_hg.edge_weights * (1.0 + 0.1 * i)
+                      for i in range(1, 3)]).astype(np.float32)
+    ew = np.zeros((2, hga.m_pad), np.float32)
+    ew[:, : tiny_hg.m] = w_pop
+    got_p, got_c = refine_mod.refine_population(
+        hga, parts, k, eps, edge_weights_pop=jnp.asarray(ew))
+    for a in range(2):
+        hga_a = tiny_hg.with_edge_weights(w_pop[a]).arrays()
+        want_p, want_c = refine_mod.refine_population(
+            hga_a, parts[a][None, :], k, eps)
+        np.testing.assert_array_equal(got_p[a], want_p[0])
+        assert got_c[a] == want_c[0]
