@@ -5,8 +5,10 @@ holds/grows with k.
 Also home of three engine benchmarks tracked PR over PR:
 
 * ``bench_population`` — batched-vs-looped uncoarsening+refinement at
-  alpha=7, k=64 (``BENCH_population.json``), now exercising the fused
-  on-device LP attempt loop;
+  alpha=7, k=64 (``BENCH_population.json``), exercising the fused
+  on-device LP attempt loop, plus a sharded row per population shard
+  path (off / chunk / mesh, DESIGN.md §11) recording device count so
+  the mesh-vs-chunk ratio is tracked like every other engine pair;
 * ``bench_gain`` — the gain-path k-sweep (k = 64, 256, 1024): the old
   [P, k] segment-sum vs the ``kernels.ops`` dispatcher
   (``BENCH_gain.json``);
@@ -16,10 +18,13 @@ Also home of three engine benchmarks tracked PR over PR:
   dispatches, bit-identical per-member partitions asserted every run.
 
 ``--smoke`` runs all three at tiny sizes plus a forced sweep over every
-gain path, both coarsening engines (``REPRO_COARSEN_PATH=host|device``)
-AND both mutation paths (``REPRO_MUTATE_PATH=batch|loop``, kernels in
-interpret mode), so CI fails on kernel/engine-routing breakage rather
-than on perf graphs.
+gain path, both coarsening engines (``REPRO_COARSEN_PATH=host|device``),
+both mutation paths (``REPRO_MUTATE_PATH=batch|loop``, kernels in
+interpret mode) AND all three population shard paths
+(``REPRO_POP_SHARD=mesh|chunk|off``, bit-identical per-member results
+required), so CI fails on kernel/engine-routing breakage rather than on
+perf graphs.  ``--json-dir DIR`` makes the smoke benches write their
+records there (uploaded as workflow artifacts by CI).
 """
 from __future__ import annotations
 
@@ -111,9 +116,10 @@ def _legacy_fm_refine(fm_pass_jit, hga, part, k, eps):
 
 
 def _uncoarsen_refine_phase(hier, parts0, k, eps, mode, lp_iters,
-                            fm_node_limit, fm_pass_jit=None):
+                            fm_node_limit, fm_pass_jit=None, shard=None):
     """The phase impart_partition runs between recombination rounds, in
-    either engine.  ``looped`` replicates the removed per-member loop."""
+    either engine.  ``looped`` replicates the removed per-member loop;
+    ``shard`` forces a population shard path for the batched engine."""
     from repro.core import refine as refine_mod
     parts = parts0.copy()
     cuts = None
@@ -126,7 +132,7 @@ def _uncoarsen_refine_phase(hier, parts0, k, eps, mode, lp_iters,
         if mode == "batched":
             pp, cuts = refine_mod.refine_population(
                 hga, parts, k, eps, fm_node_limit=fm_node_limit,
-                max_iters=lp_iters)
+                max_iters=lp_iters, shard=shard)
             parts = pp[:, : lv.hg.n]
         else:
             ps, cs = [], []
@@ -332,14 +338,59 @@ def _smoke_mutate_paths(out=sys.stdout):
     print("smoke,mutate_path,parity,bit-identical", file=out)
 
 
-def smoke(out=sys.stdout):
-    """CI entry: tiny-size routing + engine checks (no JSON artifacts)."""
+def _smoke_pop_shard_paths(out=sys.stdout):
+    """Force every population shard path (mesh / chunk / off) through
+    ``refine_population`` on a tiny instance and require bit-identical
+    per-member partitions and cuts — the DESIGN.md §11 parity bar,
+    enforced in CI at whatever device count the lane exposes (the
+    multidevice CI job runs this on 8 forced host devices)."""
+    import jax
+    from repro.core import popshard
+    from repro.core import refine as refine_mod
+
+    hg = titan_like("gsm_switch_like", scale=0.01)
+    k, eps, alpha = 8, 0.08, 3
+    rng = np.random.default_rng(0)
+    hga = hg.arrays()
+    parts = [refine_mod.rebalance(
+        hg.vertex_weights, rng.integers(0, k, hg.n).astype(np.int32),
+        k, eps) for _ in range(alpha)]
+    results = {}
+    for path in popshard.POP_SHARD_PATHS:
+        results[path] = refine_mod.refine_population(
+            hga, [p.copy() for p in parts], k, eps, max_iters=4,
+            shard=path)
+        print(f"smoke,pop_shard,{path},devices={len(jax.local_devices())},"
+              f"cuts={[round(float(c)) for c in results[path][1]]}",
+              file=out)
+    for path in ("mesh", "chunk"):
+        assert np.array_equal(results[path][0], results["off"][0]), \
+            f"pop shard path {path} diverged (partitions)"
+        assert np.array_equal(results[path][1], results["off"][1]), \
+            f"pop shard path {path} diverged (cuts)"
+    print("smoke,pop_shard,parity,bit-identical", file=out)
+
+
+def smoke(out=sys.stdout, json_dir: str | None = None):
+    """CI entry: tiny-size routing + engine checks.  With ``json_dir``
+    the bench records are written there (tiny smoke-scale numbers, the
+    workflow-artifact perf trail; the committed repo-root JSONs stay the
+    full-scale measurements)."""
+    import os
+    jp = (lambda name: None) if json_dir is None else (
+        lambda name: os.path.join(json_dir, name))
+    if json_dir is not None:
+        os.makedirs(json_dir, exist_ok=True)
     _smoke_gain_paths(out=out)
     _smoke_coarsen_paths(out=out)
     _smoke_mutate_paths(out=out)
-    bench_gain(json_path=None, ks=(8, 40), scale=0.02, reps=1, out=out)
-    bench_population(quick=True, smoke=True, json_path=None, out=out)
-    bench_mutation(quick=True, smoke=True, json_path=None, out=out)
+    _smoke_pop_shard_paths(out=out)
+    bench_gain(json_path=jp("BENCH_gain.json"), ks=(8, 40), scale=0.02,
+               reps=1, out=out)
+    bench_population(quick=True, smoke=True,
+                     json_path=jp("BENCH_population.json"), out=out)
+    bench_mutation(quick=True, smoke=True,
+                   json_path=jp("BENCH_mutation.json"), out=out)
     print("# smoke OK", file=out)
 
 
@@ -377,15 +428,21 @@ def bench_population(quick: bool = False, out=sys.stdout,
                     lp_iters=lp_iters, fm_node_limit=fm_node_limit,
                     fm_pass_jit=fm_pass_jit)
     reps = 1 if quick else 2
-    results = {}
-    for mode in ("looped", "batched"):
-        phase(mode=mode)  # warm-up / compile
+
+    def timeit(run):
+        run()  # warm-up / compile
         times = []
         for _ in range(reps):
             t0 = time.perf_counter()
-            parts, cuts = phase(mode=mode)
+            parts, cuts = run()
             times.append(time.perf_counter() - t0)
-        results[mode] = {"wall_s": min(times), "cuts": cuts}
+        return {"wall_s": min(times), "cuts": cuts}
+
+    # base comparison on the single-device engine (shard="off") so the
+    # looped-vs-batched speedup stays comparable PR over PR regardless
+    # of how many devices the box exposes
+    results = {mode: timeit(partial(phase, mode=mode, shard="off"))
+               for mode in ("looped", "batched")}
 
     looped, batched = results["looped"], results["batched"]
     cuts_equal = bool(np.array_equal(looped["cuts"], batched["cuts"]))
@@ -402,6 +459,26 @@ def bench_population(quick: bool = False, out=sys.stdout,
               f"{speedup if mode == 'batched' else 1.0:.2f},"
               f"{cuts_equal}", file=out)
 
+    # the sharded rows: the same batched phase over each population
+    # shard path (DESIGN.md §11), so the mesh-vs-chunk ratio is tracked
+    # like every other engine pair; device count rides in the JSON
+    import jax
+    from repro.core import popshard
+    ndev = len(jax.local_devices())
+    shard_wall = {"off": batched["wall_s"]}
+    for spath in ("chunk", "mesh"):
+        r = timeit(partial(phase, mode="batched", shard=spath))
+        if not np.array_equal(r["cuts"], batched["cuts"]):
+            raise RuntimeError(
+                f"shard path {spath!r} diverged from the single-device "
+                f"engine: off={batched['cuts']} {spath}={r['cuts']}")
+        shard_wall[spath] = r["wall_s"]
+    print("table,design,alpha,k,shard_path,devices,wall_s,cuts_equal",
+          file=out)
+    for spath, wall in shard_wall.items():
+        print(f"population_shard,{design},{alpha},{k},{spath},{ndev},"
+              f"{wall:.2f},True", file=out)
+
     record = {
         "bench": "population_refinement",
         "design": design, "n": hg.n, "m": hg.m,
@@ -413,6 +490,17 @@ def bench_population(quick: bool = False, out=sys.stdout,
         "speedup": round(speedup, 3),
         "cuts_equal": cuts_equal,
         "per_member_cuts": [float(c) for c in batched["cuts"]],
+        "shard": {
+            "devices": ndev,
+            "auto_path": popshard.pop_shard_path(),
+            "wall_s": {p: round(w, 3) for p, w in shard_wall.items()},
+            "cuts_equal": True,
+            "note": ("same batched phase under each REPRO_POP_SHARD "
+                     "path, bit-equal per-member cuts asserted; on a "
+                     "single-device host mesh/chunk degenerate to off "
+                     "plus dispatch overhead — the mesh win needs real "
+                     "devices (TPU) or forced host devices"),
+        },
     }
     if json_path:
         with open(json_path, "w") as f:
@@ -563,6 +651,12 @@ def run(quick: bool = False, out=sys.stdout):
 
 if __name__ == "__main__":
     if "--smoke" in sys.argv:
-        smoke()
+        json_dir = None
+        if "--json-dir" in sys.argv:
+            i = sys.argv.index("--json-dir") + 1
+            if i >= len(sys.argv) or sys.argv[i].startswith("--"):
+                sys.exit("--json-dir requires a directory argument")
+            json_dir = sys.argv[i]
+        smoke(json_dir=json_dir)
     else:
         run(quick="--quick" in sys.argv)

@@ -53,6 +53,10 @@ class ImpartConfig:
     # cohort dispatch for mutation's population V-cycle: "batch"/"loop";
     # None defers to REPRO_MUTATE_PATH (auto = batch)
     mutation_path: Optional[str] = None
+    # population sharding for every refinement dispatch:
+    # "mesh"/"chunk"/"off"; None defers to REPRO_POP_SHARD
+    # (auto = mesh when >1 local device — DESIGN.md §11)
+    pop_shard: Optional[str] = None
 
     def __post_init__(self):
         # fail at construction, not minutes in at the first (or never-
@@ -65,6 +69,14 @@ class ImpartConfig:
                     f"unknown mutation_path {self.mutation_path!r}; "
                     f"expected one of {MUTATE_PATHS} (or None for "
                     "REPRO_MUTATE_PATH routing)")
+        if self.pop_shard is not None:
+            from .popshard import POP_SHARD_PATHS
+            self.pop_shard = self.pop_shard.strip().lower()
+            if self.pop_shard not in POP_SHARD_PATHS + ("auto",):
+                raise ValueError(
+                    f"unknown pop_shard {self.pop_shard!r}; expected one "
+                    f"of {POP_SHARD_PATHS + ('auto',)} (or None for "
+                    "REPRO_POP_SHARD routing)")
 
 
 @dataclasses.dataclass
@@ -107,10 +119,12 @@ def impart_partition(hg: Hypergraph, cfg: ImpartConfig) -> ImpartResult:
         # path), so no host->device conversion repeats per round
         hga = hier.level_arrays(li)
         # device-resident refinement: all alpha members refine together,
-        # and each LP round (attempts included) is a single dispatch
+        # each LP round (attempts included) is a single dispatch, and the
+        # member batch shards over the ("pop", "model") mesh when one is
+        # available (cfg.pop_shard / REPRO_POP_SHARD)
         parts, cuts = refine_mod.refine_population(
             hga, parts, k, eps, fm_node_limit=cfg.fm_node_limit,
-            max_iters=cfg.lp_iters)
+            max_iters=cfg.lp_iters, shard=cfg.pop_shard)
         trace.append((n_li, list(cuts), "refine"))
 
         # fire the geometric-threshold recombination rounds (irregular
@@ -120,14 +134,14 @@ def impart_partition(hg: Hypergraph, cfg: ImpartConfig) -> ImpartResult:
             lv_host = hier.level_host(li)
             parts, cuts = ring_recombination(
                 lv_host, np.asarray(parts)[:, : n_li], cuts, k, eps,
-                seed=cfg.seed * 31 + next_thr)
+                seed=cfg.seed * 31 + next_thr, shard=cfg.pop_shard)
             trace.append((n_li, list(cuts), f"recombine@{next_thr}"))
             if cfg.mutation_enabled:
                 parts, cuts = mutate_population(
                     lv_host, parts, cuts, k, eps,
                     threshold=cfg.similarity_threshold,
                     mu=cfg.mutation_mu, seed=cfg.seed * 17 + next_thr,
-                    path=cfg.mutation_path)
+                    path=cfg.mutation_path, shard=cfg.pop_shard)
                 trace.append((n_li, list(cuts), f"mutate@{next_thr}"))
             next_thr += 1
         if cfg.time_budget_s and time.perf_counter() - t0 > cfg.time_budget_s:
@@ -136,7 +150,7 @@ def impart_partition(hg: Hypergraph, cfg: ImpartConfig) -> ImpartResult:
                 parts = hier.project_pop(parts, lj + 1)
             hga0 = hier.level_arrays(0)
             parts, cuts = refine_mod.lp_refine_population(
-                hga0, parts, k, eps, max_iters=4)
+                hga0, parts, k, eps, max_iters=4, shard=cfg.pop_shard)
             trace.append((hg.n, list(cuts), "budget-exhausted"))
             break
 

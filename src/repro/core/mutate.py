@@ -79,7 +79,8 @@ def similarity_sets(hga, parts, cuts, k: int,
 
 def mutate_population(hg: Hypergraph, parts, cuts, k: int, eps: float,
                       threshold: float = 20.0, mu: float = 0.1,
-                      seed: int = 0, path: Optional[str] = None
+                      seed: int = 0, path: Optional[str] = None,
+                      shard: Optional[str] = None
                       ) -> Tuple[np.ndarray, np.ndarray]:
     """Apply the mutation operator to every offspring with a non-empty
     similarity set.  Returns the updated population (stacked).
@@ -90,7 +91,9 @@ def mutate_population(hg: Hypergraph, parts, cuts, k: int, eps: float,
     ``hg``'s structure and differ only in their reweighted edge-weight
     rows, so the hierarchy is built once and every refinement dispatch
     covers the whole cohort (``path``/``REPRO_MUTATE_PATH`` routes the
-    batched engine vs the per-member reference loop).
+    batched engine vs the per-member reference loop; ``shard``/
+    ``REPRO_POP_SHARD`` lays the cohort's refinement dispatches out over
+    the ("pop", "model") mesh, DESIGN.md §11).
     """
     hga = hg.arrays()
     alpha = len(parts)
@@ -114,7 +117,8 @@ def mutate_population(hg: Hypergraph, parts, cuts, k: int, eps: float,
                            .sum(axis=0))
         for j in mutated_js]).astype(np.float32)
     mutated, _ = vcycle_population(hg, new_parts[mutated_js], w_pop, k,
-                                   eps, seed=seed * 7919, path=path)
+                                   eps, seed=seed * 7919, path=path,
+                                   shard=shard)
     new_parts[mutated_js] = mutated
 
     # report true (unweighted) cuts, one batched dispatch

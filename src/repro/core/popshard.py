@@ -1,0 +1,196 @@
+"""Population sharding over a ("pop", "model") device mesh (DESIGN.md §11).
+
+The memetic population lives as one stacked tensor ``parts[alpha, n_pad]``
+(DESIGN.md §3).  This module makes the alpha axis a first-class MESH axis:
+partition / weight / active-mask leaves are sharded over "pop", structure
+and incidence leaves are replicated (the "model" axis names where pin
+arrays shard on real pods — ``core/population.py``'s psum-based ring
+operators already compute over it; the refinement engine keeps structure
+replicated so per-member trajectories stay bit-identical to the
+single-device engine).
+
+``REPRO_POP_SHARD`` routes every population consumer
+(``refine.lp_refine_population`` / ``fm_refine_population`` and through
+them ``impart_partition`` / ``vcycle_population`` / ``mutate_population``):
+
+* ``mesh``  — shard_map over the ("pop", "model") mesh built here; one
+  collective (a psum'd improvement flag, a ppermute ring exchange) per
+  host decision instead of per-device host loops.
+* ``chunk`` — PR 1's reference: FM chunks the batch over
+  ``jax.local_devices()`` with async dispatch, LP stays single-device.
+* ``off``   — everything on one device (the single-device engine).
+* ``auto`` (unset) — ``mesh`` when more than one local device is
+  visible, ``off`` otherwise.
+
+All three paths produce bit-identical per-member partitions and cuts
+(members are row-independent; the only cross-member coupling, the LP
+attempt loop's "did any lane improve" flag, is psum'd so every path sees
+the same global value) — asserted by ``tests/test_pop_shard.py`` and the
+``largek --smoke`` CI step on 8 forced host devices.
+"""
+from __future__ import annotations
+
+import os
+import weakref
+from collections import OrderedDict
+from functools import lru_cache
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..jaxcompat import make_mesh, shard_map
+
+POP_SHARD_PATHS = ("mesh", "chunk", "off")
+
+
+def pop_shard_path() -> str:
+    """Routing: ``REPRO_POP_SHARD=mesh|chunk|off`` forces a path; ``auto``
+    (unset) picks ``mesh`` when >1 local device is visible, else ``off``
+    (tests pin one device; TPU/GPU pods and CPU hosts running under
+    ``--xla_force_host_platform_device_count`` expose several)."""
+    env = os.environ.get("REPRO_POP_SHARD", "auto").strip().lower()
+    if env in POP_SHARD_PATHS:
+        return env
+    return "mesh" if len(jax.local_devices()) > 1 else "off"
+
+
+def resolve(shard: str | None) -> str:
+    """Validate an explicit ``shard=`` override (None/"auto" defers to
+    ``REPRO_POP_SHARD``)."""
+    if shard is None:
+        return pop_shard_path()
+    s = shard.strip().lower()
+    if s == "auto":
+        return pop_shard_path()
+    if s not in POP_SHARD_PATHS:
+        raise ValueError(f"unknown population shard path {shard!r}; "
+                         f"expected one of {POP_SHARD_PATHS} (or 'auto')")
+    return s
+
+
+def model_axis_size() -> int:
+    """Size of the "model" mesh axis (``REPRO_POP_MESH_MODEL``, default 1).
+    Values that do not divide the local device count fall back to 1."""
+    try:
+        s = int(os.environ.get("REPRO_POP_MESH_MODEL", "1"))
+    except ValueError:
+        return 1
+    return s if s >= 1 else 1
+
+
+_MESH_CACHE: dict = {}
+
+
+def pop_mesh():
+    """The local ("pop", "model") mesh, cached per (device count, model
+    size).  ``pop`` spans ``n_devices // model``; with the default
+    model=1 every local device holds a slice of the population."""
+    ndev = len(jax.local_devices())
+    nmodel = model_axis_size()
+    if ndev % nmodel != 0:
+        nmodel = 1
+    key = (ndev, nmodel)
+    mesh = _MESH_CACHE.get(key)
+    if mesh is None:
+        mesh = make_mesh((ndev // nmodel, nmodel), ("pop", "model"))
+        _MESH_CACHE[key] = mesh
+    return mesh
+
+
+def pop_sharding(mesh) -> NamedSharding:
+    """Leading axis over "pop" (partitions, per-member weights, masks)."""
+    return NamedSharding(mesh, P("pop"))
+
+
+def replicated(mesh) -> NamedSharding:
+    """Fully replicated (structure / incidence leaves, scalars)."""
+    return NamedSharding(mesh, P())
+
+
+def pad_rows(arr: np.ndarray, mult: int) -> np.ndarray:
+    """Pad the leading (population) axis up to a multiple of ``mult`` by
+    repeating row 0.  Pad lanes mirror member 0 exactly, so per-member
+    results and the psum'd any-improved flag are unchanged; callers slice
+    the pad rows off after the dispatch."""
+    arr = np.asarray(arr)
+    r = arr.shape[0] % mult
+    if r == 0:
+        return arr
+    return np.concatenate([arr, np.repeat(arr[:1], mult - r, axis=0)])
+
+
+# --------------------------------------------------------------------------
+# Mesh-driven placement cache
+# --------------------------------------------------------------------------
+# Placements of refinement inputs, keyed on (id(obj), device-or-sharding).
+# The chunked FM path used to re-ship the whole hypergraph to every
+# device on every call — once per pass per level.  A level's
+# HypergraphArrays object is stable across passes (``Hypergraph.arrays``
+# caches it), so the transfer happens once per (level, placement).  A
+# weakref guards against id() reuse after the level is garbage-collected.
+# The mesh path uses the same cache with a NamedSharding key: replicated
+# structure ships once per (level, mesh).
+_PLACEMENT_CACHE: "OrderedDict[tuple, tuple]" = OrderedDict()
+_PLACEMENT_CACHE_MAX = 64
+
+
+def device_put_cached(obj, target):
+    """``jax.device_put(obj, target)`` memoised on ``(id(obj), target)``;
+    ``target`` is a Device or a NamedSharding (both hashable)."""
+    key = (id(obj), getattr(target, "id", target))
+    hit = _PLACEMENT_CACHE.get(key)
+    if hit is not None:
+        ref, placed = hit
+        if ref() is obj:
+            _PLACEMENT_CACHE.move_to_end(key)
+            return placed
+        del _PLACEMENT_CACHE[key]          # id() was recycled
+    placed = jax.device_put(obj, target)
+    _PLACEMENT_CACHE[key] = (weakref.ref(obj), placed)
+    # release the device buffers as soon as the level dies, not when 64
+    # newer placements eventually evict the entry
+    weakref.finalize(obj, _PLACEMENT_CACHE.pop, key, None)
+    while len(_PLACEMENT_CACHE) > _PLACEMENT_CACHE_MAX:
+        _PLACEMENT_CACHE.popitem(last=False)
+    return placed
+
+
+# --------------------------------------------------------------------------
+# Ring partner exchange (paper Fig. 1c) over the "pop" axis
+# --------------------------------------------------------------------------
+@lru_cache(maxsize=8)
+def _ring_exchange_fn(mesh):
+    npop = mesh.shape["pop"]
+
+    def body(x):
+        # local chunk holds contiguous members: global roll by -1 is a
+        # local shift plus one ppermute of the first row to the previous
+        # shard (wraparound closes the ring)
+        recv = jax.lax.ppermute(
+            x[:1], "pop", [(i, (i - 1) % npop) for i in range(npop)])
+        return jnp.concatenate([x[1:], recv], axis=0)
+
+    return jax.jit(shard_map(body, mesh, in_specs=P("pop"),
+                             out_specs=P("pop")))
+
+
+def ring_partners(parts, shard: str | None = None) -> np.ndarray:
+    """``partner[i] = parts[(i + 1) % alpha]`` — the paper's ring pairing.
+
+    On the mesh path the exchange is a ``lax.ppermute`` over "pop"
+    (device-resident, the op that carries recombination partners and
+    migration on pods) whenever the population divides the pop axis; the
+    host roll is the single-device reference — both produce the identical
+    partner tensor.
+    """
+    parts = np.asarray(parts)
+    alpha = parts.shape[0]
+    if resolve(shard) == "mesh" and alpha > 1:
+        mesh = pop_mesh()
+        if alpha % mesh.shape["pop"] == 0:
+            out = _ring_exchange_fn(mesh)(
+                jax.device_put(jnp.asarray(parts), pop_sharding(mesh)))
+            return np.asarray(out)
+    return np.roll(parts, -1, axis=0)

@@ -157,7 +157,7 @@ def make_population_step(mesh, *, n: int, m: int, k: int, eps: float = 0.03,
                          refine_rounds: int = 4,
                          sim_threshold: float = 20.0,
                          pin_axis: str = "model",
-                         ring_axis: str = "data"):
+                         ring_axis: str | None = None):
     """Build the jitted multi-device population step.
 
     Call signature of the returned fn:
@@ -166,7 +166,16 @@ def make_population_step(mesh, *, n: int, m: int, k: int, eps: float = 0.03,
         -> (parts[POP, n_pad], cuts[POP])
     with POP == prod of population-axis sizes; pins sharded over
     ``pin_axis`` (their padded length must divide by its size).
+
+    ``ring_axis`` defaults to "pop" when the mesh has one — the
+    refinement engine's ("pop", "model") mesh (``core/popshard.py``,
+    DESIGN.md §11) names its population axis that way, so the ring
+    operators and the sharded refinement tiers run on the SAME mesh —
+    falling back to the legacy "data" axis of the ("pod", "data",
+    "model") production layout.
     """
+    if ring_axis is None:
+        ring_axis = "pop" if "pop" in mesh.axis_names else "data"
     pod = "pod" if "pod" in mesh.axis_names else None
     pop_axes = (pod, ring_axis) if pod else (ring_axis,)
     ring_n = mesh.shape[ring_axis]
@@ -186,3 +195,15 @@ def make_population_step(mesh, *, n: int, m: int, k: int, eps: float = 0.03,
     out_specs = (P(pop_axes, None), P(pop_axes))
     fn = shard_map(body, mesh=mesh, in_specs=in_specs, out_specs=out_specs)
     return jax.jit(fn)
+
+
+def make_local_population_step(*, n: int, m: int, k: int, **kw):
+    """The population step on the local ("pop", "model") mesh — the SAME
+    mesh the sharded refinement engine dispatches over
+    (``popshard.pop_mesh``), so the ring operators, migration and the
+    refinement tiers share one device layout.  Returns (step_fn, mesh).
+    Pin padding must divide the "model" axis size (trivially true at the
+    default model=1)."""
+    from .popshard import pop_mesh
+    mesh = pop_mesh()
+    return make_population_step(mesh, n=n, m=m, k=k, **kw), mesh

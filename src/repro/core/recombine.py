@@ -20,6 +20,7 @@ from typing import Tuple
 import numpy as np
 
 from .hypergraph import Hypergraph, contract
+from . import popshard
 from . import refine as refine_mod
 from . import metrics
 from . import ilp as ilp_mod
@@ -114,21 +115,27 @@ def recombine(hg: Hypergraph, part_a: np.ndarray, part_b: np.ndarray,
 
 
 def ring_recombination(hg: Hypergraph, parts, cuts, k: int,
-                       eps: float, seed: int = 0
+                       eps: float, seed: int = 0,
+                       shard: str | None = None
                        ) -> Tuple[np.ndarray, np.ndarray]:
     """Paper's circular pairing: (1,2), (2,3), ..., (alpha, 1).
 
     Accepts the population as a stacked [alpha, n] tensor (or a list of
-    vectors) and returns the offspring stacked the same way.  The pairwise
-    overlay/merge is irregular host work per pair; the solver inside each
-    ``recombine`` call uses the batched refinement engine.
+    vectors) and returns the offspring stacked the same way.  Partner
+    exchange goes through ``popshard.ring_partners`` — a ``lax.ppermute``
+    over the "pop" mesh axis on the ``REPRO_POP_SHARD=mesh`` path, a host
+    roll otherwise (identical partner tensor either way); the pairwise
+    overlay/merge is irregular host work per pair, and the solver inside
+    each ``recombine`` call uses the batched refinement engine.
     """
     alpha = len(parts)
+    stacked = np.stack([np.asarray(p, np.int32)[: hg.n] for p in parts])
+    partners = popshard.ring_partners(stacked, shard=shard)
+    partner_cuts = np.roll(np.asarray(cuts, np.float64), -1)
     new_parts, new_cuts = [], []
     for i in range(alpha):
-        j = (i + 1) % alpha
-        off, c = recombine(hg, parts[i], parts[j],
-                           float(cuts[i]), float(cuts[j]),
+        off, c = recombine(hg, stacked[i], partners[i],
+                           float(cuts[i]), float(partner_cuts[i]),
                            k, eps, seed=seed * 1009 + i)
         new_parts.append(np.asarray(off, np.int32)[: hg.n])
         new_cuts.append(c)

@@ -16,6 +16,12 @@ round instead of up to 10 blocking round-trips.  Per-member trajectories
 stay bit-identical to the scalar ``lp_refine`` host loop on
 integer-weight instances.
 
+Both population tiers route through the ``REPRO_POP_SHARD`` dispatcher
+(``core/popshard.py``, DESIGN.md §11): on the ``mesh`` path (auto when
+>1 device) each pass/attempt loop is shard_map'd over the
+("pop", "model") mesh with structure replicated and member rows sharded
+over "pop" — per-member results identical to the other paths.
+
 Both tiers guarantee: the returned partition never violates the balance
 cap and never has a larger cut than the input.
 """
@@ -23,16 +29,18 @@ from __future__ import annotations
 
 import dataclasses
 import weakref
-from collections import OrderedDict
-from functools import partial
+from functools import lru_cache, partial
 from typing import Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import PartitionSpec as P
 
+from ..jaxcompat import shard_map
 from .hypergraph import HypergraphArrays
 from . import metrics
+from . import popshard
 
 NEG = -1e30
 
@@ -180,12 +188,13 @@ def lp_round_population(hga: HypergraphArrays, parts: jnp.ndarray, k: int,
                                      edge_weight_override)
 
 
-@partial(jax.jit, static_argnames=("k",))
-def _lp_attempt_population(hga: HypergraphArrays, parts: jnp.ndarray,
-                           cuts: jnp.ndarray, fracs: jnp.ndarray,
-                           attempts: jnp.ndarray, k: int, cap: jnp.ndarray,
-                           edge_weight_override: jnp.ndarray | None = None,
-                           edge_weights_pop: jnp.ndarray | None = None):
+def _lp_attempt_population_impl(hga: HypergraphArrays, parts: jnp.ndarray,
+                                cuts: jnp.ndarray, fracs: jnp.ndarray,
+                                attempts: jnp.ndarray, k: int,
+                                cap: jnp.ndarray,
+                                edge_weight_override=None,
+                                edge_weights_pop=None,
+                                pop_axis: str | None = None):
     """Device-resident LP attempt loop fused into one ``lax.while_loop``.
 
     Per member (mirroring the scalar ``lp_refine`` inner loop exactly):
@@ -199,16 +208,23 @@ def _lp_attempt_population(hga: HypergraphArrays, parts: jnp.ndarray,
     with the remaining ``attempts`` (a traced scalar, so bucket size is
     the only thing that retraces).
 
+    ``pop_axis``: when the batch is sharded over a mesh axis (the
+    ``REPRO_POP_SHARD=mesh`` path, DESIGN.md §11), the only cross-member
+    quantity — the "did any lane improve" loop flag — is psum'd over that
+    axis, so every shard runs the exact trip count the single-device
+    batch would.  It is carried through the loop state (computed in the
+    body) so the cond stays collective-free.
+
     Returns ``(parts, cuts, improved, fracs, used)``; cuts are f32
     (bit-identical trajectories are guaranteed on integer-weight
     instances, as in the host loop this replaces).
     """
     def cond(carry):
-        _, _, _, improved, t = carry
-        return (t < attempts) & ~improved.any()
+        _, _, _, _, any_improved, t = carry
+        return (t < attempts) & ~any_improved
 
     def body(carry):
-        parts, cuts, fracs, improved, t = carry
+        parts, cuts, fracs, improved, _, t = carry
         cands = _lp_round_population_impl(hga, parts, k, cap, fracs,
                                           edge_weight_override,
                                           edge_weights_pop)
@@ -221,13 +237,43 @@ def _lp_attempt_population(hga: HypergraphArrays, parts: jnp.ndarray,
         parts = jnp.where(take[:, None], cands, parts)
         cuts = jnp.where(take, cs, cuts)
         fracs = jnp.where(take, fracs, fracs * 0.25)
-        return parts, cuts, fracs, improved | take, t + 1
+        improved = improved | take
+        any_improved = improved.any()
+        if pop_axis is not None:
+            any_improved = jax.lax.psum(
+                any_improved.astype(jnp.int32), pop_axis) > 0
+        return parts, cuts, fracs, improved, any_improved, t + 1
 
     init = (parts, cuts, fracs, jnp.zeros(parts.shape[0], bool),
-            jnp.int32(0))
-    parts, cuts, fracs, improved, used = jax.lax.while_loop(cond, body,
-                                                            init)
+            jnp.bool_(False), jnp.int32(0))
+    parts, cuts, fracs, improved, _, used = jax.lax.while_loop(cond, body,
+                                                               init)
     return parts, cuts, improved, fracs, used
+
+
+_lp_attempt_population = partial(jax.jit, static_argnames=("k",))(
+    _lp_attempt_population_impl)
+
+
+@lru_cache(maxsize=32)
+def _lp_attempt_population_mesh(mesh, k: int):
+    """The fused LP attempt loop shard_map'd over the ("pop", "model")
+    mesh: structure replicated, partition/cut/frac/weight-row leaves
+    sharded over "pop".  Cached per (mesh, k); jit handles the rest of
+    the signature (presence of the optional weight args, bucket shapes).
+    """
+    def body(hga, parts, cuts, fracs, attempts, cap, ewo, ew_pop):
+        return _lp_attempt_population_impl(
+            hga, parts, cuts, fracs, attempts, k, cap,
+            edge_weight_override=ewo, edge_weights_pop=ew_pop,
+            pop_axis="pop")
+
+    fn = shard_map(
+        body, mesh,
+        in_specs=(P(), P("pop"), P("pop"), P("pop"), P(), P(), P(),
+                  P("pop")),
+        out_specs=(P("pop"), P("pop"), P("pop"), P("pop"), P()))
+    return jax.jit(fn)
 
 
 
@@ -262,7 +308,8 @@ def lp_refine(hga: HypergraphArrays, part: np.ndarray, k: int, eps: float,
 
 def lp_refine_population(hga: HypergraphArrays, parts, k: int, eps: float,
                          max_iters: int = 24, patience: int = 3,
-                         edge_weight_override=None, edge_weights_pop=None
+                         edge_weight_override=None, edge_weights_pop=None,
+                         shard: str | None = None
                          ) -> Tuple[np.ndarray, np.ndarray]:
     """Batched ``lp_refine``: ONE device dispatch per round covers the
     whole population, attempts included.
@@ -279,8 +326,14 @@ def lp_refine_population(hga: HypergraphArrays, parts, k: int, eps: float,
     shared structure (the mutation cohort, DESIGN.md §10) — each member's
     gains AND acceptance cuts use its own row, exactly as if it refined
     its own reweighted hypergraph.
+
+    ``shard`` (None = ``REPRO_POP_SHARD``): on the ``mesh`` path the
+    attempt loop runs shard_map'd over the ("pop", "model") mesh
+    (DESIGN.md §11) — structure replicated, member rows sharded over
+    "pop", trip counts synchronised by a psum'd improvement flag — with
+    per-member trajectories bit-identical to the single-device engine.
     """
-    cap = metrics.balance_cap(hga.total_weight, k, eps)
+    cap = _cap_for(hga, k, eps)
     parts = pad_parts(parts, hga.n_pad)
     alpha = parts.shape[0]
     if edge_weights_pop is not None:
@@ -290,6 +343,20 @@ def lp_refine_population(hga: HypergraphArrays, parts, k: int, eps: float,
     else:
         cuts = np.asarray(metrics.cutsize_population(hga, parts, k),
                           np.float64)
+
+    mesh_fn = ewo_m = None
+    if popshard.resolve(shard) == "mesh" and alpha > 1:
+        mesh, npop, pop_sh, hga_m, cap_m = _mesh_dispatch(hga, k, eps)
+        mesh_fn = _lp_attempt_population_mesh(mesh, k)
+        if edge_weight_override is not None:
+            ewo_m = jax.device_put(edge_weight_override,
+                                   popshard.replicated(mesh))
+        # host mirror (the FM tier's design): active rows merge with
+        # numpy writes, never through a single-device detour
+        parts = np.array(parts)
+        if edge_weights_pop is not None:
+            edge_weights_pop = np.asarray(edge_weights_pop)
+
     stall = np.zeros(alpha, np.int32)
     done = np.zeros(alpha, bool)
     for _ in range(max_iters):
@@ -306,28 +373,52 @@ def lp_refine_population(hga: HypergraphArrays, parts, k: int, eps: float,
         # improve (usually attempt 1, usually all of them); only
         # stragglers re-dispatch in a smaller bucket with the leftover
         # attempt budget.  The only data read back per dispatch are the
-        # [active]-sized cuts / improved / fracs vectors.
+        # [active]-sized cuts / improved / fracs vectors (plus, on the
+        # mesh path, the active partition rows — it compacts through a
+        # host mirror, like the FM tier).
         improved_round = np.zeros(alpha, bool)
         idx = active
         fracs = np.ones(alpha, np.float32)
         remaining = 5
         while remaining > 0 and len(idx):
-            sub = parts[jnp.asarray(idx)] if len(idx) < alpha else parts
+            # bucket slicing works on both mirrors (np parts on the mesh
+            # path, jnp parts otherwise — jnp accepts the numpy index)
+            sub = parts[idx] if len(idx) < alpha else parts
             sub_ew = None
             if edge_weights_pop is not None:
-                sub_ew = (edge_weights_pop[jnp.asarray(idx)]
-                          if len(idx) < alpha else edge_weights_pop)
-            new_sub, new_cuts, improved, new_fracs, used = \
-                _lp_attempt_population(
-                    hga, sub, jnp.asarray(cuts[idx], jnp.float32),
-                    jnp.asarray(fracs[idx]), jnp.int32(remaining), k, cap,
-                    edge_weight_override=edge_weight_override,
-                    edge_weights_pop=sub_ew)
-            improved = np.asarray(improved)
-            if len(idx) < alpha:
-                parts = parts.at[jnp.asarray(idx)].set(new_sub)
+                sub_ew = (edge_weights_pop[idx] if len(idx) < alpha
+                          else edge_weights_pop)
+            if mesh_fn is not None:
+                # mesh dispatch: pad the bucket to the pop-axis size
+                # (pad lanes mirror row 0, so results and the psum'd
+                # improvement flag are unchanged), shard rows over "pop";
+                # read back the active rows into the host mirror
+                na = len(idx)
+                new_sub, new_cuts, improved, new_fracs, used = mesh_fn(
+                    hga_m,
+                    _put_rows(sub, npop, pop_sh),
+                    _put_rows(np.asarray(cuts[idx], np.float32), npop,
+                              pop_sh),
+                    _put_rows(fracs[idx], npop, pop_sh),
+                    jnp.int32(remaining), cap_m, ewo_m,
+                    None if sub_ew is None
+                    else _put_rows(sub_ew, npop, pop_sh))
+                parts[idx] = np.asarray(new_sub)[:na]
+                new_cuts = np.asarray(new_cuts)[:na]
+                improved = np.asarray(improved)[:na]
+                new_fracs = np.asarray(new_fracs)[:na]
             else:
-                parts = new_sub
+                new_sub, new_cuts, improved, new_fracs, used = \
+                    _lp_attempt_population(
+                        hga, sub, jnp.asarray(cuts[idx], jnp.float32),
+                        jnp.asarray(fracs[idx]), jnp.int32(remaining), k,
+                        cap, edge_weight_override=edge_weight_override,
+                        edge_weights_pop=sub_ew)
+                improved = np.asarray(improved)
+                if len(idx) < alpha:
+                    parts = parts.at[jnp.asarray(idx)].set(new_sub)
+                else:
+                    parts = new_sub
             # unimproved lanes pass their cuts through the f32 carry
             # unchanged (all cuts originate f32), so this is pure update
             cuts[idx] = np.asarray(new_cuts, np.float64)
@@ -418,20 +509,39 @@ def _fm_pass_impl(hga: HypergraphArrays, part: jnp.ndarray, k: int,
 _fm_pass = jax.jit(_fm_pass_impl, static_argnames=("k", "steps"))
 
 
-@partial(jax.jit, static_argnames=("k", "steps"))
-def _fm_pass_population(hga: HypergraphArrays, parts: jnp.ndarray, k: int,
-                        cap: jnp.ndarray, steps: int,
-                        edge_weights_pop: jnp.ndarray | None = None
-                        ) -> Tuple[jnp.ndarray, jnp.ndarray]:
-    """One FM pass for all members: a single [alpha]-batched move scan
-    instead of alpha sequential scans.  With ``edge_weights_pop`` each
-    member's lane runs on its own edge-weight row (shared structure)."""
+def _fm_pass_population_impl(hga: HypergraphArrays, parts: jnp.ndarray,
+                             k: int, cap: jnp.ndarray, steps: int,
+                             edge_weights_pop: jnp.ndarray | None = None
+                             ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     if edge_weights_pop is None:
         return jax.vmap(
             lambda p: _fm_pass_impl(hga, p, k, cap, steps))(parts)
     return jax.vmap(
         lambda p, ew: _fm_pass_impl(metrics.member_arrays(hga, ew), p, k,
                                     cap, steps))(parts, edge_weights_pop)
+
+
+#: One FM pass for all members: a single [alpha]-batched move scan
+#: instead of alpha sequential scans.  With ``edge_weights_pop`` each
+#: member's lane runs on its own edge-weight row (shared structure).
+_fm_pass_population = partial(jax.jit, static_argnames=("k", "steps"))(
+    _fm_pass_population_impl)
+
+
+@lru_cache(maxsize=32)
+def _fm_pass_population_mesh(mesh, k: int, steps: int):
+    """The batched FM pass shard_map'd over the ("pop", "model") mesh
+    (DESIGN.md §11): structure replicated, member rows sharded over
+    "pop".  FM lanes are fully row-independent (no collective needed);
+    each shard's move loop even exits as soon as ITS lanes are done."""
+    def body(hga, parts, cap, ew_pop):
+        return _fm_pass_population_impl(hga, parts, k, cap, steps,
+                                        edge_weights_pop=ew_pop)
+
+    fn = shard_map(body, mesh,
+                   in_specs=(P(), P("pop"), P(), P("pop")),
+                   out_specs=(P("pop"), P("pop")))
+    return jax.jit(fn)
 
 
 def fm_refine(hga: HypergraphArrays, part: np.ndarray, k: int, eps: float,
@@ -454,57 +564,79 @@ def fm_refine(hga: HypergraphArrays, part: np.ndarray, k: int, eps: float,
 
 
 def _population_shard_devices():
-    """Local devices for population sharding.  Returns None on a single-
-    device host (tests pin one device; TPU/GPU pods and CPU hosts with
-    ``--xla_force_host_platform_device_count`` expose several)."""
+    """Local devices for the ``chunk`` population path.  Returns None on
+    a single-device host (tests pin one device; TPU/GPU pods and CPU
+    hosts with ``--xla_force_host_platform_device_count`` expose
+    several)."""
     devs = jax.local_devices()
     return devs if len(devs) > 1 else None
 
 
-# Per-device placements of refinement inputs, keyed on (id(obj), device).
-# ``fm_refine_population`` used to re-ship the whole hypergraph to every
-# device on every call — once per pass per level.  The level's
-# HypergraphArrays object is stable across passes (``Hypergraph.arrays``
-# caches it), so the transfer happens once per (level, device).  A
-# weakref guards against id() reuse after the level is garbage-collected.
-_PLACEMENT_CACHE: "OrderedDict[tuple, tuple]" = OrderedDict()
-_PLACEMENT_CACHE_MAX = 64
+# Placements are memoised in popshard's mesh-driven placement cache (the
+# per-device chunk path and the mesh path share it); kept under the old
+# name for the regression tests.
+_device_put_cached = popshard.device_put_cached
+
+# Balance caps, keyed on (id(hga), k, eps): the cap is a pure function
+# of the level's total weight, so computing it once per level gives the
+# placement cache a STABLE object to key on — `fm_refine_population`
+# used to re-ship `cap` to every device on every call while carefully
+# caching the (much larger) hypergraph placements right next to it.
+_CAP_CACHE: dict = {}
 
 
-def _device_put_cached(obj, device):
-    key = (id(obj), getattr(device, "id", device))
-    hit = _PLACEMENT_CACHE.get(key)
-    if hit is not None:
-        ref, placed = hit
-        if ref() is obj:
-            _PLACEMENT_CACHE.move_to_end(key)
-            return placed
-        del _PLACEMENT_CACHE[key]          # id() was recycled
-    placed = jax.device_put(obj, device)
-    _PLACEMENT_CACHE[key] = (weakref.ref(obj), placed)
-    # release the device buffers as soon as the level dies, not when 64
-    # newer placements eventually evict the entry
-    weakref.finalize(obj, _PLACEMENT_CACHE.pop, key, None)
-    while len(_PLACEMENT_CACHE) > _PLACEMENT_CACHE_MAX:
-        _PLACEMENT_CACHE.popitem(last=False)
-    return placed
+def _cap_for(hga: HypergraphArrays, k: int, eps: float, target=None):
+    """The balance cap for (hga, k, eps), optionally placed on a device
+    or sharding — both the scalar and the placements are cached."""
+    key = (id(hga), int(k), float(eps))
+    hit = _CAP_CACHE.get(key)
+    if hit is not None and hit[0]() is hga:
+        cap = hit[1]
+    else:
+        cap = metrics.balance_cap(hga.total_weight, k, eps)
+        _CAP_CACHE[key] = (weakref.ref(hga), cap)
+        weakref.finalize(hga, _CAP_CACHE.pop, key, None)
+    if target is None:
+        return cap
+    return popshard.device_put_cached(cap, target)
+
+
+def _mesh_dispatch(hga: HypergraphArrays, k: int, eps: float):
+    """Shared setup of a mesh-path dispatch (both tiers): the local
+    ("pop", "model") mesh, its pop-axis size and row sharding, and the
+    replicated structure + cap (shipped once per (level, mesh) through
+    the placement cache)."""
+    mesh = popshard.pop_mesh()
+    rep = popshard.replicated(mesh)
+    return (mesh, mesh.shape["pop"], popshard.pop_sharding(mesh),
+            popshard.device_put_cached(hga, rep),
+            _cap_for(hga, k, eps, rep))
+
+
+def _put_rows(arr, npop: int, pop_sh):
+    """Pad a member-row batch to the pop-axis size and shard it."""
+    return jax.device_put(jnp.asarray(popshard.pad_rows(arr, npop)),
+                          pop_sh)
 
 
 def fm_refine_population(hga: HypergraphArrays, parts, k: int, eps: float,
                          max_passes: int = 8,
                          step_budget: int | None = None,
-                         edge_weights_pop=None
+                         edge_weights_pop=None, shard: str | None = None
                          ) -> Tuple[np.ndarray, np.ndarray]:
     """Batched ``fm_refine`` with per-member pass acceptance: a member
     stops improving exactly when the scalar loop would have broken.
 
-    When the host exposes several devices the active subpopulation is
-    sharded across them in contiguous chunks — jax's async dispatch runs
-    the chunk scans concurrently (the FM scan's scatter ops do not
-    intra-op parallelise, so this is where multi-core actually comes
-    from).  Chunking never changes results: members are row-independent.
+    Multi-device routing (``shard``, None = ``REPRO_POP_SHARD``):
+    ``mesh`` runs each pass shard_map'd over the ("pop", "model") mesh —
+    structure replicated once per (level, mesh) through the placement
+    cache, member rows sharded over "pop" (DESIGN.md §11); ``chunk`` is
+    the legacy reference that slices the batch over
+    ``jax.local_devices()`` with async dispatch; ``off`` stays on one
+    device.  None of them changes results: members are row-independent,
+    so all paths return bit-identical per-member partitions and cuts.
     """
-    cap = metrics.balance_cap(hga.total_weight, k, eps)
+    cap = _cap_for(hga, k, eps)
     parts = np.array(pad_parts(parts, hga.n_pad))  # writable host copy
     alpha = parts.shape[0]
     if edge_weights_pop is not None:
@@ -517,10 +649,15 @@ def fm_refine_population(hga: HypergraphArrays, parts, k: int, eps: float,
                           np.float64)
     steps = step_budget or int(min(hga.n_pad, 1024))
     done = np.zeros(alpha, bool)
-    devs = _population_shard_devices() if alpha > 1 else None
+    path = popshard.resolve(shard) if alpha > 1 else "off"
+    devs = _population_shard_devices() if path == "chunk" else None
     if devs:
         hga_d = [_device_put_cached(hga, d) for d in devs]
-        cap_d = [jax.device_put(cap, d) for d in devs]
+        cap_d = [_cap_for(hga, k, eps, d) for d in devs]
+    mesh_fn = None
+    if path == "mesh":
+        mesh, npop, pop_sh, hga_m, cap_m = _mesh_dispatch(hga, k, eps)
+        mesh_fn = _fm_pass_population_mesh(mesh, k, steps)
     for _ in range(max_passes):
         idx = np.nonzero(~done)[0]  # compact: finished members drop out
         if len(idx) == 0:
@@ -528,7 +665,15 @@ def fm_refine_population(hga: HypergraphArrays, parts, k: int, eps: float,
         sub = parts[idx]
         sub_ew = (edge_weights_pop[idx]
                   if edge_weights_pop is not None else None)
-        if devs and len(idx) > 1:
+        if mesh_fn is not None:
+            na = len(idx)
+            out_p, out_c = mesh_fn(
+                hga_m, _put_rows(sub, npop, pop_sh), cap_m,
+                None if sub_ew is None
+                else _put_rows(sub_ew, npop, pop_sh))
+            cands = np.asarray(out_p)[:na]
+            cs = np.asarray(out_c)[:na].astype(np.float64)
+        elif devs and len(idx) > 1:
             ndev = min(len(devs), len(idx))
             bounds = [len(idx) * d // ndev for d in range(ndev + 1)]
             outs = []
@@ -574,18 +719,21 @@ def refine(hga: HypergraphArrays, part: np.ndarray, k: int, eps: float,
 
 
 def refine_population(hga: HypergraphArrays, parts, k: int, eps: float,
-                      fm_node_limit: int = 4096, edge_weights_pop=None, **kw
+                      fm_node_limit: int = 4096, edge_weights_pop=None,
+                      shard: str | None = None, **kw
                       ) -> Tuple[np.ndarray, np.ndarray]:
     """Two-tier refinement for the whole population in batched dispatches
     (the production path of ``impart_partition``, ``vcycle`` and the
-    mutation cohort's population V-cycle).
+    mutation cohort's population V-cycle).  Both tiers route through the
+    ``REPRO_POP_SHARD`` dispatcher (``shard`` overrides, DESIGN.md §11).
     Returns (parts [alpha, n_pad], cuts [alpha])."""
     parts, cuts = lp_refine_population(hga, parts, k, eps,
                                        edge_weights_pop=edge_weights_pop,
-                                       **kw)
+                                       shard=shard, **kw)
     if int(hga.n) <= fm_node_limit:
         parts, cuts = fm_refine_population(
-            hga, parts, k, eps, edge_weights_pop=edge_weights_pop)
+            hga, parts, k, eps, edge_weights_pop=edge_weights_pop,
+            shard=shard)
     return parts, cuts
 
 

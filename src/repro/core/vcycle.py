@@ -84,7 +84,8 @@ def _pad_part(part: np.ndarray, n_pad: int) -> np.ndarray:
 def vcycle_population(hg: Hypergraph, parts, ew_pop, k: int, eps: float,
                       seed: int = 0, fm_node_limit: int = 4096,
                       contraction_limit_factor: int = 64,
-                      path: Optional[str] = None
+                      path: Optional[str] = None,
+                      shard: Optional[str] = None
                       ) -> Tuple[np.ndarray, np.ndarray]:
     """One V-cycle for the whole mutation cohort (DESIGN.md §10).
 
@@ -102,6 +103,10 @@ def vcycle_population(hg: Hypergraph, parts, ew_pop, k: int, eps: float,
     per-member stage as one batched dispatch; "loop" runs the identical
     pipeline member-at-a-time — the scalar reference whose per-member
     results the batched path reproduces bit-for-bit.
+
+    ``shard`` (None = ``REPRO_POP_SHARD``, DESIGN.md §11): how the
+    cohort's refinement dispatches lay out over devices — orthogonal to
+    ``path`` and equally answer-preserving.
     """
     from .mutate import MUTATE_PATHS, mutate_path
     if path is None:
@@ -128,14 +133,14 @@ def vcycle_population(hg: Hypergraph, parts, ew_pop, k: int, eps: float,
         if batch:
             cur, _ = refine_mod.refine_population(
                 hga, cur, k, eps, fm_node_limit=fm_node_limit,
-                edge_weights_pop=ew_li)
+                edge_weights_pop=ew_li, shard=shard)
         else:  # per-member reference: populations of one, same dispatches
             rows = []
             for a in range(alpha):
                 row, _ = refine_mod.refine_population(
                     hga, jnp.asarray(cur)[a][None, :], k, eps,
                     fm_node_limit=fm_node_limit,
-                    edge_weights_pop=ew_li[a][None, :])
+                    edge_weights_pop=ew_li[a][None, :], shard=shard)
                 rows.append(np.asarray(row)[0])
             cur = jnp.asarray(np.stack(rows))
 

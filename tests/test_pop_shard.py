@@ -1,0 +1,258 @@
+"""Shard-parity: the ("pop", "model") mesh path (DESIGN.md §11) must be
+bit-identical to the chunk and single-device paths.
+
+The in-process tests force each path via the ``shard=`` override, so
+they are meaningful at ANY device count: on the single-device tier-1
+lane the mesh path runs through a (1, 1) mesh (the shard_map machinery
+itself is exercised), and on the multi-device CI lane
+(``XLA_FLAGS=--xla_force_host_platform_device_count=8``) the same tests
+cover real cross-device sharding.  The subprocess test pins 8 devices
+regardless of the parent's platform, covering the acceptance bar
+end-to-end (LP tier, FM tier, full ``mutate_population`` V-cycle).
+"""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+from repro.core import metrics, popshard, refine
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+ALPHA = 5
+
+
+def _population(hg, k, eps, seed):
+    rng = np.random.default_rng(seed)
+    return [refine.rebalance(hg.vertex_weights,
+                             rng.integers(0, k, hg.n).astype(np.int32),
+                             k, eps) for _ in range(ALPHA)]
+
+
+# --------------------------------------------------------------------------
+# dispatcher
+# --------------------------------------------------------------------------
+def test_resolve_rejects_unknown_path():
+    with pytest.raises(ValueError, match="unknown population shard"):
+        popshard.resolve("pod")
+    assert popshard.resolve("MESH ") == "mesh"
+    assert popshard.resolve("auto") in popshard.POP_SHARD_PATHS
+    assert popshard.resolve(None) in popshard.POP_SHARD_PATHS
+
+
+def test_env_routing(monkeypatch):
+    for p in popshard.POP_SHARD_PATHS:
+        monkeypatch.setenv("REPRO_POP_SHARD", p)
+        assert popshard.pop_shard_path() == p
+    monkeypatch.setenv("REPRO_POP_SHARD", "bogus")  # invalid -> auto
+    import jax
+    want = "mesh" if len(jax.local_devices()) > 1 else "off"
+    assert popshard.pop_shard_path() == want
+
+
+def test_pop_mesh_axes():
+    import jax
+    mesh = popshard.pop_mesh()
+    assert tuple(mesh.axis_names) == ("pop", "model")
+    assert mesh.shape["pop"] * mesh.shape["model"] == len(
+        jax.local_devices())
+
+
+def test_pad_rows_mirrors_row_zero():
+    arr = np.arange(12).reshape(3, 4)
+    out = popshard.pad_rows(arr, 4)
+    assert out.shape == (4, 4)
+    np.testing.assert_array_equal(out[3], arr[0])
+    assert popshard.pad_rows(arr, 3) is arr  # exact multiple: no copy
+
+
+def test_impart_config_validates_pop_shard():
+    from repro.core.impart import ImpartConfig
+    with pytest.raises(ValueError, match="unknown pop_shard"):
+        ImpartConfig(k=4, pop_shard="pod")
+    assert ImpartConfig(k=4, pop_shard="MESH").pop_shard == "mesh"
+
+
+# --------------------------------------------------------------------------
+# parity (every path forced explicitly; device count = whatever the lane
+# exposes)
+# --------------------------------------------------------------------------
+def test_refine_population_parity_across_paths(small_hg):
+    k, eps = 8, 0.08
+    hga = small_hg.arrays()
+    parts = _population(small_hg, k, eps, seed=3)
+    res = {p: refine.refine_population(
+        hga, [q.copy() for q in parts], k, eps, max_iters=6, shard=p)
+        for p in popshard.POP_SHARD_PATHS}
+    for p in ("mesh", "chunk"):
+        np.testing.assert_array_equal(res[p][0], res["off"][0],
+                                      err_msg=f"{p} partitions diverged")
+        np.testing.assert_array_equal(res[p][1], res["off"][1],
+                                      err_msg=f"{p} cuts diverged")
+
+
+def test_lp_tier_parity_with_override_weights(tiny_hg):
+    """Mesh LP with a shared edge-weight override (mutation bias) and a
+    straggler-sized population stays bit-identical to off."""
+    k, eps = 4, 0.10
+    hga = tiny_hg.arrays()
+    parts = _population(tiny_hg, k, eps, seed=7)[:3]
+    rng = np.random.default_rng(0)
+    ewo = np.zeros(hga.m_pad, np.float32)
+    ewo[: tiny_hg.m] = tiny_hg.edge_weights * (
+        1.0 + 0.1 * rng.integers(0, 2, tiny_hg.m))
+    res = {p: refine.lp_refine_population(
+        hga, [q.copy() for q in parts], k, eps, max_iters=6,
+        edge_weight_override=refine.jnp.asarray(ewo), shard=p)
+        for p in ("off", "mesh")}
+    np.testing.assert_array_equal(res["mesh"][0], res["off"][0])
+    np.testing.assert_array_equal(res["mesh"][1], res["off"][1])
+
+
+def test_ring_partners_matches_roll(monkeypatch):
+    arr = np.arange(8 * 6, dtype=np.int32).reshape(8, 6)
+    want = np.roll(arr, -1, axis=0)
+    for p in popshard.POP_SHARD_PATHS:
+        monkeypatch.setenv("REPRO_POP_SHARD", p)
+        np.testing.assert_array_equal(popshard.ring_partners(arr), want)
+    # indivisible population falls back to the host roll, same answer
+    monkeypatch.setenv("REPRO_POP_SHARD", "mesh")
+    arr5 = arr[:5]
+    np.testing.assert_array_equal(popshard.ring_partners(arr5),
+                                  np.roll(arr5, -1, axis=0))
+
+
+# --------------------------------------------------------------------------
+# placement caches (the cap re-ship regression, satellite of ISSUE 5)
+# --------------------------------------------------------------------------
+def test_cap_placement_cached(tiny_hg):
+    import jax
+    hga = tiny_hg.arrays()
+    dev = jax.local_devices()[0]
+    c1 = refine._cap_for(hga, 4, 0.1, dev)
+    c2 = refine._cap_for(hga, 4, 0.1, dev)
+    assert c1 is c2, "cap placement must be cached per (level, device)"
+    # distinct (k, eps) are distinct caps
+    c3 = refine._cap_for(hga, 8, 0.1, dev)
+    assert c3 is not c1
+    # the raw (unplaced) value is cached too
+    assert refine._cap_for(hga, 4, 0.1) is refine._cap_for(hga, 4, 0.1)
+
+
+def test_hga_mesh_placement_cached(tiny_hg):
+    hga = tiny_hg.arrays()
+    rep = popshard.replicated(popshard.pop_mesh())
+    h1 = popshard.device_put_cached(hga, rep)
+    h2 = popshard.device_put_cached(hga, rep)
+    assert h1 is h2, "replicated structure must ship once per (level, mesh)"
+    # refine's legacy name is the same cache
+    assert refine._device_put_cached is popshard.device_put_cached
+
+
+# --------------------------------------------------------------------------
+# acceptance bar: 8 forced host devices, subprocess-isolated so it runs
+# identically from the single-device tier-1 lane and the multidevice lane
+# --------------------------------------------------------------------------
+@pytest.mark.slow
+def test_mesh_parity_8_devices_end_to_end():
+    code = """
+    import numpy as np, json
+    import jax
+    assert len(jax.local_devices()) == 8, jax.local_devices()
+    from repro.core import metrics, refine
+    from repro.core.mutate import mutate_population
+    from repro.data.hypergraphs import _modular_netlist
+    hg = _modular_netlist(400, 560, seed=11, n_modules=8, p_local=0.8,
+                          fanout_tail=1.5)
+    hga = hg.arrays()
+    k, eps, alpha = 8, 0.08, 5
+    rng = np.random.default_rng(3)
+    parts = [refine.rebalance(hg.vertex_weights,
+                              rng.integers(0, k, hg.n).astype(np.int32),
+                              k, eps) for _ in range(alpha)]
+    out = {}
+    for path in ("off", "chunk", "mesh"):
+        lp = refine.lp_refine_population(
+            hga, [p.copy() for p in parts], k, eps, max_iters=6,
+            shard=path)
+        fm = refine.fm_refine_population(
+            hga, [p.copy() for p in parts], k, eps, shard=path)
+        base, _ = refine.lp_refine(hga, parts[0].copy(), k, eps,
+                                   max_iters=2)
+        mp = np.stack([np.asarray(base)[: hg.n]] * 3)
+        cuts = [float(metrics.cutsize_jit(
+            hga, refine.pad_part(p, hga.n_pad), k)) for p in mp]
+        mu = mutate_population(hg, mp, cuts, k, eps, seed=1, shard=path)
+        out[path] = dict(
+            lp_parts=np.asarray(lp[0]).tolist(), lp_cuts=list(lp[1]),
+            fm_parts=np.asarray(fm[0]).tolist(), fm_cuts=list(fm[1]),
+            mu_parts=np.asarray(mu[0]).tolist(), mu_cuts=list(mu[1]))
+    eq = {p: all(out[p][f] == out["off"][f] for f in out["off"])
+          for p in ("chunk", "mesh")}
+    print(json.dumps(eq))
+    """
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["JAX_PLATFORMS"] = "cpu"
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    env.pop("REPRO_POP_SHARD", None)  # paths forced via shard= below
+    r = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                       capture_output=True, text=True, timeout=560,
+                       env=env)
+    assert r.returncode == 0, r.stderr[-2000:]
+    eq = json.loads(r.stdout.strip().splitlines()[-1])
+    assert eq["mesh"], "mesh path diverged from single-device engine"
+    assert eq["chunk"], "chunk path diverged from single-device engine"
+
+
+@pytest.mark.slow
+def test_population_ring_on_pop_model_mesh():
+    """The §6 ring operators run on the SAME ("pop", "model") mesh the
+    refinement engine shards over (make_local_population_step)."""
+    code = """
+    import numpy as np, jax, jax.numpy as jnp, json
+    from repro.core import metrics, refine
+    from repro.core.population import make_local_population_step
+    from repro.jaxcompat import use_mesh
+    from repro.data.hypergraphs import _modular_netlist
+    hg = _modular_netlist(600, 800, seed=9, n_modules=8, p_local=0.8,
+                          fanout_tail=1.5)
+    hga = hg.arrays()
+    k, eps = 8, 0.08
+    step, mesh = make_local_population_step(n=hg.n, m=hg.m, k=k, eps=eps,
+                                            refine_rounds=3)
+    assert mesh.shape["pop"] == 8 and mesh.shape["model"] == 1
+    rng = np.random.default_rng(0)
+    parts = np.zeros((8, hga.n_pad), np.int32)
+    for i in range(8):
+        parts[i, :hg.n] = refine.rebalance(
+            hg.vertex_weights, rng.integers(0, k, hg.n).astype(np.int32),
+            k, eps)
+    with use_mesh(mesh):
+        p2 = jnp.asarray(parts)
+        first = None
+        for it in range(3):
+            p2, cuts = step(hga.pin_vertex, hga.pin_edge,
+                            hga.vertex_weights, hga.edge_weights,
+                            hga.edge_sizes, p2)
+            if first is None:
+                first = float(np.asarray(cuts).mean())
+    final = float(np.asarray(cuts).mean())
+    ok = all(bool(metrics.is_balanced(
+        hga, jnp.asarray(np.asarray(p2)[i]), k, eps)) for i in range(8))
+    print(json.dumps({'first': first, 'final': final, 'balanced': ok}))
+    """
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["JAX_PLATFORMS"] = "cpu"
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    r = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                       capture_output=True, text=True, timeout=560,
+                       env=env)
+    assert r.returncode == 0, r.stderr[-2000:]
+    out = json.loads(r.stdout.strip().splitlines()[-1])
+    assert out["balanced"]
+    assert out["final"] <= out["first"]
