@@ -27,6 +27,7 @@ from .hypergraph import Hypergraph
 from .coarsen import recombination_thresholds
 from .dcoarsen import build_hierarchy
 from .initial_partition import initial_partition_population
+from . import instances as instances_mod
 from . import refine as refine_mod
 from . import metrics
 from .recombine import ring_recombination
@@ -167,3 +168,117 @@ def impart_partition(hg: Hypergraph, cfg: ImpartConfig) -> ImpartResult:
         part=np.asarray(part, np.int32), cut=float(cut),
         population_cuts=[float(c) for c in cuts], trace=trace,
         wall_s=time.perf_counter() - t0, levels=hier.sizes())
+
+
+def impart_partition_instances(hgs: List[Hypergraph],
+                               cfgs: List[ImpartConfig],
+                               grid: Optional[List[int]] = None
+                               ) -> List[ImpartResult]:
+    """``impart_partition`` for a batch of INDEPENDENT requests
+    (DESIGN.md §12): every request keeps its own hierarchy, population,
+    recombination thresholds and mutation events (host work, identical
+    seeding), but the refinement — where the engine spends its time —
+    runs grouped: the requests walk their uncoarsening ladders in
+    lockstep, and at each step all current levels that share a shape
+    bucket refine as one ``[instance, alpha, n_pad]`` dispatch through
+    ``instances.refine_grouped``.
+
+    Per-request results are bit-identical to calling
+    ``impart_partition(hg, cfg)`` alone: the grouped refinement
+    reproduces ``refine_population`` lane-for-lane, everything else is
+    the same per-request code path.  ``alpha`` and ``lp_iters`` must
+    agree across configs (they shape the shared dispatch);
+    ``time_budget_s`` is unsupported here (its fast-forward depends on
+    wall time, which batching would change).
+    """
+    if len(hgs) != len(cfgs):
+        raise ValueError("one config per hypergraph required")
+    if len({(c.alpha, c.lp_iters, c.fm_node_limit) for c in cfgs}) > 1:
+        raise ValueError("instance batching requires equal alpha / "
+                         "lp_iters / fm_node_limit across configs")
+    if any(c.time_budget_s for c in cfgs):
+        raise ValueError("time_budget_s is unsupported in the instance "
+                         "driver (wall-time fast-forward is not "
+                         "batch-invariant); solve those solo")
+    t0 = time.perf_counter()
+    nI = len(hgs)
+    st = []  # per-request driver state
+    for hg, cfg in zip(hgs, cfgs):
+        hier = build_hierarchy(
+            hg, cfg.k, seed=cfg.seed,
+            contraction_limit_factor=cfg.contraction_limit_factor)
+        num = hier.num_levels
+        parts, cuts = initial_partition_population(
+            hier.level_host(num - 1), cfg.k, cfg.eps,
+            seeds=[cfg.seed * 101 + i for i in range(cfg.alpha)],
+            tries_per_strategy=1, hga=hier.level_arrays(num - 1))
+        n_c = hier.level_n(num - 1)
+        st.append(dict(
+            hier=hier, parts=parts, cuts=cuts, next_thr=0,
+            thresholds=recombination_thresholds(hg.n, n_c, cfg.beta),
+            trace=[(n_c, list(cuts), "init")]))
+    fm_limit = cfgs[0].fm_node_limit
+    lp_iters = cfgs[0].lp_iters
+
+    max_levels = max(s["hier"].num_levels for s in st)
+    for t in range(max_levels):
+        step_idx, entries = [], []
+        for i, s in enumerate(st):
+            hier = s["hier"]
+            if t >= hier.num_levels:
+                continue
+            li = hier.num_levels - 1 - t
+            if li < hier.num_levels - 1:
+                s["parts"] = hier.project_pop(s["parts"], li + 1)
+            entries.append((hier.level_arrays(li), s["parts"],
+                            cfgs[i].k, cfgs[i].eps))
+            step_idx.append(i)
+        outs = instances_mod.refine_grouped(
+            entries, grid=grid, fm_node_limit=fm_limit,
+            max_iters=lp_iters, shard=cfgs[0].pop_shard)
+        for (rp, rc), i in zip(outs, step_idx):
+            s, cfg, hier = st[i], cfgs[i], st[i]["hier"]
+            li = hier.num_levels - 1 - t
+            n_li = hier.level_n(li)
+            s["parts"], s["cuts"] = rp, rc
+            s["trace"].append((n_li, list(rc), "refine"))
+            # the memetic events stay per-request (irregular host
+            # overlay work), with the exact solo seeding
+            while (s["next_thr"] < cfg.beta
+                   and n_li >= s["thresholds"][s["next_thr"]] - 1e-9
+                   and cfg.recombination_enabled):
+                lv_host = hier.level_host(li)
+                s["parts"], s["cuts"] = ring_recombination(
+                    lv_host, np.asarray(s["parts"])[:, : n_li],
+                    s["cuts"], cfg.k, cfg.eps,
+                    seed=cfg.seed * 31 + s["next_thr"],
+                    shard=cfg.pop_shard)
+                s["trace"].append(
+                    (n_li, list(s["cuts"]), f"recombine@{s['next_thr']}"))
+                if cfg.mutation_enabled:
+                    s["parts"], s["cuts"] = mutate_population(
+                        lv_host, s["parts"], s["cuts"], cfg.k, cfg.eps,
+                        threshold=cfg.similarity_threshold,
+                        mu=cfg.mutation_mu,
+                        seed=cfg.seed * 17 + s["next_thr"],
+                        path=cfg.mutation_path, shard=cfg.pop_shard)
+                    s["trace"].append(
+                        (n_li, list(s["cuts"]), f"mutate@{s['next_thr']}"))
+                s["next_thr"] += 1
+
+    results = []
+    for i, (hg, cfg, s) in enumerate(zip(hgs, cfgs, st)):
+        parts = np.asarray(s["parts"])
+        cuts = s["cuts"]
+        best = int(np.argmin(cuts))
+        part, cut = parts[best][: hg.n], float(cuts[best])
+        for v in range(cfg.final_vcycles):
+            part, cut = vcycle(hg, part, cfg.k, cfg.eps,
+                               seed=cfg.seed * 997 + v)
+            s["trace"].append((hg.n, [cut], f"final-vcycle@{v}"))
+        results.append(ImpartResult(
+            part=np.asarray(part, np.int32), cut=float(cut),
+            population_cuts=[float(c) for c in cuts], trace=s["trace"],
+            wall_s=time.perf_counter() - t0,
+            levels=s["hier"].sizes()))
+    return results

@@ -1,0 +1,486 @@
+"""Instance axis: batch INDEPENDENT partition requests through the one
+compiled refinement engine (DESIGN.md §12).
+
+PRs 1-5 batched the *population* (alpha) axis — one hypergraph, many
+candidate solutions.  This module adds the axis above it: many
+hypergraphs, each with its own population, refined together as
+``[instance, alpha, n_pad]`` stacks.  ``HypergraphArrays`` already keeps
+its true sizes ``n``/``m`` as traced pytree LEAVES, so stacking the
+structure leaves over a leading instance axis and ``jax.vmap``-ing the
+existing population implementations over it is exact: every per-lane
+mask (``arange(n_pad) < n``, ghost rows, balance caps) becomes
+per-instance for free.
+
+Shape buckets.  Instances group by ``(n_pad bucket, k bucket)`` —
+the same pow2 rebucketing the device coarsener uses
+(``hypergraph._round_pow2`` / ``dcoarsen._rebucket_jit``) — and a group
+stacks after re-padding every leaf to the group maximum.  Re-padding is
+answer-preserving: padded vertices carry zero weight and are never
+proposed, padded edges carry zero weight and zero pins, old ghost slots
+stay inert, and acceptance ranking puts non-proposing rows after every
+proposer (stable sort), so a request refined inside a bigger bucket
+follows the exact trajectory of its natural-shape solo run.  The one
+shape-derived *parameter* — the FM step budget ``min(n_pad, 1024)`` —
+is captured per instance at stack time from the ORIGINAL arrays and
+threaded through the pass as a traced scalar, so bucketing never
+changes a trip count.
+
+Per-instance k/eps.  The bucket's gain matrices are [n_pad, k_pad] with
+``k_pad`` the pow2 bucket; a traced per-instance ``k_live`` masks
+columns ``j >= k_live`` to NEG.  Row-major flat argmax order over the
+masked matrix equals the solo [n_pad, k_live] order, so proposals, FM
+move sequences and tie-breaks are bit-identical.  eps enters only
+through the per-instance balance cap scalar.
+
+Convergence.  Each instance keeps its own trip counts: under ``vmap`` a
+``lax.while_loop`` lane whose cond turns False is frozen (body computed,
+selected away), so an instance that converges early sits inert in the
+dispatch while the others finish — exactly the semantics of running it
+alone.  Within a round, already-improved alpha lanes freeze through the
+``live`` mask instead of compacting out of the batch (per-lane
+trajectories are invariant to which lanes share a dispatch).
+
+Sharding (``REPRO_POP_SHARD``, same dispatcher as the population axis):
+``mesh`` shards the INSTANCE axis over "pop" — every stacked leaf is
+P("pop"), no collectives (instances are fully independent); ``chunk``
+slices the instance axis over ``jax.local_devices()`` with async
+dispatch; ``off`` is one dispatch.  All paths bit-identical per
+instance (asserted by ``tests/test_service.py``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import lru_cache, partial
+from typing import List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from ..jaxcompat import shard_map
+from .hypergraph import HypergraphArrays, _round_pow2
+from . import metrics
+from . import popshard
+from . import refine as refine_mod
+
+
+def k_bucket(k: int) -> int:
+    """pow2 bucket for the block count (floor 2): instances with
+    different k share a compiled engine at ``k_pad`` and mask with
+    ``k_live``."""
+    return _round_pow2(int(k), floor=2)
+
+
+def bucket_n_pad(n_pad: int, grid: Optional[Sequence[int]] = None) -> int:
+    """The stacking bucket for a vertex padding.  ``grid`` (the
+    ``REPRO_SERVE_BUCKETS`` knob) lists allowed bucket sizes; the
+    smallest grid entry >= n_pad wins, so requests of mixed sizes share
+    buckets.  Without a grid (or above its top entry) the natural pow2
+    padding is its own bucket."""
+    if grid:
+        for g in sorted(int(x) for x in grid):
+            if g >= n_pad:
+                return g
+    return int(n_pad)
+
+
+def group_key(hga: HypergraphArrays, k: int,
+              grid: Optional[Sequence[int]] = None) -> Tuple[int, int]:
+    """Dispatch-group key for one instance: (n_pad bucket, k bucket)."""
+    return (bucket_n_pad(hga.n_pad, grid), k_bucket(k))
+
+
+def _repad(h: HypergraphArrays, n_pad: int, m_pad: int, p_pad: int
+           ) -> HypergraphArrays:
+    """Extend a level's padding to the bucket target.  The old ghost
+    vertex/edge keep zero weight in the extended arrays, so pins that
+    point at them stay inert; new pad pins point at the old ghosts too.
+    ``incident`` is dropped (the stacked engine is XLA-only)."""
+    if (h.n_pad, h.m_pad, h.p_pad) == (n_pad, m_pad, p_pad):
+        return dataclasses.replace(h, incident=None)
+    ghost_v = jnp.int32(h.n_pad - 1)
+    ghost_e = jnp.int32(h.m_pad - 1)
+    pv = jnp.concatenate(
+        [h.pin_vertex, jnp.full(p_pad - h.p_pad, ghost_v, jnp.int32)])
+    pe = jnp.concatenate(
+        [h.pin_edge, jnp.full(p_pad - h.p_pad, ghost_e, jnp.int32)])
+    vw = jnp.concatenate(
+        [h.vertex_weights, jnp.zeros(n_pad - h.n_pad, jnp.float32)])
+    ew = jnp.concatenate(
+        [h.edge_weights, jnp.zeros(m_pad - h.m_pad, jnp.float32)])
+    es = jnp.concatenate(
+        [h.edge_sizes, jnp.zeros(m_pad - h.m_pad, jnp.int32)])
+    return HypergraphArrays(pin_vertex=pv, pin_edge=pe, vertex_weights=vw,
+                            edge_weights=ew, edge_sizes=es, n=h.n, m=h.m,
+                            incident=None)
+
+
+@dataclasses.dataclass
+class InstanceBatch:
+    """A stacked shape bucket: structure leaves [I, ...], per-instance
+    k/cap/step masks.  Never call shape properties on ``hga`` directly —
+    consume it under ``jax.vmap`` (each lane sees an unbatched level)."""
+    hga: HypergraphArrays        # leaves stacked over the instance axis
+    k_pad: int                   # static block-count bucket
+    k_live: jnp.ndarray          # [I] int32 true k per instance
+    cap: jnp.ndarray             # [I] f32 per-instance balance cap
+    fm_steps: jnp.ndarray        # [I] int32 solo FM budget min(n_pad,1024)
+    ns: Tuple[int, ...]          # host true vertex counts
+    ks: Tuple[int, ...]          # host true block counts
+    orig_n_pads: Tuple[int, ...]  # natural paddings before bucketing
+
+    @property
+    def n_instances(self) -> int:
+        return len(self.ns)
+
+    @property
+    def n_pad(self) -> int:
+        return int(self.hga.vertex_weights.shape[1])
+
+
+def stack_instances(hgas: Sequence[HypergraphArrays], ks: Sequence[int],
+                    epss: Sequence[float],
+                    grid: Optional[Sequence[int]] = None) -> InstanceBatch:
+    """Stack independent levels into one bucket batch.  Targets are the
+    per-axis maxima over the group (``grid`` rounds the vertex axis), so
+    any mix of natural pow2 paddings stacks; each instance is re-padded
+    inertly first."""
+    if not (len(hgas) == len(ks) == len(epss)):
+        raise ValueError("hgas/ks/epss length mismatch")
+    n_pad = bucket_n_pad(max(h.n_pad for h in hgas), grid)
+    m_pad = max(h.m_pad for h in hgas)
+    p_pad = max(h.p_pad for h in hgas)
+    k_pad = max(k_bucket(k) for k in ks)
+    # caps and FM budgets come from the ORIGINAL arrays: the cap cache
+    # keys on the live level object, and the step budget must match what
+    # a solo run at the natural padding would use
+    cap = jnp.stack([jnp.asarray(refine_mod._cap_for(h, k, eps),
+                                 jnp.float32)
+                     for h, k, eps in zip(hgas, ks, epss)])
+    fm_steps = jnp.asarray([min(h.n_pad, 1024) for h in hgas], jnp.int32)
+    rep = [_repad(h, n_pad, m_pad, p_pad) for h in hgas]
+    stacked = HypergraphArrays(
+        pin_vertex=jnp.stack([r.pin_vertex for r in rep]),
+        pin_edge=jnp.stack([r.pin_edge for r in rep]),
+        vertex_weights=jnp.stack([r.vertex_weights for r in rep]),
+        edge_weights=jnp.stack([r.edge_weights for r in rep]),
+        edge_sizes=jnp.stack([r.edge_sizes for r in rep]),
+        n=jnp.stack([jnp.asarray(r.n, jnp.int32) for r in rep]),
+        m=jnp.stack([jnp.asarray(r.m, jnp.int32) for r in rep]),
+        incident=None)
+    return InstanceBatch(
+        hga=stacked, k_pad=k_pad,
+        k_live=jnp.asarray([int(k) for k in ks], jnp.int32),
+        cap=cap, fm_steps=fm_steps,
+        ns=tuple(int(jnp.asarray(h.n)) if not isinstance(h.n, (int,
+                 np.integer)) else int(h.n) for h in hgas),
+        ks=tuple(int(k) for k in ks),
+        orig_n_pads=tuple(h.n_pad for h in hgas))
+
+
+def stack_parts(parts_list: Sequence, n_pad: int) -> np.ndarray:
+    """[A, n_i]-per-instance populations -> one [I, A, n_pad] stack."""
+    rows = [np.asarray(refine_mod.pad_parts(p, n_pad), np.int32)
+            for p in parts_list]
+    alphas = {r.shape[0] for r in rows}
+    if len(alphas) != 1:
+        raise ValueError(f"instances must share alpha, got {alphas}")
+    return np.stack(rows)
+
+
+# --------------------------------------------------------------------------
+# batched dispatch units (vmap the population impls over the instance axis)
+# --------------------------------------------------------------------------
+def _lp_attempt_instances_impl(hga, parts, cuts, fracs, live, attempts,
+                               k: int, cap, k_live):
+    def one(h, p, c, f, lv, att, cp, kl):
+        return refine_mod._lp_attempt_population_impl(
+            h, p, c, f, att, k, cp, live=lv, k_live=kl)
+    return jax.vmap(one)(hga, parts, cuts, fracs, live, attempts, cap,
+                         k_live)
+
+
+_lp_attempt_instances = partial(jax.jit, static_argnames=("k",))(
+    _lp_attempt_instances_impl)
+
+
+@lru_cache(maxsize=32)
+def _lp_attempt_instances_mesh(mesh, k: int):
+    """Instance-axis LP attempt loop over the ("pop", "model") mesh:
+    EVERY leaf — structure included — shards its instance axis over
+    "pop".  Instances are independent, so there is no collective at all;
+    each shard runs its instances' exact solo trip counts."""
+    def body(hga, parts, cuts, fracs, live, attempts, cap, k_live):
+        return _lp_attempt_instances_impl(hga, parts, cuts, fracs, live,
+                                          attempts, k, cap, k_live)
+
+    fn = shard_map(body, mesh,
+                   in_specs=(P("pop"),) * 8,
+                   out_specs=(P("pop"),) * 5)
+    return jax.jit(fn)
+
+
+def _fm_pass_instances_impl(hga, parts, k: int, cap, steps, k_live):
+    def one(h, p, cp, st, kl):
+        return refine_mod._fm_pass_population_impl(h, p, k, cp, st,
+                                                   k_live=kl)
+    return jax.vmap(one)(hga, parts, cap, steps, k_live)
+
+
+_fm_pass_instances = partial(jax.jit, static_argnames=("k",))(
+    _fm_pass_instances_impl)
+
+
+@lru_cache(maxsize=32)
+def _fm_pass_instances_mesh(mesh, k: int):
+    def body(hga, parts, cap, steps, k_live):
+        return _fm_pass_instances_impl(hga, parts, k, cap, steps, k_live)
+
+    fn = shard_map(body, mesh,
+                   in_specs=(P("pop"),) * 5,
+                   out_specs=(P("pop"),) * 2)
+    return jax.jit(fn)
+
+
+@partial(jax.jit, static_argnames=("k",))
+def _cutsize_instances(hga, parts, k: int, k_live):
+    del k_live  # blocks >= k_live are empty; the k_pad sum is exact
+    return jax.vmap(lambda h, ps: jax.vmap(
+        lambda p: metrics.cutsize(h, p, k))(ps))(hga, parts)
+
+
+def _pad_i(x, mult: int):
+    """Mirror instance 0 up to a multiple of ``mult`` (the pad_rows
+    pattern): mirror lanes repeat instance 0's exact computation, so
+    trip counts and results are unchanged; callers slice them off."""
+    r = x.shape[0] % mult
+    if r == 0:
+        return x
+    reps = jnp.repeat(x[:1], mult - r, axis=0)
+    return jnp.concatenate([x, reps], axis=0)
+
+
+def _take_i(batch: InstanceBatch, idx) -> InstanceBatch:
+    """Slice an instance subset out of a stacked batch (host indices)."""
+    idx = np.asarray(idx)
+    j = jnp.asarray(idx)
+    return InstanceBatch(
+        hga=jax.tree_util.tree_map(lambda x: x[j], batch.hga),
+        k_pad=batch.k_pad, k_live=batch.k_live[j], cap=batch.cap[j],
+        fm_steps=batch.fm_steps[j],
+        ns=tuple(batch.ns[i] for i in idx),
+        ks=tuple(batch.ks[i] for i in idx),
+        orig_n_pads=tuple(batch.orig_n_pads[i] for i in idx))
+
+
+# --------------------------------------------------------------------------
+# host loops (per-instance trajectories == the solo population loops)
+# --------------------------------------------------------------------------
+def _route(shard: Optional[str]) -> str:
+    return popshard.resolve(shard)
+
+
+def _chunk_bounds(n: int, ndev: int) -> List[int]:
+    return [n * d // ndev for d in range(ndev + 1)]
+
+
+def _dispatch_lp(batch: InstanceBatch, parts, cuts32, fracs, live, att,
+                 path: str):
+    """One grouped LP attempt dispatch; returns numpy
+    (parts, cuts, improved, fracs, used) stacked [I, ...]."""
+    k = batch.k_pad
+    args = (jnp.asarray(parts), jnp.asarray(cuts32), jnp.asarray(fracs),
+            jnp.asarray(live), jnp.asarray(att, jnp.int32))
+    if path == "mesh":
+        mesh = popshard.pop_mesh()
+        npop = mesh.shape["pop"]
+        sh = popshard.pop_sharding(mesh)
+        nI = parts.shape[0]
+        put = lambda x: jax.device_put(_pad_i(x, npop), sh)
+        hga_p = jax.tree_util.tree_map(put, batch.hga)
+        fn = _lp_attempt_instances_mesh(mesh, k)
+        out = fn(hga_p, *(put(a) for a in args), put(batch.cap),
+                 put(batch.k_live))
+        return tuple(np.asarray(o)[:nI] for o in out)
+    if path == "chunk":
+        devs = jax.local_devices()
+        nI = parts.shape[0]
+        ndev = min(len(devs), nI)
+        if ndev > 1:
+            bounds = _chunk_bounds(nI, ndev)
+            outs = []
+            for di in range(ndev):
+                lo, hi = bounds[di], bounds[di + 1]
+                put = lambda x: jax.device_put(x[lo:hi], devs[di])
+                outs.append(_lp_attempt_instances(
+                    jax.tree_util.tree_map(put, batch.hga),
+                    *(put(a) for a in args),
+                    k=k, cap=put(batch.cap), k_live=put(batch.k_live)))
+            return tuple(np.concatenate([np.asarray(o[i]) for o in outs])
+                         for i in range(5))
+    out = _lp_attempt_instances(batch.hga, *args, k=k, cap=batch.cap,
+                                k_live=batch.k_live)
+    return tuple(np.asarray(o) for o in out)
+
+
+def _dispatch_fm(batch: InstanceBatch, parts, path: str):
+    k = batch.k_pad
+    if path == "mesh":
+        mesh = popshard.pop_mesh()
+        npop = mesh.shape["pop"]
+        sh = popshard.pop_sharding(mesh)
+        nI = parts.shape[0]
+        fn = _fm_pass_instances_mesh(mesh, k)
+        out = fn(jax.device_put(jax.tree_util.tree_map(
+                     lambda x: _pad_i(x, npop), batch.hga), sh),
+                 jax.device_put(_pad_i(jnp.asarray(parts), npop), sh),
+                 jax.device_put(_pad_i(batch.cap, npop), sh),
+                 jax.device_put(_pad_i(batch.fm_steps, npop), sh),
+                 jax.device_put(_pad_i(batch.k_live, npop), sh))
+        return (np.asarray(out[0])[:nI],
+                np.asarray(out[1])[:nI].astype(np.float64))
+    if path == "chunk":
+        devs = jax.local_devices()
+        nI = parts.shape[0]
+        ndev = min(len(devs), nI)
+        if ndev > 1:
+            bounds = _chunk_bounds(nI, ndev)
+            outs = []
+            for di in range(ndev):
+                lo, hi = bounds[di], bounds[di + 1]
+                put = lambda x: jax.device_put(x[lo:hi], devs[di])
+                outs.append(_fm_pass_instances(
+                    jax.tree_util.tree_map(put, batch.hga),
+                    put(jnp.asarray(parts)), k=k, cap=put(batch.cap),
+                    steps=put(batch.fm_steps), k_live=put(batch.k_live)))
+            return (np.concatenate([np.asarray(o[0]) for o in outs]),
+                    np.concatenate([np.asarray(o[1])
+                                    for o in outs]).astype(np.float64))
+    out = _fm_pass_instances(batch.hga, jnp.asarray(parts), k=k,
+                             cap=batch.cap, steps=batch.fm_steps,
+                             k_live=batch.k_live)
+    return np.asarray(out[0]), np.asarray(out[1], np.float64)
+
+
+def lp_refine_instances(batch: InstanceBatch, parts, max_iters: int = 24,
+                        patience: int = 3, shard: Optional[str] = None
+                        ) -> Tuple[np.ndarray, np.ndarray]:
+    """``lp_refine_population`` for a stacked bucket: per-instance stall
+    counters, per-instance attempt budgets, improved lanes frozen in
+    place via the ``live`` mask.  Returns (parts [I, A, n_pad],
+    cuts [I, A] f64), each instance bit-identical to its solo run."""
+    path = _route(shard)
+    parts = np.asarray(parts, np.int32)
+    nI, alpha = parts.shape[:2]
+    cuts = np.asarray(_cutsize_instances(batch.hga, jnp.asarray(parts),
+                                         batch.k_pad, batch.k_live),
+                      np.float64)
+    stall = np.zeros((nI, alpha), np.int32)
+    done = np.zeros((nI, alpha), bool)
+    for _ in range(max_iters):
+        if done.all():
+            break
+        active = ~done
+        improved_round = np.zeros((nI, alpha), bool)
+        fracs = np.ones((nI, alpha), np.float32)
+        live = active.copy()
+        remaining = np.full(nI, 5, np.int64)
+        while True:
+            act = live.any(axis=1) & (remaining > 0)
+            if not act.any():
+                break
+            att = np.where(act, np.maximum(remaining, 0), 0)
+            new_parts, new_cuts, improved, new_fracs, used = _dispatch_lp(
+                batch, parts, cuts.astype(np.float32), fracs, live, att,
+                path)
+            parts = np.where(live[:, :, None], new_parts, parts)
+            cuts = np.where(live, new_cuts.astype(np.float64), cuts)
+            fracs = np.where(live, new_fracs, fracs)
+            improved = improved.astype(bool) & live
+            improved_round |= improved
+            remaining = remaining - np.asarray(used, np.int64)
+            live = live & ~improved
+        stall = np.where(active,
+                         np.where(improved_round, 0, stall + 1), stall)
+        done |= stall >= patience
+    return parts, cuts
+
+
+def fm_refine_instances(batch: InstanceBatch, parts,
+                        max_passes: int = 8, shard: Optional[str] = None
+                        ) -> Tuple[np.ndarray, np.ndarray]:
+    """``fm_refine_population`` for a stacked bucket.  Converged lanes
+    are re-dispatched but inert (an unimproving FM pass repeats its
+    rejected candidate deterministically), so per-lane acceptance
+    decisions match the compacting solo loop exactly."""
+    path = _route(shard)
+    parts = np.asarray(parts, np.int32)
+    nI, alpha = parts.shape[:2]
+    cuts = np.asarray(_cutsize_instances(batch.hga, jnp.asarray(parts),
+                                         batch.k_pad, batch.k_live),
+                      np.float64)
+    done = np.zeros((nI, alpha), bool)
+    for _ in range(max_passes):
+        if done.all():
+            break
+        cands, cs = _dispatch_fm(batch, parts, path)
+        take = (cs < cuts - 1e-6) & ~done
+        parts = np.where(take[:, :, None], cands, parts)
+        cuts = np.where(take, cs, cuts)
+        done |= ~take
+    return parts, cuts
+
+
+def refine_instances(batch: InstanceBatch, parts,
+                     fm_node_limit: int = 4096, max_iters: int = 24,
+                     patience: int = 3, shard: Optional[str] = None
+                     ) -> Tuple[np.ndarray, np.ndarray]:
+    """Two-tier refinement for a stacked bucket, the instance-axis
+    mirror of ``refine.refine_population``: the LP tier covers every
+    instance; the FM tier runs on the sub-batch of instances whose true
+    n is within ``fm_node_limit`` (sliced out and written back), exactly
+    the per-instance decision the solo driver makes."""
+    parts, cuts = lp_refine_instances(batch, parts, max_iters=max_iters,
+                                      patience=patience, shard=shard)
+    fm_idx = [i for i, n in enumerate(batch.ns) if n <= fm_node_limit]
+    if fm_idx:
+        if len(fm_idx) == batch.n_instances:
+            parts, cuts = fm_refine_instances(batch, parts, shard=shard)
+        else:
+            sub = _take_i(batch, fm_idx)
+            sp, sc = fm_refine_instances(sub, parts[fm_idx], shard=shard)
+            parts[fm_idx] = sp
+            cuts[fm_idx] = sc
+    return parts, cuts
+
+
+def refine_grouped(entries, grid: Optional[Sequence[int]] = None,
+                   fm_node_limit: int = 4096, max_iters: int = 24,
+                   patience: int = 3, shard: Optional[str] = None
+                   ) -> List[Tuple[np.ndarray, np.ndarray]]:
+    """Refine a heterogeneous set of instances by bucketed stacks.
+
+    ``entries``: sequence of ``(hga, parts [A, n_pad_i], k, eps)``.
+    Returns per-entry ``(parts [A, n_pad_i], cuts [A])`` in input order,
+    each bit-identical to ``refine.refine_population`` on that entry
+    alone.  This is the dispatch unit the V-cycle drivers and the
+    partition service share.
+    """
+    groups: dict = {}
+    for i, (hga, _, k, _) in enumerate(entries):
+        groups.setdefault(group_key(hga, k, grid), []).append(i)
+    out: List = [None] * len(entries)
+    for idx in groups.values():
+        hgas = [entries[i][0] for i in idx]
+        ks = [entries[i][2] for i in idx]
+        epss = [entries[i][3] for i in idx]
+        batch = stack_instances(hgas, ks, epss, grid=grid)
+        parts = stack_parts([entries[i][1] for i in idx], batch.n_pad)
+        rp, rc = refine_instances(batch, parts,
+                                  fm_node_limit=fm_node_limit,
+                                  max_iters=max_iters, patience=patience,
+                                  shard=shard)
+        for j, i in enumerate(idx):
+            out[i] = (rp[j][:, : batch.orig_n_pads[j]], rc[j])
+    return out

@@ -30,6 +30,7 @@ the same global value) — asserted by ``tests/test_pop_shard.py`` and the
 """
 from __future__ import annotations
 
+import itertools
 import os
 import weakref
 from collections import OrderedDict
@@ -124,31 +125,60 @@ def pad_rows(arr: np.ndarray, mult: int) -> np.ndarray:
 # --------------------------------------------------------------------------
 # Mesh-driven placement cache
 # --------------------------------------------------------------------------
-# Placements of refinement inputs, keyed on (id(obj), device-or-sharding).
-# The chunked FM path used to re-ship the whole hypergraph to every
-# device on every call — once per pass per level.  A level's
-# HypergraphArrays object is stable across passes (``Hypergraph.arrays``
-# caches it), so the transfer happens once per (level, placement).  A
-# weakref guards against id() reuse after the level is garbage-collected.
-# The mesh path uses the same cache with a NamedSharding key: replicated
-# structure ships once per (level, mesh).
+# Placements of refinement inputs, keyed on (placement_token(obj),
+# device-or-sharding).  The chunked FM path used to re-ship the whole
+# hypergraph to every device on every call — once per pass per level.  A
+# level's HypergraphArrays object is stable across passes
+# (``Hypergraph.arrays`` caches it), so the transfer happens once per
+# (level, placement).  The mesh path uses the same cache with a
+# NamedSharding key: replicated structure ships once per (level, mesh).
+#
+# Keys go through a monotonic token, NOT a raw id(): CPython recycles
+# addresses, so a freed level's id can reappear on a brand-new object
+# before any finalizer has run, and an id-keyed cache would hand the new
+# level the dead level's device buffers.  ``placement_token`` validates
+# the id -> token entry against a live weakref on every lookup, so a
+# recycled id always mints a fresh token and stale placements can never
+# be returned — independent of finalizer timing.
+_TOKEN_COUNTER = itertools.count()
+_TOKEN_CACHE: dict = {}
+
+
+def placement_token(obj) -> int:
+    """A process-unique token for ``obj``, stable while ``obj`` is alive.
+
+    Two distinct objects never share a token, even if one's id() is
+    recycled from the other (the weakref check catches reuse and mints a
+    new token).  Used to key the placement cache and refine's cap cache.
+    """
+    key = id(obj)
+    hit = _TOKEN_CACHE.get(key)
+    if hit is not None:
+        ref, tok = hit
+        if ref() is obj:
+            return tok
+    tok = next(_TOKEN_COUNTER)
+    _TOKEN_CACHE[key] = (weakref.ref(obj), tok)
+    # housekeeping only — correctness never depends on this running
+    weakref.finalize(obj, _TOKEN_CACHE.pop, key, None)
+    return tok
+
+
 _PLACEMENT_CACHE: "OrderedDict[tuple, tuple]" = OrderedDict()
 _PLACEMENT_CACHE_MAX = 64
 
 
 def device_put_cached(obj, target):
-    """``jax.device_put(obj, target)`` memoised on ``(id(obj), target)``;
-    ``target`` is a Device or a NamedSharding (both hashable)."""
-    key = (id(obj), getattr(target, "id", target))
+    """``jax.device_put(obj, target)`` memoised on
+    ``(placement_token(obj), target)``; ``target`` is a Device or a
+    NamedSharding (both hashable)."""
+    key = (placement_token(obj), getattr(target, "id", target))
     hit = _PLACEMENT_CACHE.get(key)
     if hit is not None:
-        ref, placed = hit
-        if ref() is obj:
-            _PLACEMENT_CACHE.move_to_end(key)
-            return placed
-        del _PLACEMENT_CACHE[key]          # id() was recycled
+        _PLACEMENT_CACHE.move_to_end(key)
+        return hit
     placed = jax.device_put(obj, target)
-    _PLACEMENT_CACHE[key] = (weakref.ref(obj), placed)
+    _PLACEMENT_CACHE[key] = placed
     # release the device buffers as soon as the level dies, not when 64
     # newer placements eventually evict the entry
     weakref.finalize(obj, _PLACEMENT_CACHE.pop, key, None)

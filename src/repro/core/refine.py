@@ -112,13 +112,24 @@ def _with_weights(hga: HypergraphArrays,
 
 def _lp_round_from_gains(h: HypergraphArrays, part: jnp.ndarray, k: int,
                          cap: jnp.ndarray, frac: jnp.ndarray,
-                         gains: jnp.ndarray) -> jnp.ndarray:
+                         gains: jnp.ndarray,
+                         k_live: jnp.ndarray | None = None) -> jnp.ndarray:
     """Proposal + balanced acceptance given a precomputed gain matrix
     (the gain assembly is hoisted out so population callers can route it
-    through the batched kernels instead of vmapping a pallas_call)."""
+    through the batched kernels instead of vmapping a pallas_call).
+
+    ``k_live`` (optional traced scalar, instance axis, DESIGN.md §12):
+    blocks ``j >= k_live`` are masked to NEG so a k_live-way instance
+    refined inside a k-padded bucket proposes exactly the moves a solo
+    k=k_live run would — columns below k_live are untouched and argmax
+    tie-breaking over the row-major flat order is preserved, so the
+    trajectory is bit-identical.
+    """
     n_pad = h.n_pad
     own = jax.nn.one_hot(part, k, dtype=bool)
     gains = jnp.where(own, NEG, gains)
+    if k_live is not None:
+        gains = jnp.where(jnp.arange(k)[None, :] >= k_live, NEG, gains)
     best_j = jnp.argmax(gains, axis=-1).astype(jnp.int32)
     best_g = jnp.take_along_axis(gains, best_j[:, None], axis=-1)[:, 0]
 
@@ -158,7 +169,8 @@ def lp_round(hga: HypergraphArrays, part: jnp.ndarray, k: int,
 def _lp_round_population_impl(hga: HypergraphArrays, parts: jnp.ndarray,
                               k: int, cap: jnp.ndarray, fracs: jnp.ndarray,
                               edge_weight_override: jnp.ndarray | None = None,
-                              edge_weights_pop: jnp.ndarray | None = None
+                              edge_weights_pop: jnp.ndarray | None = None,
+                              k_live: jnp.ndarray | None = None
                               ) -> jnp.ndarray:
     """lp_round for all members: gains come from the batched dispatcher
     (one kernel launch for the population), the proposal/acceptance tail
@@ -172,7 +184,8 @@ def _lp_round_population_impl(hga: HypergraphArrays, parts: jnp.ndarray,
     gains = metrics._gain_matrix_population_impl(
         h, parts, k, ew_pop=edge_weights_pop)
     return jax.vmap(
-        lambda p, f, g: _lp_round_from_gains(h, p, k, cap, f, g))(
+        lambda p, f, g: _lp_round_from_gains(h, p, k, cap, f, g,
+                                             k_live=k_live))(
             parts, fracs, gains)
 
 
@@ -194,7 +207,9 @@ def _lp_attempt_population_impl(hga: HypergraphArrays, parts: jnp.ndarray,
                                 cap: jnp.ndarray,
                                 edge_weight_override=None,
                                 edge_weights_pop=None,
-                                pop_axis: str | None = None):
+                                pop_axis: str | None = None,
+                                live: jnp.ndarray | None = None,
+                                k_live: jnp.ndarray | None = None):
     """Device-resident LP attempt loop fused into one ``lax.while_loop``.
 
     Per member (mirroring the scalar ``lp_refine`` inner loop exactly):
@@ -215,6 +230,16 @@ def _lp_attempt_population_impl(hga: HypergraphArrays, parts: jnp.ndarray,
     batch would.  It is carried through the loop state (computed in the
     body) so the cond stays collective-free.
 
+    ``live`` (optional [alpha] bool, instance axis, DESIGN.md §12): lanes
+    with ``live=False`` never accept (their parts/cuts pass through
+    unchanged and they cannot raise the improvement flag).  The instance
+    tier uses this to freeze already-improved or converged lanes in
+    place instead of compacting them out of the dispatch — per-lane
+    trajectories are invariant to which other lanes share the batch, so
+    the results are identical to the compacted host loop.
+
+    ``k_live`` (optional traced scalar): see ``_lp_round_from_gains``.
+
     Returns ``(parts, cuts, improved, fracs, used)``; cuts are f32
     (bit-identical trajectories are guaranteed on integer-weight
     instances, as in the host loop this replaces).
@@ -227,13 +252,16 @@ def _lp_attempt_population_impl(hga: HypergraphArrays, parts: jnp.ndarray,
         parts, cuts, fracs, improved, _, t = carry
         cands = _lp_round_population_impl(hga, parts, k, cap, fracs,
                                           edge_weight_override,
-                                          edge_weights_pop)
+                                          edge_weights_pop,
+                                          k_live=k_live)
         if edge_weights_pop is None:
             cs = jax.vmap(lambda p: metrics.cutsize(hga, p, k))(cands)
         else:  # each member's acceptance cut on its own reweight
             cs = metrics._cutsize_population_weighted_impl(
                 hga, cands, edge_weights_pop, k)
         take = cs < cuts - 1e-6
+        if live is not None:
+            take = take & live
         parts = jnp.where(take[:, None], cands, parts)
         cuts = jnp.where(take, cs, cuts)
         fracs = jnp.where(take, fracs, fracs * 0.25)
@@ -436,7 +464,8 @@ def lp_refine_population(hga: HypergraphArrays, parts, k: int, eps: float,
 # sequential FM (scan) for coarse levels
 # --------------------------------------------------------------------------
 def _fm_pass_impl(hga: HypergraphArrays, part: jnp.ndarray, k: int,
-                  cap: jnp.ndarray, steps: int
+                  cap: jnp.ndarray, steps: int,
+                  k_live: jnp.ndarray | None = None
                   ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """One FM pass: up to ``steps`` single moves (negative gains allowed),
     returns the best prefix (partition + its cut).
@@ -447,6 +476,12 @@ def _fm_pass_impl(hga: HypergraphArrays, part: jnp.ndarray, k: int,
     exactly equivalent to the fixed-length scan it replaces, at a
     fraction of the cost.  Under ``vmap`` (the population path) the loop
     runs until ALL members are done; finished members' lanes are inert.
+
+    ``k_live`` (optional traced scalar, instance axis, DESIGN.md §12):
+    move targets ``j >= k_live`` are masked to NEG.  The flat argmax
+    over [n_pad, k] preserves the row-major (v, j) order of the
+    [n_pad, k_live] matrix a solo run would scan, so the selected move
+    sequence — and therefore the best prefix — is bit-identical.
     """
     n_pad = hga.n_pad
     valid = (jnp.arange(n_pad) < hga.n) & (hga.vertex_weights > 0)
@@ -466,6 +501,8 @@ def _fm_pass_impl(hga: HypergraphArrays, part: jnp.ndarray, k: int,
         own = jax.nn.one_hot(part, k, dtype=bool)
         feasible = (bw[None, :] + hga.vertex_weights[:, None]) <= cap + 1e-6
         score = jnp.where(own | ~feasible, NEG, gains)
+        if k_live is not None:
+            score = jnp.where(jnp.arange(k)[None, :] >= k_live, NEG, score)
         score = jnp.where((locked | ~valid)[:, None], NEG, score)
         flat = jnp.argmax(score)
         v = (flat // k).astype(jnp.int32)
@@ -511,14 +548,17 @@ _fm_pass = jax.jit(_fm_pass_impl, static_argnames=("k", "steps"))
 
 def _fm_pass_population_impl(hga: HypergraphArrays, parts: jnp.ndarray,
                              k: int, cap: jnp.ndarray, steps: int,
-                             edge_weights_pop: jnp.ndarray | None = None
+                             edge_weights_pop: jnp.ndarray | None = None,
+                             k_live: jnp.ndarray | None = None
                              ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     if edge_weights_pop is None:
         return jax.vmap(
-            lambda p: _fm_pass_impl(hga, p, k, cap, steps))(parts)
+            lambda p: _fm_pass_impl(hga, p, k, cap, steps,
+                                    k_live=k_live))(parts)
     return jax.vmap(
         lambda p, ew: _fm_pass_impl(metrics.member_arrays(hga, ew), p, k,
-                                    cap, steps))(parts, edge_weights_pop)
+                                    cap, steps, k_live=k_live))(
+                                        parts, edge_weights_pop)
 
 
 #: One FM pass for all members: a single [alpha]-batched move scan
@@ -577,24 +617,24 @@ def _population_shard_devices():
 # name for the regression tests.
 _device_put_cached = popshard.device_put_cached
 
-# Balance caps, keyed on (id(hga), k, eps): the cap is a pure function
-# of the level's total weight, so computing it once per level gives the
-# placement cache a STABLE object to key on — `fm_refine_population`
-# used to re-ship `cap` to every device on every call while carefully
-# caching the (much larger) hypergraph placements right next to it.
+# Balance caps, keyed on (popshard.placement_token(hga), k, eps): the
+# cap is a pure function of the level's total weight, so computing it
+# once per level gives the placement cache a STABLE object to key on —
+# `fm_refine_population` used to re-ship `cap` to every device on every
+# call while carefully caching the (much larger) hypergraph placements
+# right next to it.  The token (not a raw id()) makes the key immune to
+# CPython id reuse after a level is garbage-collected.
 _CAP_CACHE: dict = {}
 
 
 def _cap_for(hga: HypergraphArrays, k: int, eps: float, target=None):
     """The balance cap for (hga, k, eps), optionally placed on a device
     or sharding — both the scalar and the placements are cached."""
-    key = (id(hga), int(k), float(eps))
-    hit = _CAP_CACHE.get(key)
-    if hit is not None and hit[0]() is hga:
-        cap = hit[1]
-    else:
+    key = (popshard.placement_token(hga), int(k), float(eps))
+    cap = _CAP_CACHE.get(key)
+    if cap is None:
         cap = metrics.balance_cap(hga.total_weight, k, eps)
-        _CAP_CACHE[key] = (weakref.ref(hga), cap)
+        _CAP_CACHE[key] = cap
         weakref.finalize(hga, _CAP_CACHE.pop, key, None)
     if target is None:
         return cap

@@ -23,13 +23,14 @@ identical pipeline member-at-a-time (populations of one) — the
 """
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
 import jax.numpy as jnp
 
 from .hypergraph import Hypergraph
 from .dcoarsen import build_hierarchy, population_coarsen
+from . import instances as instances_mod
 from . import refine as refine_mod
 from . import metrics
 
@@ -79,6 +80,71 @@ def _pad_part(part: np.ndarray, n_pad: int) -> np.ndarray:
     out = np.zeros(n_pad, np.int32)
     out[: len(part)] = part
     return out
+
+
+def vcycle_instances(hgs: Sequence[Hypergraph], parts: Sequence,
+                     ks: Sequence[int], epss: Sequence[float],
+                     seeds: Optional[Sequence[int]] = None,
+                     fm_node_limit: int = 4096,
+                     contraction_limit_factor: int = 64,
+                     grid: Optional[Sequence[int]] = None,
+                     shard: Optional[str] = None
+                     ) -> List[Tuple[np.ndarray, float]]:
+    """One V-cycle for a batch of INDEPENDENT instances (DESIGN.md §12):
+    each request builds its own partition-aware hierarchy (host work),
+    then all instances walk their uncoarsening ladders in lockstep —
+    at every step the instances' current levels are grouped by shape
+    bucket and refined through ``instances.refine_grouped``, one
+    compiled V-cycle step per bucket instead of one per request.
+
+    Per-instance results are bit-identical to the scalar ``vcycle`` on
+    that request alone: the per-step grouped refinement reproduces
+    ``refine_population`` lane-for-lane, every other stage (hierarchy,
+    projection, elitism) is per-instance host code identical to the
+    scalar driver.  Returns ``[(part [n_i], cut), ...]``.
+    """
+    nI = len(hgs)
+    seeds = list(seeds) if seeds is not None else [0] * nI
+    hiers, curs = [], []
+    for hg, part, k, seed in zip(hgs, parts, ks, seeds):
+        part = np.asarray(part, np.int32)
+        hier = build_hierarchy(
+            hg, k, seed=seed, restrict_part=part,
+            contraction_limit_factor=contraction_limit_factor)
+        hiers.append(hier)
+        curs.append(jnp.asarray(hier.level_part(hier.num_levels - 1),
+                                jnp.int32)[None, :])
+    max_levels = max(h.num_levels for h in hiers)
+    for t in range(max_levels):
+        step_idx, entries = [], []
+        for i, hier in enumerate(hiers):
+            if t >= hier.num_levels:
+                continue
+            li = hier.num_levels - 1 - t
+            if li < hier.num_levels - 1:
+                curs[i] = hier.project_pop(curs[i], li + 1)
+            entries.append((hier.level_arrays(li), curs[i], ks[i],
+                            epss[i]))
+            step_idx.append(i)
+        outs = instances_mod.refine_grouped(
+            entries, grid=grid, fm_node_limit=fm_node_limit, shard=shard)
+        for (rp, _), i in zip(outs, step_idx):
+            curs[i] = jnp.asarray(rp)
+
+    results = []
+    for i, (hg, part, k) in enumerate(zip(hgs, parts, ks)):
+        part = np.asarray(part, np.int32)
+        out = np.asarray(curs[i][0])[: hg.n]
+        hga0 = hg.arrays()
+        cut_new = float(metrics.cutsize_jit(
+            hga0, _pad_part(out, hga0.n_pad), k))
+        cut_old = float(metrics.cutsize_jit(
+            hga0, _pad_part(part, hga0.n_pad), k))
+        if cut_new <= cut_old + 1e-9:
+            results.append((out, cut_new))
+        else:
+            results.append((part, cut_old))
+    return results
 
 
 def vcycle_population(hg: Hypergraph, parts, ew_pop, k: int, eps: float,

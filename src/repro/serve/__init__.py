@@ -1,1 +1,4 @@
 from .decode_loop import ServeSession
+from .partition_service import (PartitionRequest, PartitionResult,
+                                PartitionService, serve_buckets,
+                                serve_coalesce_s, serve_slots)

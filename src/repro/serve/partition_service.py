@@ -1,0 +1,258 @@
+"""Continuous-batching partition service (DESIGN.md §12).
+
+The serving analogue of ``serve/decode_loop.py``'s static-slot decode
+loop, for partition requests instead of token streams: a fixed number of
+SLOTS each hold one in-flight request (its hierarchy and population);
+every tick advances each occupied slot by ONE uncoarsening level, with
+all slots that share a shape bucket refined in a single
+``[instance, alpha, n_pad]`` dispatch (``core/instances``).  A request
+that reaches the finest level emits its result and vacates the slot; a
+queued request fills it on the next tick and joins mid-flight — exactly
+how continuous batching slots new sequences into a decode batch.
+
+Each request runs the multilevel population pipeline of
+``impart_partition`` with the memetic events disabled (no recombination
+or mutation — traffic-shaped deployments run the cheap pipeline;
+``core.impart.impart_partition_instances`` is the offline batch API for
+the full memetic driver).  ``solve_solo`` runs the identical pipeline
+for one request alone; the service's per-request results are
+bit-identical to it no matter what else shares the slots — that is the
+batching contract, asserted by ``tests/test_service.py`` and
+``benchmarks/service.py``.
+
+Env knobs (see docs/reference.md):
+
+* ``REPRO_SERVE_SLOTS``       — slot count (default 8).
+* ``REPRO_SERVE_BUCKETS``     — comma list of vertex-padding bucket
+  sizes (e.g. ``1024,4096``); requests round up to the smallest listed
+  bucket so mixed sizes share compiled engines.  ``auto``/unset: natural
+  pow2 paddings are their own buckets.
+* ``REPRO_SERVE_COALESCE_MS`` — arrival coalescing window (default 0):
+  when every slot is idle, a tick holds off dispatching until the oldest
+  queued request has waited this long, so near-simultaneous arrivals
+  share one prefill + dispatch.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import time
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.hypergraph import Hypergraph
+from repro.core.impart import ImpartConfig, impart_partition
+from repro.core.dcoarsen import build_hierarchy
+from repro.core.initial_partition import initial_partition_population
+from repro.core import instances as instances_mod
+
+
+def serve_slots() -> int:
+    """``REPRO_SERVE_SLOTS`` (default 8, floor 1)."""
+    try:
+        s = int(os.environ.get("REPRO_SERVE_SLOTS", "8"))
+    except ValueError:
+        return 8
+    return max(s, 1)
+
+
+def serve_buckets() -> Optional[Tuple[int, ...]]:
+    """``REPRO_SERVE_BUCKETS``: comma list of bucket sizes, or None for
+    natural pow2 bucketing (``auto``/unset/unparsable)."""
+    raw = os.environ.get("REPRO_SERVE_BUCKETS", "auto").strip().lower()
+    if raw in ("", "auto"):
+        return None
+    try:
+        grid = tuple(sorted(int(x) for x in raw.split(",") if x.strip()))
+    except ValueError:
+        return None
+    return grid or None
+
+
+def serve_coalesce_s() -> float:
+    """``REPRO_SERVE_COALESCE_MS`` as seconds (default 0)."""
+    try:
+        ms = float(os.environ.get("REPRO_SERVE_COALESCE_MS", "0"))
+    except ValueError:
+        return 0.0
+    return max(ms, 0.0) / 1000.0
+
+
+@dataclasses.dataclass
+class PartitionRequest:
+    name: str
+    hg: Hypergraph
+    k: int
+    eps: float = 0.08
+    seed: int = 0
+    submitted_s: float = 0.0  # stamped by submit()
+
+
+@dataclasses.dataclass
+class PartitionResult:
+    name: str
+    part: np.ndarray
+    cut: float
+    k: int
+    submitted_s: float
+    finished_s: float
+
+    @property
+    def latency_s(self) -> float:
+        return self.finished_s - self.submitted_s
+
+
+@dataclasses.dataclass
+class _Slot:
+    """One in-flight request: its hierarchy, population, and ladder
+    position.  ``li`` is the level the next tick refines;
+    ``need_project`` marks that ``parts`` still lives at ``li + 1``."""
+    request: Optional[PartitionRequest] = None
+    cfg: Optional[ImpartConfig] = None
+    hier: object = None
+    parts: object = None
+    li: int = 0
+    need_project: bool = False
+
+    @property
+    def occupied(self) -> bool:
+        return self.request is not None
+
+    def vacate(self) -> None:
+        # full reset: the next occupant starts from nothing (the no-leak
+        # contract, tested by test_service.py)
+        self.request = None
+        self.cfg = None
+        self.hier = None
+        self.parts = None
+        self.li = 0
+        self.need_project = False
+
+
+class PartitionService:
+    """Static-slot continuous-batching front-end over the instance-axis
+    engine.  Single-threaded: callers interleave ``submit`` and ``step``
+    (or just ``drain``); every ``step`` advances all occupied slots one
+    hierarchy level in bucketed group dispatches."""
+
+    def __init__(self, slots: Optional[int] = None,
+                 buckets: Optional[Sequence[int]] = None,
+                 coalesce_ms: Optional[float] = None,
+                 alpha: int = 4, lp_iters: int = 8,
+                 fm_node_limit: int = 4096,
+                 contraction_limit_factor: int = 64,
+                 shard: Optional[str] = None):
+        self.n_slots = slots if slots is not None else serve_slots()
+        self.grid = (tuple(buckets) if buckets is not None
+                     else serve_buckets())
+        self.coalesce_s = (coalesce_ms / 1000.0 if coalesce_ms is not None
+                           else serve_coalesce_s())
+        self.alpha = alpha
+        self.lp_iters = lp_iters
+        self.fm_node_limit = fm_node_limit
+        self.contraction_limit_factor = contraction_limit_factor
+        self.shard = shard
+        self.slots = [_Slot() for _ in range(self.n_slots)]
+        self.queue: List[PartitionRequest] = []
+        self.results: Dict[str, PartitionResult] = {}
+
+    # -- request pipeline (shared with solve_solo) -------------------------
+    def _cfg_for(self, req: PartitionRequest) -> ImpartConfig:
+        return ImpartConfig(
+            k=req.k, eps=req.eps, alpha=self.alpha, seed=req.seed,
+            lp_iters=self.lp_iters, fm_node_limit=self.fm_node_limit,
+            contraction_limit_factor=self.contraction_limit_factor,
+            recombination_enabled=False, mutation_enabled=False,
+            final_vcycles=0, pop_shard=self.shard)
+
+    def solve_solo(self, req: PartitionRequest
+                   ) -> Tuple[np.ndarray, float]:
+        """The reference: run ``req``'s exact pipeline alone (no slot
+        sharing).  The service's answer for the same request is
+        bit-identical — the batching contract."""
+        res = impart_partition(req.hg, self._cfg_for(req))
+        return res.part, res.cut
+
+    # -- the slot loop ------------------------------------------------------
+    def submit(self, req: PartitionRequest) -> None:
+        req.submitted_s = time.perf_counter()
+        self.queue.append(req)
+
+    def _admit(self) -> None:
+        for slot in self.slots:
+            if not self.queue:
+                break
+            if slot.occupied:
+                continue
+            req = self.queue.pop(0)
+            cfg = self._cfg_for(req)
+            hier = build_hierarchy(
+                req.hg, cfg.k, seed=cfg.seed,
+                contraction_limit_factor=cfg.contraction_limit_factor)
+            num = hier.num_levels
+            parts, _ = initial_partition_population(
+                hier.level_host(num - 1), cfg.k, cfg.eps,
+                seeds=[cfg.seed * 101 + i for i in range(cfg.alpha)],
+                tries_per_strategy=1, hga=hier.level_arrays(num - 1))
+            slot.request, slot.cfg, slot.hier = req, cfg, hier
+            slot.parts, slot.li = parts, num - 1
+            slot.need_project = False
+
+    def step(self) -> int:
+        """One tick: admit queued requests into free slots (subject to
+        the coalesce window), refine every occupied slot's current level
+        in bucketed group dispatches, advance/finish slots.  Returns the
+        number of requests finished this tick."""
+        busy = any(s.occupied for s in self.slots)
+        if not busy and self.queue and self.coalesce_s > 0:
+            waited = time.perf_counter() - self.queue[0].submitted_s
+            if waited < self.coalesce_s:
+                return 0  # hold: let near-simultaneous arrivals coalesce
+        self._admit()
+        occupied = [s for s in self.slots if s.occupied]
+        if not occupied:
+            return 0
+        entries = []
+        for s in occupied:
+            if s.need_project:
+                s.parts = s.hier.project_pop(s.parts, s.li + 1)
+                s.need_project = False
+            entries.append((s.hier.level_arrays(s.li), s.parts,
+                            s.cfg.k, s.cfg.eps))
+        outs = instances_mod.refine_grouped(
+            entries, grid=self.grid, fm_node_limit=self.fm_node_limit,
+            max_iters=self.lp_iters, shard=self.shard)
+        finished = 0
+        for s, (rp, rc) in zip(occupied, outs):
+            s.parts = rp
+            if s.li == 0:
+                req = s.request
+                parts = np.asarray(rp)
+                best = int(np.argmin(rc))
+                self.results[req.name] = PartitionResult(
+                    name=req.name,
+                    part=np.asarray(parts[best][: req.hg.n], np.int32),
+                    cut=float(rc[best]), k=req.k,
+                    submitted_s=req.submitted_s,
+                    finished_s=time.perf_counter())
+                s.vacate()
+                finished += 1
+            else:
+                s.li -= 1
+                s.need_project = True
+        return finished
+
+    @property
+    def busy(self) -> bool:
+        return bool(self.queue) or any(s.occupied for s in self.slots)
+
+    def drain(self) -> List[PartitionResult]:
+        """Run ticks until queue and slots are empty; returns (and keeps)
+        all results accumulated so far, in completion order."""
+        while self.busy:
+            if self.step() == 0 and not any(s.occupied
+                                            for s in self.slots):
+                # coalesce hold with an empty engine: sleep the window out
+                time.sleep(min(self.coalesce_s or 1e-4, 0.05))
+        return list(self.results.values())

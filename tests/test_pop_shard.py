@@ -152,6 +152,55 @@ def test_hga_mesh_placement_cached(tiny_hg):
     assert refine._device_put_cached is popshard.device_put_cached
 
 
+def test_placement_token_ignores_stale_id_entry():
+    """The id-reuse regression: ``id(hga)`` of a dead level can be
+    recycled for a new one, so a raw-id cache key would hand the new
+    level the dead level's placement.  ``placement_token`` validates the
+    cached weakref and must mint a fresh token for the new tenant."""
+    import gc
+    import weakref
+
+    class Obj:
+        pass
+
+    dead = Obj()
+    ref = weakref.ref(dead)
+    del dead
+    gc.collect()
+    assert ref() is None
+    live = Obj()
+    # simulate the collision: a dead object's cache entry sitting under
+    # this live object's id (finalize can lag on non-refcounting GCs)
+    popshard._TOKEN_CACHE[id(live)] = (ref, -12345)
+    tok = popshard.placement_token(live)
+    assert tok != -12345, "stale entry for a recycled id was returned"
+    assert popshard.placement_token(live) == tok  # now cached for real
+
+
+def test_placement_token_fresh_after_organic_id_reuse():
+    import gc
+
+    class Obj:
+        pass
+
+    o1 = Obj()
+    t1 = popshard.placement_token(o1)
+    assert popshard.placement_token(o1) == t1
+    old_id = id(o1)
+    del o1
+    gc.collect()
+    o2 = None
+    for _ in range(10000):
+        cand = Obj()
+        if id(cand) == old_id:
+            o2 = cand
+            break
+        del cand
+    if o2 is None:
+        pytest.skip("allocator never recycled the id")
+    assert popshard.placement_token(o2) != t1
+
+
 # --------------------------------------------------------------------------
 # acceptance bar: 8 forced host devices, subprocess-isolated so it runs
 # identically from the single-device tier-1 lane and the multidevice lane

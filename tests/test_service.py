@@ -1,0 +1,255 @@
+"""Instance-axis engine + continuous-batching service (DESIGN.md §12).
+
+The batching contract under test: a request refined inside a shared
+``[instance, alpha, n_pad]`` bucket — whatever else rides along, whatever
+shard path lays it out — produces the BIT-IDENTICAL partition and cut it
+gets when solved alone.  The in-process parity tests force each
+``REPRO_POP_SHARD`` path explicitly, so this file is meaningful on the
+single-device tier-1 lane and on the 8-forced-host-device multidevice
+lane alike.
+"""
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import instances, popshard, refine
+from repro.core.impart import (ImpartConfig, impart_partition,
+                               impart_partition_instances)
+from repro.core.vcycle import vcycle, vcycle_instances
+from repro.data.hypergraphs import _modular_netlist, request_stream
+from repro.serve.partition_service import (PartitionRequest,
+                                           PartitionService, serve_buckets,
+                                           serve_coalesce_s, serve_slots)
+
+ALPHA = 3
+
+
+def _population(hg, k, eps, seed):
+    rng = np.random.default_rng(seed)
+    return [refine.rebalance(hg.vertex_weights,
+                             rng.integers(0, k, hg.n).astype(np.int32),
+                             k, eps) for _ in range(ALPHA)]
+
+
+def _req(r, seed=0):
+    return PartitionRequest(name=r["name"], hg=r["hg"], k=r["k"],
+                            eps=r["eps"], seed=seed)
+
+
+# --------------------------------------------------------------------------
+# env knobs
+# --------------------------------------------------------------------------
+def test_serve_env_knobs(monkeypatch):
+    monkeypatch.delenv("REPRO_SERVE_SLOTS", raising=False)
+    assert serve_slots() == 8
+    monkeypatch.setenv("REPRO_SERVE_SLOTS", "3")
+    assert serve_slots() == 3
+    monkeypatch.setenv("REPRO_SERVE_SLOTS", "0")
+    assert serve_slots() == 1          # floor 1
+    monkeypatch.setenv("REPRO_SERVE_SLOTS", "many")
+    assert serve_slots() == 8          # unparsable -> default
+
+    monkeypatch.delenv("REPRO_SERVE_BUCKETS", raising=False)
+    assert serve_buckets() is None
+    monkeypatch.setenv("REPRO_SERVE_BUCKETS", "auto")
+    assert serve_buckets() is None
+    monkeypatch.setenv("REPRO_SERVE_BUCKETS", "4096,1024")
+    assert serve_buckets() == (1024, 4096)
+    monkeypatch.setenv("REPRO_SERVE_BUCKETS", "big,bigger")
+    assert serve_buckets() is None
+
+    monkeypatch.setenv("REPRO_SERVE_COALESCE_MS", "250")
+    assert serve_coalesce_s() == pytest.approx(0.25)
+    monkeypatch.setenv("REPRO_SERVE_COALESCE_MS", "-5")
+    assert serve_coalesce_s() == 0.0
+    monkeypatch.setenv("REPRO_SERVE_COALESCE_MS", "soon")
+    assert serve_coalesce_s() == 0.0
+
+
+# --------------------------------------------------------------------------
+# bucket selection + stacking masks
+# --------------------------------------------------------------------------
+def test_bucket_selection():
+    assert instances.k_bucket(2) == 2
+    assert instances.k_bucket(3) == 4
+    assert instances.k_bucket(8) == 8
+    assert instances.k_bucket(9) == 16
+    # grid: smallest entry >= n_pad; above the top entry, natural pow2
+    assert instances.bucket_n_pad(300, (1024, 4096)) == 1024
+    assert instances.bucket_n_pad(1024, (1024, 4096)) == 1024
+    assert instances.bucket_n_pad(2000, (4096, 1024)) == 4096  # unsorted ok
+    assert instances.bucket_n_pad(8192, (1024, 4096)) == 8192
+    assert instances.bucket_n_pad(512, None) == 512
+
+
+def test_stack_instances_shapes_and_masks():
+    hg1 = _modular_netlist(260, 340, seed=1, n_modules=5, p_local=0.8,
+                           fanout_tail=1.5)
+    hg2 = _modular_netlist(600, 800, seed=2, n_modules=8, p_local=0.8,
+                           fanout_tail=1.5)
+    h1, h2 = hg1.arrays(), hg2.arrays()
+    assert h1.n_pad != h2.n_pad  # the mix the re-padding must absorb
+    batch = instances.stack_instances([h1, h2], [3, 8], [0.08, 0.10],
+                                      grid=(2048,))
+    assert batch.n_pad == 2048 and batch.k_pad == 8
+    assert batch.n_instances == 2
+    assert np.asarray(batch.k_live).tolist() == [3, 8]
+    # FM budgets captured from the ORIGINAL paddings, not the bucket
+    assert np.asarray(batch.fm_steps).tolist() == [
+        min(h1.n_pad, 1024), min(h2.n_pad, 1024)]
+    # true sizes survive as leaves; padded rows are inert
+    assert np.asarray(batch.hga.n).tolist() == [hg1.n, hg2.n]
+    vw = np.asarray(batch.hga.vertex_weights)
+    assert (vw[0, h1.n_pad:] == 0).all() and (vw[1, h2.n_pad:] == 0).all()
+    ew = np.asarray(batch.hga.edge_weights)
+    assert (ew[0, h1.m_pad:] == 0).all()
+    # new pad pins point at the instance's OLD ghost (zero weight)
+    pv = np.asarray(batch.hga.pin_vertex)
+    assert (pv[0, h1.p_pad:] == h1.n_pad - 1).all()
+    assert instances.group_key(h1, 3, (2048,)) == (2048, 4)
+    assert instances.group_key(h2, 8, (2048,)) == (2048, 8)
+
+
+def test_stack_parts_requires_shared_alpha():
+    with pytest.raises(ValueError, match="share alpha"):
+        instances.stack_parts(
+            [np.zeros((2, 8), np.int32), np.zeros((3, 8), np.int32)], 16)
+
+
+# --------------------------------------------------------------------------
+# the parity bar: grouped refinement == solo, every shard path
+# --------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def parity_case():
+    specs = [(280, 380, 1, 3, 0.08), (400, 520, 2, 8, 0.10),
+             (330, 430, 3, 5, 0.12)]
+    entries, solos = [], []
+    for i, (n, m, seed, k, eps) in enumerate(specs):
+        hg = _modular_netlist(n, m, seed=seed, n_modules=6, p_local=0.8,
+                              fanout_tail=1.5)
+        hga = hg.arrays()
+        parts = _population(hg, k, eps, seed=10 + i)
+        entries.append((hga, refine.pad_parts(parts, hga.n_pad), k, eps))
+        sp, sc = refine.refine_population(hga, [p.copy() for p in parts],
+                                          k, eps, max_iters=4, shard="off")
+        solos.append((np.asarray(sp), np.asarray(sc)))
+    return entries, solos
+
+
+@pytest.mark.parametrize("path", popshard.POP_SHARD_PATHS)
+def test_refine_grouped_matches_solo(parity_case, path):
+    entries, solos = parity_case
+    # grid (1024,) forces every instance into one n bucket; the odd k mix
+    # (3, 8, 5) still splits into k buckets 4 and 8, so both a stacked
+    # group (k=8 with k=5 masked under it) and re-padding are exercised
+    outs = instances.refine_grouped(entries, grid=(1024,), max_iters=4,
+                                    shard=path)
+    for i, ((gp, gc), (sp, sc)) in enumerate(zip(outs, solos)):
+        np.testing.assert_array_equal(
+            gp, sp, err_msg=f"shard={path} instance {i} partitions")
+        np.testing.assert_array_equal(
+            gc, sc, err_msg=f"shard={path} instance {i} cuts")
+
+
+# --------------------------------------------------------------------------
+# batched drivers (vcycle / impart) == their scalar references
+# --------------------------------------------------------------------------
+def test_vcycle_instances_matches_scalar():
+    hgs = [_modular_netlist(260 + 90 * i, 340 + 110 * i, seed=5 + i,
+                            n_modules=5, p_local=0.8, fanout_tail=1.5)
+           for i in range(2)]
+    ks, epss = [4, 6], [0.08, 0.10]
+    parts = []
+    for hg, k, eps in zip(hgs, ks, epss):
+        rng = np.random.default_rng(42)
+        parts.append(refine.rebalance(
+            hg.vertex_weights, rng.integers(0, k, hg.n).astype(np.int32),
+            k, eps))
+    solo = [vcycle(hg, p, k, eps, seed=3)
+            for hg, p, k, eps in zip(hgs, parts, ks, epss)]
+    inst = vcycle_instances(hgs, parts, ks, epss, seeds=[3, 3])
+    for i, ((sp, sc), (ip, ic)) in enumerate(zip(solo, inst)):
+        np.testing.assert_array_equal(ip, sp, err_msg=f"instance {i}")
+        assert ic == sc
+
+
+def test_impart_instances_matches_scalar():
+    hgs = [_modular_netlist(260, 340, seed=5, n_modules=5, p_local=0.8,
+                            fanout_tail=1.5),
+           _modular_netlist(350, 450, seed=6, n_modules=5, p_local=0.8,
+                            fanout_tail=1.5)]
+    cfgs = [ImpartConfig(k=k, eps=e, alpha=2, beta=2, seed=7 + i,
+                         lp_iters=3, final_vcycles=1)
+            for i, (k, e) in enumerate(zip([4, 8], [0.08, 0.10]))]
+    solo = [impart_partition(hg, c) for hg, c in zip(hgs, cfgs)]
+    inst = impart_partition_instances(hgs, cfgs)
+    for i, (s, b) in enumerate(zip(solo, inst)):
+        np.testing.assert_array_equal(b.part, s.part,
+                                      err_msg=f"instance {i}")
+        assert b.cut == s.cut
+        assert b.population_cuts == s.population_cuts
+
+
+def test_impart_instances_rejects_time_budget():
+    hg = _modular_netlist(260, 340, seed=5, n_modules=5, p_local=0.8,
+                          fanout_tail=1.5)
+    with pytest.raises(ValueError, match="batch-invariant"):
+        impart_partition_instances(
+            [hg], [ImpartConfig(k=4, eps=0.08, time_budget_s=1.0)])
+
+
+# --------------------------------------------------------------------------
+# the service: continuous batching with per-request solo parity
+# --------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def stream():
+    return request_stream(4, tag="svc-test", scale=0.35)
+
+
+def test_service_matches_solo(stream):
+    svc = PartitionService(slots=2, alpha=2, lp_iters=4)
+    for i, r in enumerate(stream):
+        svc.submit(_req(r, seed=i))
+    res = svc.drain()
+    assert len(res) == len(stream) and not svc.busy
+    for i, r in enumerate(stream):
+        part, cut = svc.solve_solo(_req(r, seed=i))
+        got = svc.results[r["name"]]
+        np.testing.assert_array_equal(got.part, part, err_msg=r["name"])
+        assert got.cut == cut
+        assert got.latency_s >= 0.0
+    # with 2 slots and 4 requests, later arrivals joined mid-flight:
+    # the parity above is the continuous-batching contract
+
+
+def test_vacated_slot_leaks_nothing(stream):
+    # one slot, two sequential occupants: B's answer must be what it gets
+    # from a fresh engine, and the slot must be fully reset in between
+    a, b = stream[0], stream[1]
+    svc = PartitionService(slots=1, alpha=2, lp_iters=4)
+    svc.submit(_req(a))
+    svc.drain()
+    slot = svc.slots[0]
+    assert not slot.occupied
+    assert slot.request is None and slot.cfg is None
+    assert slot.hier is None and slot.parts is None
+    assert slot.li == 0 and not slot.need_project
+    svc.submit(_req(b))
+    svc.drain()
+    part, cut = PartitionService(slots=1, alpha=2,
+                                 lp_iters=4).solve_solo(_req(b))
+    got = svc.results[b["name"]]
+    np.testing.assert_array_equal(got.part, part)
+    assert got.cut == cut
+
+
+def test_coalesce_window_holds_then_dispatches(stream):
+    svc = PartitionService(slots=2, alpha=2, lp_iters=4, coalesce_ms=150.0)
+    svc.submit(_req(stream[0]))
+    assert svc.step() == 0          # idle engine inside the window: hold
+    assert not any(s.occupied for s in svc.slots)
+    time.sleep(0.16)
+    while svc.busy:
+        svc.step()
+    assert stream[0]["name"] in svc.results
