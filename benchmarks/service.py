@@ -18,6 +18,12 @@ change (DESIGN.md §12).
 ``--smoke`` runs tiny sizes for CI; ``--json-dir DIR`` redirects the
 record there (the workflow-artifact perf trail; the committed repo-root
 JSON stays the full-scale measurement).
+
+``--faults`` instead runs the robustness soak (``BENCH_robustness.json``,
+DESIGN.md §13): one faulted service run per fault kind — device loss,
+mid-tick crash, state corruption, straggler — against an unfaulted
+control, recording recovery wall-clock, the terminal-outcome histogram,
+and ``cuts_equal`` for every request the fault did not touch.
 """
 from __future__ import annotations
 
@@ -174,6 +180,118 @@ def bench_service(smoke: bool = False, out=sys.stdout,
     return record
 
 
+def _fault_stream(nreq: int):
+    """Deeper ladders than ``request_stream`` (~8 levels at
+    contraction_limit_factor=16) so scheduled faults land mid-flight."""
+    from repro.data.hypergraphs import _modular_netlist
+    out = []
+    for i in range(nreq):
+        hg = _modular_netlist(360 + 40 * i, 460 + 50 * i, seed=50 + i,
+                              n_modules=5, p_local=0.8, fanout_tail=1.5)
+        out.append({"name": f"fault-bench-{i}", "hg": hg, "k": 3,
+                    "eps": 0.08})
+    return out
+
+
+def bench_service_faults(smoke: bool = False, out=sys.stdout,
+                         json_path: str | None = "BENCH_robustness.json"):
+    """Emit BENCH_robustness.json: per-fault-kind soak runs with
+    recovery time, terminal-outcome counts, and solo parity for every
+    unfaulted request (DESIGN.md §13)."""
+    import jax
+    from repro.serve import faults
+    from repro.serve.partition_service import (PartitionRequest,
+                                               PartitionService)
+
+    nreq = 4 if smoke else 6
+    reqs = _fault_stream(nreq)
+
+    def make(r, seed):
+        return PartitionRequest(name=r["name"], hg=r["hg"], k=r["k"],
+                                eps=r["eps"], seed=seed)
+
+    def svc_for(plan=None, **kw):
+        return PartitionService(slots=4, alpha=2, lp_iters=4,
+                                contraction_limit_factor=16,
+                                ckpt_every=1, fault_plan=plan, **kw)
+
+    # parity reference (also warms the compile caches)
+    ref = svc_for()
+    solo = {r["name"]: ref.solve_solo(make(r, i))
+            for i, r in enumerate(reqs)}
+
+    plans = {
+        "none": None,
+        "straggler": "2:straggler:delay_ms=60",
+        "crash": "2:crash",
+        "corrupt": "3:corrupt:slot=0,mode=block_range",
+        "device_loss": "3:device_loss:survivors=2",
+        "chaos": ("2:straggler:delay_ms=40;3:device_loss:survivors=2;"
+                  "4:corrupt:slot=0,mode=block_range;5:crash"),
+    }
+    runs = []
+    for name, spec in plans.items():
+        plan = faults.FaultPlan.parse(spec) if spec else None
+        svc = svc_for(plan=plan)
+        t0 = time.perf_counter()
+        for i, r in enumerate(reqs):
+            svc.submit(make(r, i))
+        svc.drain()
+        makespan = time.perf_counter() - t0
+        faulted = {e.get("request") for e in svc.events
+                   if e["kind"] in ("corrupt_injected", "quarantine")}
+        cuts_equal = True
+        for i, r in enumerate(reqs):
+            got = svc.results[r["name"]]
+            sp, sc = solo[r["name"]]
+            if got.part is None or got.cut != sc or \
+                    not np.array_equal(got.part, sp):
+                if got.status == "ok":
+                    raise RuntimeError(
+                        f"unfaulted request {r['name']} diverged from "
+                        f"solo under plan {name!r}")
+                cuts_equal = False
+        recovery = [e["recovery_s"] for e in svc.events
+                    if e["kind"] == "device_loss"]
+        row = {"plan": name, "spec": spec,
+               "outcomes": svc.outcome_counts(),
+               "cuts_equal_all": cuts_equal,
+               "faulted_requests": sorted(x for x in faulted if x),
+               "events": sorted({e["kind"] for e in svc.events}),
+               "makespan_s": round(makespan, 3),
+               "recovery_s": [round(x, 4) for x in recovery]}
+        runs.append(row)
+        print(f"faults,plan={name},outcomes={row['outcomes']},"
+              f"cuts_equal_all={cuts_equal},"
+              f"makespan={row['makespan_s']}s", file=out)
+        from repro.runtime.elastic import restore_device_pool
+        restore_device_pool()
+
+    base = next(r for r in runs if r["plan"] == "none")
+    record = {
+        "bench": "partition_service_faults",
+        "nreq": nreq, "slots": 4, "alpha": 2, "lp_iters": 4,
+        "devices": len(jax.local_devices()),
+        "backend": jax.default_backend(),
+        "baseline_makespan_s": base["makespan_s"],
+        "runs": runs,
+        "note": ("one soak run per fault plan against the same request "
+                 "stream; every request a plan did not fault is asserted "
+                 "bit-identical to solve_solo (a divergence raises); "
+                 "snapshot-resumed and same-seed-restarted requests are "
+                 "deterministic, so cuts_equal_all stays true unless a "
+                 "retry had to seed-bump (see DESIGN.md §13); recovery_s "
+                 "is the device-loss handler wall-clock (pool shrink + "
+                 "snapshot restore for every in-flight slot)"),
+    }
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(record, f, indent=2)
+            f.write("\n")
+        print(f"# wrote {json_path}", file=out)
+    return record
+
+
 if __name__ == "__main__":
     json_dir = None
     if "--json-dir" in sys.argv:
@@ -182,6 +300,11 @@ if __name__ == "__main__":
             sys.exit("--json-dir requires a directory argument")
         json_dir = sys.argv[i]
         os.makedirs(json_dir, exist_ok=True)
-    jp = ("BENCH_service.json" if json_dir is None
-          else os.path.join(json_dir, "BENCH_service.json"))
-    bench_service(smoke="--smoke" in sys.argv, json_path=jp)
+    if "--faults" in sys.argv:
+        jp = ("BENCH_robustness.json" if json_dir is None
+              else os.path.join(json_dir, "BENCH_robustness.json"))
+        bench_service_faults(smoke="--smoke" in sys.argv, json_path=jp)
+    else:
+        jp = ("BENCH_service.json" if json_dir is None
+              else os.path.join(json_dir, "BENCH_service.json"))
+        bench_service(smoke="--smoke" in sys.argv, json_path=jp)

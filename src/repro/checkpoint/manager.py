@@ -87,6 +87,14 @@ class CheckpointManager:
         for s in steps[: -self.keep]:
             shutil.rmtree(os.path.join(self.dir, f"step_{s}"),
                           ignore_errors=True)
+        # orphan tmp dirs: a writer that crashed between the tmp write
+        # and the atomic rename leaves step_<N>.tmp behind; at this point
+        # the current save's tmp is already renamed (one save in flight
+        # at a time), so every remaining .tmp is garbage
+        for name in os.listdir(self.dir):
+            if re.fullmatch(r"step_\d+\.tmp", name):
+                shutil.rmtree(os.path.join(self.dir, name),
+                              ignore_errors=True)
 
     # -------------------------------------------------------------- restore
     def all_steps(self):
@@ -101,6 +109,27 @@ class CheckpointManager:
     def latest_step(self) -> Optional[int]:
         steps = self.all_steps()
         return steps[-1] if steps else None
+
+    def restore_items(self, step: Optional[int] = None
+                      ) -> Tuple[Dict[str, np.ndarray], Dict]:
+        """Restore a checkpoint whose state was a FLAT ``{key: array}``
+        dict, without a ``state_like`` template: keys are reconstructed
+        from the manifest's tree paths.  This is the serving-side restore
+        (slot states vary in shape and occupancy tick to tick, so no
+        fixed template exists — DESIGN.md §13)."""
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint in {self.dir}")
+        d = os.path.join(self.dir, f"step_{step}")
+        with open(os.path.join(d, "manifest.json")) as f:
+            manifest = json.load(f)
+        data = np.load(os.path.join(d, "arrays.npz"))
+        items: Dict[str, np.ndarray] = {}
+        for i, path in enumerate(manifest["paths"]):
+            m = re.fullmatch(r"\['(.*)'\]", path)
+            key = m.group(1) if m else path
+            items[key] = data[f"a{i}"]
+        return items, manifest["extra"]
 
     def restore(self, state_like: Any, step: Optional[int] = None,
                 shardings: Any = None) -> Tuple[Any, Dict]:

@@ -18,6 +18,7 @@ from typing import List, Optional, Tuple
 
 import numpy as np
 
+from .budget import exhausted
 from .hypergraph import Hypergraph
 from .coarsen import coarsen
 from .initial_partition import initial_partition
@@ -94,7 +95,7 @@ def multilevel_best_of(hg: Hypergraph, k: int, eps: float, seed: int = 0,
         trace.extend(res.trace)
         if best is None or res.cut < best.cut:
             best = res
-        if time_budget_s and time.perf_counter() - t0 > time_budget_s:
+        if exhausted(t0, time_budget_s):
             break
     return MultilevelResult(part=best.part, cut=best.cut,
                             wall_s=time.perf_counter() - t0, trace=trace)
@@ -114,10 +115,10 @@ def external_memetic(hg: Hypergraph, k: int, eps: float, seed: int = 0,
         res = multilevel_partition(hg, k, eps, seed=seed * 271 + i)
         pop.append((res.part, res.cut))
         trace.append((hg.n, res.cut))
-        if time_budget_s and time.perf_counter() - t0 > time_budget_s:
+        if exhausted(t0, time_budget_s):
             break
     for g in range(generations):
-        if time_budget_s and time.perf_counter() - t0 > time_budget_s:
+        if exhausted(t0, time_budget_s):
             break
         # tournament-select two parents
         idx = rng.choice(len(pop), size=min(4, len(pop)), replace=False)

@@ -23,6 +23,7 @@ from typing import List, Optional
 
 import numpy as np
 
+from .budget import exhausted, level_exhausted
 from .hypergraph import Hypergraph
 from .coarsen import recombination_thresholds
 from .dcoarsen import build_hierarchy
@@ -49,6 +50,13 @@ class ImpartConfig:
     final_vcycles: int = 1
     lp_iters: int = 16
     time_budget_s: Optional[float] = None  # equal-time comparisons
+    # Batch-invariant budget (DESIGN.md §13): the number of uncoarsening
+    # level-steps refined at full strength before the driver fast-forwards
+    # (project to finest + one cheap LP sweep, result flagged degraded).
+    # Unlike time_budget_s the trigger is a pure function of the request's
+    # own ladder position — co-batched work and machine load never change
+    # when it fires, so the instance driver supports it exactly.
+    level_budget: Optional[int] = None
     mutation_enabled: bool = True
     recombination_enabled: bool = True
     # cohort dispatch for mutation's population V-cycle: "batch"/"loop";
@@ -70,6 +78,10 @@ class ImpartConfig:
                     f"unknown mutation_path {self.mutation_path!r}; "
                     f"expected one of {MUTATE_PATHS} (or None for "
                     "REPRO_MUTATE_PATH routing)")
+        if self.level_budget is not None and self.level_budget < 1:
+            raise ValueError(
+                f"level_budget must be >= 1 (got {self.level_budget}); "
+                "a request needs at least the coarsest-level refinement")
         if self.pop_shard is not None:
             from .popshard import POP_SHARD_PATHS
             self.pop_shard = self.pop_shard.strip().lower()
@@ -89,6 +101,10 @@ class ImpartResult:
     trace: List[tuple]
     wall_s: float
     levels: List[int]
+    # True when a budget (time_budget_s / level_budget) fired and the run
+    # fast-forwarded: the part is the valid best-so-far, not the
+    # full-strength answer (DESIGN.md §13 degraded mode)
+    degraded: bool = False
 
 
 def impart_partition(hg: Hypergraph, cfg: ImpartConfig) -> ImpartResult:
@@ -111,6 +127,8 @@ def impart_partition(hg: Hypergraph, cfg: ImpartConfig) -> ImpartResult:
 
     trace: List[tuple] = [(n_c, list(cuts), "init")]
     next_thr = 0
+    steps_done = 0
+    degraded = False
 
     for li in range(num_levels - 1, -1, -1):
         if li < num_levels - 1:
@@ -145,29 +163,37 @@ def impart_partition(hg: Hypergraph, cfg: ImpartConfig) -> ImpartResult:
                     path=cfg.mutation_path, shard=cfg.pop_shard)
                 trace.append((n_li, list(cuts), f"mutate@{next_thr}"))
             next_thr += 1
-        if cfg.time_budget_s and time.perf_counter() - t0 > cfg.time_budget_s:
+        steps_done += 1
+        if (exhausted(t0, cfg.time_budget_s)
+                or (li > 0 and level_exhausted(steps_done,
+                                               cfg.level_budget))):
             # fast-forward: project straight to the finest level and refine
+            # (degraded mode — the batch-invariant mechanism is identical
+            # whether the trigger was wall-clock or the level budget)
             for lj in range(li - 1, -1, -1):
                 parts = hier.project_pop(parts, lj + 1)
             hga0 = hier.level_arrays(0)
             parts, cuts = refine_mod.lp_refine_population(
                 hga0, parts, k, eps, max_iters=4, shard=cfg.pop_shard)
             trace.append((hg.n, list(cuts), "budget-exhausted"))
+            degraded = True
             break
 
     parts = np.asarray(parts)
     best = int(np.argmin(cuts))
     part, cut = parts[best][: hg.n], float(cuts[best])
-    for v in range(cfg.final_vcycles):
-        if cfg.time_budget_s and time.perf_counter() - t0 > cfg.time_budget_s:
-            break
-        part, cut = vcycle(hg, part, k, eps, seed=cfg.seed * 997 + v)
-        trace.append((hg.n, [cut], f"final-vcycle@{v}"))
+    if not degraded:
+        for v in range(cfg.final_vcycles):
+            if exhausted(t0, cfg.time_budget_s):
+                break
+            part, cut = vcycle(hg, part, k, eps, seed=cfg.seed * 997 + v)
+            trace.append((hg.n, [cut], f"final-vcycle@{v}"))
 
     return ImpartResult(
         part=np.asarray(part, np.int32), cut=float(cut),
         population_cuts=[float(c) for c in cuts], trace=trace,
-        wall_s=time.perf_counter() - t0, levels=hier.sizes())
+        wall_s=time.perf_counter() - t0, levels=hier.sizes(),
+        degraded=degraded)
 
 
 def impart_partition_instances(hgs: List[Hypergraph],
@@ -187,19 +213,23 @@ def impart_partition_instances(hgs: List[Hypergraph],
     ``impart_partition(hg, cfg)`` alone: the grouped refinement
     reproduces ``refine_population`` lane-for-lane, everything else is
     the same per-request code path.  ``alpha`` and ``lp_iters`` must
-    agree across configs (they shape the shared dispatch);
-    ``time_budget_s`` is unsupported here (its fast-forward depends on
-    wall time, which batching would change).
+    agree across configs (they shape the shared dispatch).
+
+    Budgets (DESIGN.md §13): ``level_budget`` is the batch-invariant
+    per-request budget — its trigger is the request's own count of
+    full-strength level refinements, so a budget-capped request is STILL
+    bit-identical to its solo run.  ``time_budget_s`` is accepted too:
+    the *mechanism* on trip is the same level-indexed fast-forward
+    (project to finest + one cheap LP sweep, ``degraded=True``), which
+    is batch-invariant, but *when* the wall clock trips necessarily
+    depends on co-batched work — prefer ``level_budget`` where
+    determinism matters.
     """
     if len(hgs) != len(cfgs):
         raise ValueError("one config per hypergraph required")
     if len({(c.alpha, c.lp_iters, c.fm_node_limit) for c in cfgs}) > 1:
         raise ValueError("instance batching requires equal alpha / "
                          "lp_iters / fm_node_limit across configs")
-    if any(c.time_budget_s for c in cfgs):
-        raise ValueError("time_budget_s is unsupported in the instance "
-                         "driver (wall-time fast-forward is not "
-                         "batch-invariant); solve those solo")
     t0 = time.perf_counter()
     nI = len(hgs)
     st = []  # per-request driver state
@@ -216,7 +246,8 @@ def impart_partition_instances(hgs: List[Hypergraph],
         st.append(dict(
             hier=hier, parts=parts, cuts=cuts, next_thr=0,
             thresholds=recombination_thresholds(hg.n, n_c, cfg.beta),
-            trace=[(n_c, list(cuts), "init")]))
+            trace=[(n_c, list(cuts), "init")],
+            steps=0, degraded=False))
     fm_limit = cfgs[0].fm_node_limit
     lp_iters = cfgs[0].lp_iters
 
@@ -225,7 +256,7 @@ def impart_partition_instances(hgs: List[Hypergraph],
         step_idx, entries = [], []
         for i, s in enumerate(st):
             hier = s["hier"]
-            if t >= hier.num_levels:
+            if s["degraded"] or t >= hier.num_levels:
                 continue
             li = hier.num_levels - 1 - t
             if li < hier.num_levels - 1:
@@ -233,6 +264,8 @@ def impart_partition_instances(hgs: List[Hypergraph],
             entries.append((hier.level_arrays(li), s["parts"],
                             cfgs[i].k, cfgs[i].eps))
             step_idx.append(i)
+        if not entries:
+            break
         outs = instances_mod.refine_grouped(
             entries, grid=grid, fm_node_limit=fm_limit,
             max_iters=lp_iters, shard=cfgs[0].pop_shard)
@@ -265,6 +298,21 @@ def impart_partition_instances(hgs: List[Hypergraph],
                     s["trace"].append(
                         (n_li, list(s["cuts"]), f"mutate@{s['next_thr']}"))
                 s["next_thr"] += 1
+            s["steps"] += 1
+            if (exhausted(t0, cfg.time_budget_s)
+                    or (li > 0 and level_exhausted(s["steps"],
+                                                   cfg.level_budget))):
+                # per-request fast-forward, same mechanism as solo: the
+                # request leaves the lockstep walk and finishes degraded
+                for lj in range(li - 1, -1, -1):
+                    s["parts"] = hier.project_pop(s["parts"], lj + 1)
+                hga0 = hier.level_arrays(0)
+                s["parts"], s["cuts"] = refine_mod.lp_refine_population(
+                    hga0, s["parts"], cfg.k, cfg.eps, max_iters=4,
+                    shard=cfg.pop_shard)
+                s["trace"].append(
+                    (hgs[i].n, list(s["cuts"]), "budget-exhausted"))
+                s["degraded"] = True
 
     results = []
     for i, (hg, cfg, s) in enumerate(zip(hgs, cfgs, st)):
@@ -272,13 +320,14 @@ def impart_partition_instances(hgs: List[Hypergraph],
         cuts = s["cuts"]
         best = int(np.argmin(cuts))
         part, cut = parts[best][: hg.n], float(cuts[best])
-        for v in range(cfg.final_vcycles):
-            part, cut = vcycle(hg, part, cfg.k, cfg.eps,
-                               seed=cfg.seed * 997 + v)
-            s["trace"].append((hg.n, [cut], f"final-vcycle@{v}"))
+        if not s["degraded"]:
+            for v in range(cfg.final_vcycles):
+                part, cut = vcycle(hg, part, cfg.k, cfg.eps,
+                                   seed=cfg.seed * 997 + v)
+                s["trace"].append((hg.n, [cut], f"final-vcycle@{v}"))
         results.append(ImpartResult(
             part=np.asarray(part, np.int32), cut=float(cut),
             population_cuts=[float(c) for c in cuts], trace=s["trace"],
             wall_s=time.perf_counter() - t0,
-            levels=s["hier"].sizes()))
+            levels=s["hier"].sizes(), degraded=s["degraded"]))
     return results

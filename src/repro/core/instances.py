@@ -304,7 +304,7 @@ def _dispatch_lp(batch: InstanceBatch, parts, cuts32, fracs, live, att,
                  put(batch.k_live))
         return tuple(np.asarray(o)[:nI] for o in out)
     if path == "chunk":
-        devs = jax.local_devices()
+        devs = popshard.local_devices()
         nI = parts.shape[0]
         ndev = min(len(devs), nI)
         if ndev > 1:
@@ -341,7 +341,7 @@ def _dispatch_fm(batch: InstanceBatch, parts, path: str):
         return (np.asarray(out[0])[:nI],
                 np.asarray(out[1])[:nI].astype(np.float64))
     if path == "chunk":
-        devs = jax.local_devices()
+        devs = popshard.local_devices()
         nI = parts.shape[0]
         ndev = min(len(devs), nI)
         if ndev > 1:

@@ -45,6 +45,35 @@ from ..jaxcompat import make_mesh, shard_map
 
 POP_SHARD_PATHS = ("mesh", "chunk", "off")
 
+# Elasticity: the surviving-device pool.  ``None`` = every local device;
+# an integer caps the pool to the first N devices — the simulation of a
+# device loss on this container (``runtime.elastic.simulate_device_loss``
+# / the serving fault harness, DESIGN.md §13).  Every consumer of the
+# device list — the mesh, the chunked FM slicing, routing — goes through
+# ``local_devices()`` so a loss event re-routes ALL of them at once.
+_DEVICE_LIMIT: int | None = None
+
+
+def local_devices() -> list:
+    """The device pool every population/instance dispatch draws from:
+    ``jax.local_devices()`` capped to the survivor count after a device
+    loss (``set_device_limit``)."""
+    devs = jax.local_devices()
+    if _DEVICE_LIMIT is not None:
+        return devs[: max(1, _DEVICE_LIMIT)]
+    return devs
+
+
+def set_device_limit(n: int | None) -> list:
+    """Cap the visible device pool to ``n`` survivors (``None`` restores
+    the full pool).  Returns the new pool.  Meshes are cached per device
+    count, so the next ``pop_mesh()`` call after a shrink builds the
+    survivor mesh; populations re-pad to its pop-axis size automatically
+    (``pad_rows`` / ``instances._pad_i``)."""
+    global _DEVICE_LIMIT
+    _DEVICE_LIMIT = None if n is None else max(1, int(n))
+    return local_devices()
+
 
 def pop_shard_path() -> str:
     """Routing: ``REPRO_POP_SHARD=mesh|chunk|off`` forces a path; ``auto``
@@ -54,7 +83,7 @@ def pop_shard_path() -> str:
     env = os.environ.get("REPRO_POP_SHARD", "auto").strip().lower()
     if env in POP_SHARD_PATHS:
         return env
-    return "mesh" if len(jax.local_devices()) > 1 else "off"
+    return "mesh" if len(local_devices()) > 1 else "off"
 
 
 def resolve(shard: str | None) -> str:
@@ -87,15 +116,21 @@ _MESH_CACHE: dict = {}
 def pop_mesh():
     """The local ("pop", "model") mesh, cached per (device count, model
     size).  ``pop`` spans ``n_devices // model``; with the default
-    model=1 every local device holds a slice of the population."""
-    ndev = len(jax.local_devices())
+    model=1 every local device holds a slice of the population.  The
+    device count is the SURVIVOR pool (``local_devices``), so after a
+    device loss this transparently hands every consumer the rebuilt,
+    smaller mesh — re-closing the recombination ring over the survivors
+    (``ring_partners`` ppermutes on this mesh)."""
+    devs = local_devices()
+    ndev = len(devs)
     nmodel = model_axis_size()
     if ndev % nmodel != 0:
         nmodel = 1
     key = (ndev, nmodel)
     mesh = _MESH_CACHE.get(key)
     if mesh is None:
-        mesh = make_mesh((ndev // nmodel, nmodel), ("pop", "model"))
+        mesh = make_mesh((ndev // nmodel, nmodel), ("pop", "model"),
+                         devices=devs)
         _MESH_CACHE[key] = mesh
     return mesh
 

@@ -607,8 +607,9 @@ def _population_shard_devices():
     """Local devices for the ``chunk`` population path.  Returns None on
     a single-device host (tests pin one device; TPU/GPU pods and CPU
     hosts with ``--xla_force_host_platform_device_count`` expose
-    several)."""
-    devs = jax.local_devices()
+    several).  Draws from the survivor pool (``popshard.local_devices``)
+    so a device loss re-routes the chunked tier too."""
+    devs = popshard.local_devices()
     return devs if len(devs) > 1 else None
 
 

@@ -9,13 +9,31 @@ must go through this module.
 """
 from __future__ import annotations
 
-from typing import Sequence
+from typing import Optional, Sequence
 
 import jax
+import numpy as np
 
 
-def make_mesh(shape: Sequence[int], axis_names: Sequence[str]):
-    """``jax.make_mesh`` with auto axis types where the arg exists."""
+def make_mesh(shape: Sequence[int], axis_names: Sequence[str],
+              devices: Optional[Sequence] = None):
+    """``jax.make_mesh`` with auto axis types where the arg exists.
+
+    ``devices`` restricts the mesh to an explicit device list (the
+    elasticity path: a rebuilt mesh over the survivors of a device loss,
+    ``popshard.local_devices``); the default uses every local device.
+    """
+    if devices is not None:
+        arr = np.array(list(devices), dtype=object).reshape(tuple(shape))
+        axis_type = getattr(jax.sharding, "AxisType", None)
+        if axis_type is not None:
+            try:
+                return jax.sharding.Mesh(
+                    arr, tuple(axis_names),
+                    axis_types=(axis_type.Auto,) * len(axis_names))
+            except TypeError:
+                pass
+        return jax.sharding.Mesh(arr, tuple(axis_names))
     axis_type = getattr(jax.sharding, "AxisType", None)
     if axis_type is not None:
         return jax.make_mesh(tuple(shape), tuple(axis_names),

@@ -1,2 +1,3 @@
 from .elastic import (ElasticTrainer, Runner, FailureInjector, NodeFailure,
-                      StragglerWatchdog)
+                      StragglerWatchdog, restore_device_pool,
+                      simulate_device_loss)

@@ -29,7 +29,13 @@ import numpy as np
 
 
 class FailureInjector:
-    """Deterministic failure schedule for tests/examples."""
+    """Deterministic failure schedule for tests/examples.
+
+    The training-side ancestor of the serving fault harness:
+    ``serve.faults.FaultPlan`` generalises this step -> kind dict into
+    typed, scheduled events (device loss, mid-tick crash, state
+    corruption, stragglers); ``as_fault_plan()`` lifts an existing
+    schedule into that form."""
 
     def __init__(self, fail_at_steps: Dict[int, str] | None = None):
         self.fail_at_steps = fail_at_steps or {}
@@ -38,6 +44,33 @@ class FailureInjector:
         if step in self.fail_at_steps:
             kind = self.fail_at_steps.pop(step)
             raise NodeFailure(f"injected {kind} failure at step {step}")
+
+    def as_fault_plan(self):
+        """The equivalent ``serve.faults.FaultPlan`` (typed events,
+        each firing once)."""
+        from repro.serve.faults import FaultPlan
+        return FaultPlan.from_fail_at_steps(self.fail_at_steps)
+
+
+# --------------------------------------------------------------------------
+# Device-loss elasticity (serving side, DESIGN.md §13)
+# --------------------------------------------------------------------------
+def simulate_device_loss(survivors: int) -> list:
+    """Shrink the device pool every popshard consumer draws from to the
+    first ``survivors`` devices — the container-level simulation of
+    losing a device mid-flight.  The next ``popshard.pop_mesh()`` call
+    builds the survivor mesh (populations re-pad to its pop-axis size,
+    the recombination ring re-closes over it); the chunked and routing
+    paths follow the same pool.  Returns the surviving devices."""
+    from repro.core import popshard
+    return popshard.set_device_limit(survivors)
+
+
+def restore_device_pool() -> list:
+    """Undo ``simulate_device_loss``: every local device visible again
+    (the rejoin/repair path).  Returns the full pool."""
+    from repro.core import popshard
+    return popshard.set_device_limit(None)
 
 
 class NodeFailure(RuntimeError):

@@ -1,4 +1,4 @@
-"""Continuous-batching partition service (DESIGN.md §12).
+"""Continuous-batching partition service (DESIGN.md §12, robustness §13).
 
 The serving analogue of ``serve/decode_loop.py``'s static-slot decode
 loop, for partition requests instead of token streams: a fixed number of
@@ -20,23 +20,50 @@ bit-identical to it no matter what else shares the slots — that is the
 batching contract, asserted by ``tests/test_service.py`` and
 ``benchmarks/service.py``.
 
+Robustness (DESIGN.md §13).  Every request ends in a STRUCTURED terminal
+state, never an unhandled exception:
+
+* ``ok``          — full-strength answer, bit-identical to solo.
+* ``degraded``    — a deadline or budget fired mid-flight: remaining
+  levels fast-forwarded, best-so-far returned (``degraded=True``).
+* ``rejected``    — shed at submit (queue over ``REPRO_SERVE_MAX_QUEUE``).
+* ``timed_out``   — shed from the queue (waited past ``max_queue_s`` or
+  the deadline passed before admission).
+* ``recovered``   — the slot was restored from a snapshot or restarted
+  (seed-bumped) after corruption / device loss, then finished.
+* ``quarantined`` — state validation failed and the one retry failed
+  too; the slot is freed, co-bucketed slots never see the poison.
+
+Slot state (population, level index, projection flag) snapshots through
+``checkpoint.CheckpointManager`` every ``REPRO_SERVE_CKPT_EVERY`` ticks;
+an injected device loss (``serve/faults.py``) shrinks the popshard
+device pool to the survivors, rebuilds the mesh, and resumes every
+surviving request from its snapshot — or deterministically from scratch,
+so unfaulted answers stay bit-identical to solo either way.
+
 Env knobs (see docs/reference.md):
 
-* ``REPRO_SERVE_SLOTS``       — slot count (default 8).
-* ``REPRO_SERVE_BUCKETS``     — comma list of vertex-padding bucket
+* ``REPRO_SERVE_SLOTS``        — slot count (default 8).
+* ``REPRO_SERVE_BUCKETS``      — comma list of vertex-padding bucket
   sizes (e.g. ``1024,4096``); requests round up to the smallest listed
   bucket so mixed sizes share compiled engines.  ``auto``/unset: natural
   pow2 paddings are their own buckets.
-* ``REPRO_SERVE_COALESCE_MS`` — arrival coalescing window (default 0):
-  when every slot is idle, a tick holds off dispatching until the oldest
-  queued request has waited this long, so near-simultaneous arrivals
-  share one prefill + dispatch.
+* ``REPRO_SERVE_COALESCE_MS``  — arrival coalescing window (default 0).
+* ``REPRO_SERVE_DEADLINE_S``   — default per-request deadline (0 = none).
+* ``REPRO_SERVE_MAX_QUEUE``    — admission cap on queued requests
+  (0 = unbounded).
+* ``REPRO_SERVE_CKPT_EVERY``   — ticks between slot snapshots (0 = off).
+* ``REPRO_SERVE_CKPT_DIR``     — snapshot directory (default: a fresh
+  temp dir per service).
+* ``REPRO_FAULT_PLAN``         — injected fault schedule (chaos lanes).
 """
 from __future__ import annotations
 
 import dataclasses
 import os
+import tempfile
 import time
+from collections import deque
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
@@ -45,38 +72,123 @@ from repro.core.hypergraph import Hypergraph
 from repro.core.impart import ImpartConfig, impart_partition
 from repro.core.dcoarsen import build_hierarchy
 from repro.core.initial_partition import initial_partition_population
+from repro.core import budget as budget_mod
 from repro.core import instances as instances_mod
+from repro.core import popshard
+from repro.core import refine as refine_mod
+from repro.checkpoint import CheckpointManager
+from repro.runtime.elastic import StragglerWatchdog, simulate_device_loss
+from repro.serve import faults as faults_mod
 
 
 def serve_slots() -> int:
     """``REPRO_SERVE_SLOTS`` (default 8, floor 1)."""
+    raw = os.environ.get("REPRO_SERVE_SLOTS", "8")
     try:
-        s = int(os.environ.get("REPRO_SERVE_SLOTS", "8"))
+        s = int(raw)
     except ValueError:
+        faults_mod.warn_env_once("REPRO_SERVE_SLOTS", raw, "8 slots")
         return 8
     return max(s, 1)
 
 
 def serve_buckets() -> Optional[Tuple[int, ...]]:
-    """``REPRO_SERVE_BUCKETS``: comma list of bucket sizes, or None for
-    natural pow2 bucketing (``auto``/unset/unparsable)."""
+    """``REPRO_SERVE_BUCKETS``: comma list of POSITIVE bucket sizes, or
+    None for natural pow2 bucketing (``auto``/unset).  Unparsable or
+    non-positive entries warn once and fall back to auto — a ``0,-4``
+    grid would build degenerate paddings."""
     raw = os.environ.get("REPRO_SERVE_BUCKETS", "auto").strip().lower()
     if raw in ("", "auto"):
         return None
     try:
         grid = tuple(sorted(int(x) for x in raw.split(",") if x.strip()))
     except ValueError:
+        faults_mod.warn_env_once("REPRO_SERVE_BUCKETS", raw,
+                                 "auto bucketing")
         return None
-    return grid or None
+    if not grid:
+        return None
+    if any(g <= 0 for g in grid):
+        faults_mod.warn_env_once("REPRO_SERVE_BUCKETS", raw,
+                                 "auto bucketing (buckets must be > 0)")
+        return None
+    return grid
 
 
 def serve_coalesce_s() -> float:
     """``REPRO_SERVE_COALESCE_MS`` as seconds (default 0)."""
+    raw = os.environ.get("REPRO_SERVE_COALESCE_MS", "0")
     try:
-        ms = float(os.environ.get("REPRO_SERVE_COALESCE_MS", "0"))
+        ms = float(raw)
     except ValueError:
+        faults_mod.warn_env_once("REPRO_SERVE_COALESCE_MS", raw, "0 ms")
         return 0.0
     return max(ms, 0.0) / 1000.0
+
+
+def serve_deadline_s() -> Optional[float]:
+    """``REPRO_SERVE_DEADLINE_S``: default per-request deadline in
+    seconds (0/unset = none)."""
+    raw = os.environ.get("REPRO_SERVE_DEADLINE_S", "0")
+    try:
+        s = float(raw)
+    except ValueError:
+        faults_mod.warn_env_once("REPRO_SERVE_DEADLINE_S", raw,
+                                 "no deadline")
+        return None
+    if s < 0:
+        faults_mod.warn_env_once("REPRO_SERVE_DEADLINE_S", raw,
+                                 "no deadline (must be >= 0)")
+        return None
+    return s or None
+
+
+def serve_max_queue() -> int:
+    """``REPRO_SERVE_MAX_QUEUE``: admission cap on queued requests
+    (0/unset = unbounded)."""
+    raw = os.environ.get("REPRO_SERVE_MAX_QUEUE", "0")
+    try:
+        q = int(raw)
+    except ValueError:
+        faults_mod.warn_env_once("REPRO_SERVE_MAX_QUEUE", raw,
+                                 "unbounded queue")
+        return 0
+    if q < 0:
+        faults_mod.warn_env_once("REPRO_SERVE_MAX_QUEUE", raw,
+                                 "unbounded queue (must be >= 0)")
+        return 0
+    return q
+
+
+def serve_ckpt_every() -> int:
+    """``REPRO_SERVE_CKPT_EVERY``: ticks between slot snapshots
+    (0/unset = checkpointing off)."""
+    raw = os.environ.get("REPRO_SERVE_CKPT_EVERY", "0")
+    try:
+        n = int(raw)
+    except ValueError:
+        faults_mod.warn_env_once("REPRO_SERVE_CKPT_EVERY", raw,
+                                 "checkpointing off")
+        return 0
+    if n < 0:
+        faults_mod.warn_env_once("REPRO_SERVE_CKPT_EVERY", raw,
+                                 "checkpointing off (must be >= 0)")
+        return 0
+    return n
+
+
+def serve_ckpt_dir() -> Optional[str]:
+    """``REPRO_SERVE_CKPT_DIR`` (default: fresh temp dir per service)."""
+    return os.environ.get("REPRO_SERVE_CKPT_DIR", "").strip() or None
+
+
+# terminal request states (DESIGN.md §13 fault model)
+STATUS_OK = "ok"
+STATUS_DEGRADED = "degraded"
+STATUS_REJECTED = "rejected"
+STATUS_TIMED_OUT = "timed_out"
+STATUS_RECOVERED = "recovered"
+STATUS_QUARANTINED = "quarantined"
 
 
 @dataclasses.dataclass
@@ -86,17 +198,31 @@ class PartitionRequest:
     k: int
     eps: float = 0.08
     seed: int = 0
+    # robustness contract: total latency budget from submit (None = the
+    # REPRO_SERVE_DEADLINE_S default) and the longest acceptable queue
+    # wait before the request is shed with ``timed_out``
+    deadline_s: Optional[float] = None
+    max_queue_s: Optional[float] = None
     submitted_s: float = 0.0  # stamped by submit()
 
 
 @dataclasses.dataclass
 class PartitionResult:
     name: str
-    part: np.ndarray
-    cut: float
+    part: Optional[np.ndarray]
+    cut: Optional[float]
     k: int
     submitted_s: float
     finished_s: float
+    status: str = STATUS_OK
+    degraded: bool = False
+    error: Optional[str] = None
+
+    @property
+    def ok(self) -> bool:
+        """True when the result carries a valid partition (full-strength,
+        degraded, or recovered — shed/quarantined requests carry None)."""
+        return self.part is not None
 
     @property
     def latency_s(self) -> float:
@@ -114,6 +240,9 @@ class _Slot:
     parts: object = None
     li: int = 0
     need_project: bool = False
+    retries: int = 0        # quarantine retries consumed
+    hold_ticks: int = 0     # backoff: skip this many dispatch ticks
+    recovered: bool = False  # state was restored/restarted at least once
 
     @property
     def occupied(self) -> bool:
@@ -128,13 +257,26 @@ class _Slot:
         self.parts = None
         self.li = 0
         self.need_project = False
+        self.retries = 0
+        self.hold_ticks = 0
+        self.recovered = False
 
 
 class PartitionService:
     """Static-slot continuous-batching front-end over the instance-axis
     engine.  Single-threaded: callers interleave ``submit`` and ``step``
     (or just ``drain``); every ``step`` advances all occupied slots one
-    hierarchy level in bucketed group dispatches."""
+    hierarchy level in bucketed group dispatches.
+
+    The robustness layer (DESIGN.md §13) wraps the slot loop: queued
+    requests shed on deadline/queue caps, near-deadline slots finish in
+    degraded mode, every post-dispatch state is validated (blocks in
+    range, finite cuts, balance cap) with per-slot quarantine + one
+    seed-bumped retry, slot state snapshots every ``ckpt_every`` ticks,
+    and an injected device loss rebuilds the popshard mesh over the
+    survivors and resumes from the snapshots.  ``fault_plan`` injects
+    deterministic faults (``serve/faults.py``; default: the
+    ``REPRO_FAULT_PLAN`` env schedule, usually none)."""
 
     def __init__(self, slots: Optional[int] = None,
                  buckets: Optional[Sequence[int]] = None,
@@ -142,10 +284,21 @@ class PartitionService:
                  alpha: int = 4, lp_iters: int = 8,
                  fm_node_limit: int = 4096,
                  contraction_limit_factor: int = 64,
-                 shard: Optional[str] = None):
+                 shard: Optional[str] = None,
+                 deadline_s: Optional[float] = None,
+                 max_queue: Optional[int] = None,
+                 ckpt_every: Optional[int] = None,
+                 ckpt_dir: Optional[str] = None,
+                 fault_plan: Optional[faults_mod.FaultPlan] = None,
+                 max_retries: int = 1):
         self.n_slots = slots if slots is not None else serve_slots()
-        self.grid = (tuple(buckets) if buckets is not None
-                     else serve_buckets())
+        if buckets is not None:
+            buckets = tuple(buckets)
+            if any(b <= 0 for b in buckets):
+                raise ValueError(f"bucket sizes must be > 0: {buckets}")
+            self.grid: Optional[Tuple[int, ...]] = buckets
+        else:
+            self.grid = serve_buckets()
         self.coalesce_s = (coalesce_ms / 1000.0 if coalesce_ms is not None
                            else serve_coalesce_s())
         self.alpha = alpha
@@ -153,14 +306,34 @@ class PartitionService:
         self.fm_node_limit = fm_node_limit
         self.contraction_limit_factor = contraction_limit_factor
         self.shard = shard
+        self.default_deadline_s = (deadline_s if deadline_s is not None
+                                   else serve_deadline_s())
+        self.max_queue = (max_queue if max_queue is not None
+                          else serve_max_queue())
+        self.ckpt_every = (ckpt_every if ckpt_every is not None
+                           else serve_ckpt_every())
+        self._ckpt_dir = ckpt_dir if ckpt_dir is not None else serve_ckpt_dir()
+        self._ckpt: Optional[CheckpointManager] = None
+        self.fault_plan = (fault_plan if fault_plan is not None
+                           else faults_mod.fault_plan_env())
+        self.max_retries = max_retries
         self.slots = [_Slot() for _ in range(self.n_slots)]
         self.queue: List[PartitionRequest] = []
         self.results: Dict[str, PartitionResult] = {}
+        self.tick = 0
+        # structured robustness telemetry (consumed by the chaos test and
+        # benchmarks/service.py --faults)
+        self.events: List[dict] = []
+        self.watchdog = StragglerWatchdog(factor=4.0, window=16,
+                                          grace_steps=3)
+        self._tick_walls: deque = deque(maxlen=8)
 
     # -- request pipeline (shared with solve_solo) -------------------------
-    def _cfg_for(self, req: PartitionRequest) -> ImpartConfig:
+    def _cfg_for(self, req: PartitionRequest,
+                 seed_bump: int = 0) -> ImpartConfig:
         return ImpartConfig(
-            k=req.k, eps=req.eps, alpha=self.alpha, seed=req.seed,
+            k=req.k, eps=req.eps, alpha=self.alpha,
+            seed=req.seed + seed_bump,
             lp_iters=self.lp_iters, fm_node_limit=self.fm_node_limit,
             contraction_limit_factor=self.contraction_limit_factor,
             recombination_enabled=False, mutation_enabled=False,
@@ -175,9 +348,72 @@ class PartitionService:
         return res.part, res.cut
 
     # -- the slot loop ------------------------------------------------------
-    def submit(self, req: PartitionRequest) -> None:
+    def submit(self, req: PartitionRequest) -> Optional[PartitionResult]:
+        """Queue ``req``.  Returns None when accepted; under admission
+        control (``max_queue``) an over-capacity submit is shed
+        immediately with a structured ``rejected`` result (also recorded
+        in ``results``) instead of queuing forever."""
         req.submitted_s = time.perf_counter()
+        if req.deadline_s is None:
+            req.deadline_s = self.default_deadline_s
+        if self.max_queue and len(self.queue) >= self.max_queue:
+            res = self._emit_shed(req, STATUS_REJECTED,
+                                  f"queue full ({self.max_queue})")
+            return res
         self.queue.append(req)
+        return None
+
+    def _emit_shed(self, req: PartitionRequest, status: str,
+                   error: str) -> PartitionResult:
+        res = PartitionResult(
+            name=req.name, part=None, cut=None, k=req.k,
+            submitted_s=req.submitted_s, finished_s=time.perf_counter(),
+            status=status, error=error)
+        self.results[req.name] = res
+        self.events.append({"tick": self.tick, "kind": status,
+                            "request": req.name, "error": error})
+        return res
+
+    def _shed_queue(self) -> int:
+        """Drop queued requests whose queue wait or deadline has already
+        passed — load shedding with a structured ``timed_out`` result."""
+        now = time.perf_counter()
+        keep, shed = [], 0
+        for req in self.queue:
+            waited = now - req.submitted_s
+            if req.max_queue_s is not None and waited > req.max_queue_s:
+                self._emit_shed(req, STATUS_TIMED_OUT,
+                                f"queued {waited:.3f}s > "
+                                f"max_queue_s={req.max_queue_s}")
+                shed += 1
+            elif req.deadline_s and waited > req.deadline_s:
+                self._emit_shed(req, STATUS_TIMED_OUT,
+                                f"deadline {req.deadline_s}s passed "
+                                "while queued")
+                shed += 1
+            else:
+                keep.append(req)
+        self.queue = keep
+        return shed
+
+    def _install(self, slot: _Slot, req: PartitionRequest,
+                 seed_bump: int = 0) -> None:
+        """(Re)build a slot's pipeline state from scratch: hierarchy +
+        initial population at the coarsest level.  Deterministic in
+        (req, seed_bump) — a scratch reinstall with bump 0 reproduces
+        the original trajectory exactly."""
+        cfg = self._cfg_for(req, seed_bump=seed_bump)
+        hier = build_hierarchy(
+            req.hg, cfg.k, seed=cfg.seed,
+            contraction_limit_factor=cfg.contraction_limit_factor)
+        num = hier.num_levels
+        parts, _ = initial_partition_population(
+            hier.level_host(num - 1), cfg.k, cfg.eps,
+            seeds=[cfg.seed * 101 + i for i in range(cfg.alpha)],
+            tries_per_strategy=1, hga=hier.level_arrays(num - 1))
+        slot.request, slot.cfg, slot.hier = req, cfg, hier
+        slot.parts, slot.li = parts, num - 1
+        slot.need_project = False
 
     def _admit(self) -> None:
         for slot in self.slots:
@@ -185,63 +421,314 @@ class PartitionService:
                 break
             if slot.occupied:
                 continue
-            req = self.queue.pop(0)
-            cfg = self._cfg_for(req)
-            hier = build_hierarchy(
-                req.hg, cfg.k, seed=cfg.seed,
-                contraction_limit_factor=cfg.contraction_limit_factor)
-            num = hier.num_levels
-            parts, _ = initial_partition_population(
-                hier.level_host(num - 1), cfg.k, cfg.eps,
-                seeds=[cfg.seed * 101 + i for i in range(cfg.alpha)],
-                tries_per_strategy=1, hga=hier.level_arrays(num - 1))
-            slot.request, slot.cfg, slot.hier = req, cfg, hier
-            slot.parts, slot.li = parts, num - 1
-            slot.need_project = False
+            self._install(slot, self.queue.pop(0))
+
+    # -- robustness machinery ----------------------------------------------
+    def _ckpt_manager(self) -> CheckpointManager:
+        if self._ckpt is None:
+            if self._ckpt_dir is None:
+                self._ckpt_dir = tempfile.mkdtemp(prefix="repro-serve-ckpt-")
+            self._ckpt = CheckpointManager(self._ckpt_dir, keep=2)
+        return self._ckpt
+
+    def _snapshot_slots(self) -> None:
+        """Snapshot every occupied slot's in-flight state (population,
+        level index, projection flag) through the checkpoint manager —
+        the state a device loss resumes from."""
+        state, meta = {}, {}
+        for i, s in enumerate(self.slots):
+            if not s.occupied:
+                continue
+            state[f"slot{i}.parts"] = np.asarray(s.parts)
+            meta[str(i)] = {"name": s.request.name, "li": s.li,
+                            "need_project": bool(s.need_project),
+                            "seed": s.cfg.seed, "retries": s.retries}
+        if state:
+            self._ckpt_manager().save(self.tick, state,
+                                      extra={"slots": meta,
+                                             "tick": self.tick})
+
+    def _latest_snapshot(self):
+        if self._ckpt is None or self._ckpt.latest_step() is None:
+            return None, None
+        return self._ckpt.restore_items()
+
+    def _restore_slot(self, s: _Slot, items, extra) -> bool:
+        """Resume a slot from the latest snapshot (matched by request
+        name).  The hierarchy is rebuilt — it is a pure function of
+        (hg, k, seed), so the resumed trajectory is bit-identical to the
+        uninterrupted one."""
+        if items is None:
+            return False
+        for idx, m in extra.get("slots", {}).items():
+            if m["name"] != s.request.name:
+                continue
+            key = f"slot{idx}.parts"
+            if key not in items:
+                return False
+            s.hier = build_hierarchy(
+                s.request.hg, s.cfg.k, seed=m["seed"],
+                contraction_limit_factor=s.cfg.contraction_limit_factor)
+            s.parts = np.asarray(items[key], np.int32)
+            s.li = int(m["li"])
+            s.need_project = bool(m["need_project"])
+            s.recovered = True
+            return True
+        return False
+
+    def _handle_device_loss(self, ev: faults_mod.FaultEvent) -> None:
+        """The elasticity path: shrink the device pool to the survivors,
+        rebuild the mesh, and resume every occupied slot from its
+        snapshot (requests without one restart from scratch with their
+        original seed — equally deterministic, so unfaulted answers stay
+        bit-identical to solo)."""
+        t_start = time.perf_counter()
+        survivors = (ev.survivors if ev.survivors is not None
+                     else max(1, len(popshard.local_devices()) - 1))
+        pool = simulate_device_loss(survivors)
+        items, extra = self._latest_snapshot()
+        resumed = restarted = 0
+        for s in self.slots:
+            if not s.occupied:
+                continue
+            if self._restore_slot(s, items, extra):
+                resumed += 1
+            else:
+                self._install(s, s.request)
+                s.recovered = True
+                restarted += 1
+        self.events.append({
+            "tick": self.tick, "kind": "device_loss",
+            "survivors": len(pool), "resumed_from_ckpt": resumed,
+            "restarted_from_scratch": restarted,
+            "recovery_s": time.perf_counter() - t_start})
+
+    def _validate(self, s: _Slot, parts: np.ndarray,
+                  cuts: np.ndarray) -> Optional[str]:
+        """Cheap post-dispatch invariants: block ids in range, finite
+        non-negative cuts, balance under the level's cap.  A violation
+        quarantines only this slot — co-bucketed slots are independent
+        lanes and never see the poison."""
+        k = s.cfg.k
+        n_li = s.hier.level_n(s.li)
+        cuts = np.asarray(cuts, np.float64)
+        if not np.isfinite(cuts).all() or (cuts < -1e-9).any():
+            return f"non-finite or negative cut: {cuts.tolist()}"
+        sl = np.asarray(parts)[:, :n_li]
+        lo, hi = int(sl.min()), int(sl.max())
+        if lo < 0 or hi >= k:
+            return f"block id out of range [0, {k}): saw [{lo}, {hi}]"
+        hga = s.hier.level_arrays(s.li)
+        vw = np.asarray(hga.vertex_weights)[:n_li]
+        cap = float(np.asarray(refine_mod._cap_for(hga, k, s.cfg.eps)))
+        for a in range(sl.shape[0]):
+            load = float(np.bincount(sl[a], weights=vw,
+                                     minlength=k).max())
+            if load > cap * (1 + 1e-5) + 1e-6:
+                return (f"balance cap exceeded: member {a} max load "
+                        f"{load} > cap {cap}")
+        return None
+
+    def _quarantine(self, s: _Slot, msg: str) -> bool:
+        """Structured quarantine: one retry (snapshot-resume, else a
+        seed-bumped scratch restart) with a one-tick backoff; a second
+        failure frees the slot with a terminal ``quarantined`` result.
+        Returns True when the slot finished (terminally)."""
+        s.retries += 1
+        self.events.append({"tick": self.tick, "kind": "quarantine",
+                            "request": s.request.name, "error": msg,
+                            "retry": s.retries})
+        if s.retries > self.max_retries:
+            req = s.request
+            self.results[req.name] = PartitionResult(
+                name=req.name, part=None, cut=None, k=req.k,
+                submitted_s=req.submitted_s,
+                finished_s=time.perf_counter(),
+                status=STATUS_QUARANTINED, error=msg)
+            s.vacate()
+            return True
+        items, extra = self._latest_snapshot()
+        if self._restore_slot(s, items, extra):
+            pass  # snapshot predates the poison; replay is deterministic
+        else:
+            # no snapshot: scratch restart with a bumped seed, dodging a
+            # deterministically-poisoned trajectory
+            retries, req = s.retries, s.request
+            self._install(s, req, seed_bump=9973 * retries)
+            s.retries, s.recovered = retries, True
+        s.hold_ticks = 1  # backoff: sit out the next dispatch
+        return False
+
+    def _finish(self, s: _Slot, parts: np.ndarray, cuts: np.ndarray,
+                degraded: bool = False) -> None:
+        req = s.request
+        parts = np.asarray(parts)
+        best = int(np.argmin(cuts))
+        if degraded:
+            status = STATUS_DEGRADED
+        elif s.recovered:
+            status = STATUS_RECOVERED
+        else:
+            status = STATUS_OK
+        self.results[req.name] = PartitionResult(
+            name=req.name,
+            part=np.asarray(parts[best][: req.hg.n], np.int32),
+            cut=float(cuts[best]), k=req.k,
+            submitted_s=req.submitted_s,
+            finished_s=time.perf_counter(),
+            status=status, degraded=degraded)
+        s.vacate()
+
+    def _fast_forward(self, s: _Slot) -> None:
+        """Degraded-mode finish: project the population straight to the
+        finest level, one cheap LP sweep, best-so-far out — the same
+        fast-forward ``impart_partition`` runs on budget exhaustion."""
+        if s.need_project:
+            s.parts = s.hier.project_pop(s.parts, s.li + 1)
+            s.need_project = False
+        while s.li > 0:
+            s.parts = s.hier.project_pop(s.parts, s.li)
+            s.li -= 1
+        hga0 = s.hier.level_arrays(0)
+        parts, cuts = refine_mod.lp_refine_population(
+            hga0, s.parts, s.cfg.k, s.cfg.eps, max_iters=4,
+            shard=self.shard)
+        self.events.append({"tick": self.tick, "kind": "degraded",
+                            "request": s.request.name})
+        self._finish(s, parts, cuts, degraded=True)
+
+    def _avg_tick_s(self) -> Optional[float]:
+        if not self._tick_walls:
+            return None
+        return float(np.mean(self._tick_walls))
+
+    def _degrade_pass(self) -> int:
+        """Finish near-deadline slots in degraded mode NOW: when the
+        remaining budget cannot cover the remaining ladder at the
+        trailing tick pace (or is already spent), fast-forward instead
+        of missing the deadline outright."""
+        finished = 0
+        for s in self.slots:
+            if not s.occupied or not s.request.deadline_s:
+                continue
+            rem = budget_mod.deadline_remaining_s(s.request.submitted_s,
+                                                  s.request.deadline_s)
+            est = self._avg_tick_s()
+            ticks_left = s.li + 1
+            if rem <= 0 or (est is not None and rem < est * ticks_left):
+                self._fast_forward(s)
+                finished += 1
+        return finished
 
     def step(self) -> int:
-        """One tick: admit queued requests into free slots (subject to
-        the coalesce window), refine every occupied slot's current level
-        in bucketed group dispatches, advance/finish slots.  Returns the
-        number of requests finished this tick."""
+        """One tick: inject scheduled faults, shed late queue entries,
+        admit queued requests into free slots (subject to the coalesce
+        window), degrade near-deadline slots, refine every dispatchable
+        slot's current level in bucketed group dispatches, validate and
+        quarantine, advance/finish slots, snapshot.  Returns the number
+        of requests that reached a terminal state this tick."""
+        self.tick += 1
+        t_tick = time.perf_counter()
+        events = (self.fault_plan.events_for(self.tick)
+                  if self.fault_plan else [])
+        for ev in events:
+            if ev.kind == "device_loss":
+                self._handle_device_loss(ev)
+        finished = self._shed_queue()
         busy = any(s.occupied for s in self.slots)
         if not busy and self.queue and self.coalesce_s > 0:
             waited = time.perf_counter() - self.queue[0].submitted_s
             if waited < self.coalesce_s:
-                return 0  # hold: let near-simultaneous arrivals coalesce
+                return finished  # hold: let near arrivals coalesce
         self._admit()
-        occupied = [s for s in self.slots if s.occupied]
-        if not occupied:
-            return 0
+        finished += self._degrade_pass()
+        dispatch = []
+        for s in self.slots:
+            if not s.occupied:
+                continue
+            if s.hold_ticks > 0:
+                s.hold_ticks -= 1  # quarantine backoff: sit this one out
+                continue
+            dispatch.append(s)
+        if not dispatch:
+            return finished
         entries = []
-        for s in occupied:
+        for s in dispatch:
             if s.need_project:
                 s.parts = s.hier.project_pop(s.parts, s.li + 1)
                 s.need_project = False
             entries.append((s.hier.level_arrays(s.li), s.parts,
                             s.cfg.k, s.cfg.eps))
-        outs = instances_mod.refine_grouped(
-            entries, grid=self.grid, fm_node_limit=self.fm_node_limit,
-            max_iters=self.lp_iters, shard=self.shard)
-        finished = 0
-        for s, (rp, rc) in zip(occupied, outs):
+        for ev in events:
+            if ev.kind == "straggler":
+                time.sleep(ev.delay_s)
+                self.events.append({"tick": self.tick,
+                                    "kind": "straggler_injected",
+                                    "delay_s": ev.delay_s})
+        try:
+            for ev in events:
+                if ev.kind == "crash":
+                    raise faults_mod.InjectedCrash(
+                        f"injected mid-tick crash at tick {self.tick}")
+            outs = instances_mod.refine_grouped(
+                entries, grid=self.grid, fm_node_limit=self.fm_node_limit,
+                max_iters=self.lp_iters, shard=self.shard)
+        except faults_mod.InjectedCrash as e:
+            # slot state is consistent (projection is deterministic and
+            # already recorded); the next tick simply retries the dispatch
+            self.events.append({"tick": self.tick, "kind": "crash",
+                                "error": str(e)})
+            self._observe_tick(t_tick)
+            return finished
+        for ev in events:
+            if ev.kind == "corrupt" and dispatch:
+                target = ev.slot % len(dispatch)
+                s = dispatch[target]
+                rp, rc = outs[target]
+                outs[target] = faults_mod.corrupt_state(rp, rc, s.cfg.k,
+                                                        mode=ev.mode)
+                self.events.append({"tick": self.tick,
+                                    "kind": "corrupt_injected",
+                                    "request": s.request.name,
+                                    "mode": ev.mode})
+        for s, (rp, rc) in zip(dispatch, outs):
+            msg = self._validate(s, rp, rc)
+            if msg is not None:
+                if self._quarantine(s, msg):
+                    finished += 1
+                continue
             s.parts = rp
             if s.li == 0:
-                req = s.request
-                parts = np.asarray(rp)
-                best = int(np.argmin(rc))
-                self.results[req.name] = PartitionResult(
-                    name=req.name,
-                    part=np.asarray(parts[best][: req.hg.n], np.int32),
-                    cut=float(rc[best]), k=req.k,
-                    submitted_s=req.submitted_s,
-                    finished_s=time.perf_counter())
-                s.vacate()
+                self._finish(s, rp, rc)
                 finished += 1
             else:
                 s.li -= 1
                 s.need_project = True
+        if self.ckpt_every and self.tick % self.ckpt_every == 0:
+            self._snapshot_slots()
+        self._observe_tick(t_tick)
         return finished
+
+    def _observe_tick(self, t_tick: float) -> None:
+        dt = time.perf_counter() - t_tick
+        self._tick_walls.append(dt)
+        rep = self.watchdog.observe(self.tick, dt)
+        if rep is not None:
+            self.events.append({"tick": self.tick, "kind": "straggler",
+                                "step_time": rep.step_time,
+                                "deadline": rep.deadline})
+
+    @property
+    def straggler_reports(self):
+        return self.watchdog.reports
+
+    def outcome_counts(self) -> Dict[str, int]:
+        """Terminal-state histogram over all results so far (the
+        ``BENCH_robustness.json`` outcome row)."""
+        counts: Dict[str, int] = {}
+        for res in self.results.values():
+            counts[res.status] = counts.get(res.status, 0) + 1
+        return counts
 
     @property
     def busy(self) -> bool:

@@ -130,3 +130,53 @@ def test_checkpoint_atomicity_no_partial_dir(tmp_path):
     step, state, _ = _toy_setup()
     ckpt.save(1, state)
     assert ckpt.latest_step() == 1
+
+
+def test_crash_mid_write_previous_restorable_orphan_gcd(tmp_path,
+                                                        monkeypatch):
+    """A writer that dies between the tmp write and the atomic rename:
+    the PREVIOUS checkpoint stays fully restorable, and the orphaned
+    ``step_<N>.tmp`` is garbage-collected by the next successful save."""
+    import repro.checkpoint.manager as manager_mod
+    step, state, batch_fn = _toy_setup()
+    ckpt = CheckpointManager(str(tmp_path), keep=2)
+    ckpt.save(1, state, extra={"data_cursor": 1})
+
+    real_rename = manager_mod.os.rename
+    def dying_rename(src, dst):
+        raise OSError("injected crash between tmp write and rename")
+    monkeypatch.setattr(manager_mod.os, "rename", dying_rename)
+    state2, _ = step(state, batch_fn(1))
+    with pytest.raises(OSError, match="injected crash"):
+        ckpt.save(2, state2)
+    monkeypatch.setattr(manager_mod.os, "rename", real_rename)
+
+    # the orphan tmp exists, is not a checkpoint, and step 1 restores
+    assert os.path.isdir(os.path.join(str(tmp_path), "step_2.tmp"))
+    assert ckpt.all_steps() == [1]
+    restored, extra = ckpt.restore(state)
+    assert extra["data_cursor"] == 1
+    for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    # the next successful save publishes AND sweeps the orphan
+    ckpt.save(3, state2, extra={"data_cursor": 3})
+    assert not os.path.exists(os.path.join(str(tmp_path), "step_2.tmp"))
+    assert ckpt.all_steps() == [1, 3]
+
+
+def test_restore_items_flat_dict(tmp_path):
+    """Template-free restore of a flat {key: array} checkpoint — the
+    serving-side slot-snapshot path (slot states vary tick to tick, so
+    no fixed template exists)."""
+    ckpt = CheckpointManager(str(tmp_path), keep=2)
+    state = {"slot0.parts": np.arange(12, dtype=np.int32).reshape(3, 4),
+             "slot2.parts": np.ones((2, 5), np.int32)}
+    ckpt.save(7, state, extra={"slots": {"0": {"name": "a", "li": 1}}})
+    items, extra = ckpt.restore_items()
+    assert set(items) == {"slot0.parts", "slot2.parts"}
+    np.testing.assert_array_equal(items["slot0.parts"],
+                                  state["slot0.parts"])
+    assert extra["slots"]["0"] == {"name": "a", "li": 1}
+    with pytest.raises(FileNotFoundError):
+        CheckpointManager(str(tmp_path / "empty")).restore_items()

@@ -58,6 +58,13 @@ def test_serve_env_knobs(monkeypatch):
     assert serve_buckets() == (1024, 4096)
     monkeypatch.setenv("REPRO_SERVE_BUCKETS", "big,bigger")
     assert serve_buckets() is None
+    # non-positive bucket sizes would build degenerate paddings: the
+    # whole grid is rejected (with a one-time warning), not silently kept
+    monkeypatch.setenv("REPRO_SERVE_BUCKETS", "0,-4,1024")
+    with pytest.warns(UserWarning, match="REPRO_SERVE_BUCKETS"):
+        assert serve_buckets() is None
+    with pytest.raises(ValueError, match="must be > 0"):
+        PartitionService(slots=1, buckets=(0, 1024))
 
     monkeypatch.setenv("REPRO_SERVE_COALESCE_MS", "250")
     assert serve_coalesce_s() == pytest.approx(0.25)
@@ -191,12 +198,39 @@ def test_impart_instances_matches_scalar():
         assert b.population_cuts == s.population_cuts
 
 
-def test_impart_instances_rejects_time_budget():
+def test_impart_instances_accepts_time_budget():
+    # the instance driver no longer rejects wall-clock budgets: a spent
+    # budget fast-forwards that request to a degraded best-so-far result
+    # (DESIGN.md §13) instead of raising
     hg = _modular_netlist(260, 340, seed=5, n_modules=5, p_local=0.8,
                           fanout_tail=1.5)
-    with pytest.raises(ValueError, match="batch-invariant"):
-        impart_partition_instances(
-            [hg], [ImpartConfig(k=4, eps=0.08, time_budget_s=1.0)])
+    res = impart_partition_instances(
+        [hg], [ImpartConfig(k=4, eps=0.08, alpha=2, seed=7,
+                            time_budget_s=1e-9)])[0]
+    assert res.degraded
+    assert res.part.shape == (hg.n,) and 0 <= res.part.min()
+    assert res.part.max() < 4 and np.isfinite(res.cut)
+    assert any("budget-exhausted" in t[-1] for t in res.trace)
+
+
+def test_impart_level_budget_batch_invariant():
+    # level_budget is the batch-invariant budget: solo and instance-axis
+    # runs trip it at the same ladder position, so results stay
+    # bit-identical (unlike a wall-clock trigger)
+    hgs = [_modular_netlist(260, 340, seed=5, n_modules=5, p_local=0.8,
+                            fanout_tail=1.5),
+           _modular_netlist(350, 450, seed=6, n_modules=5, p_local=0.8,
+                            fanout_tail=1.5)]
+    cfgs = [ImpartConfig(k=4, eps=0.08, alpha=2, seed=7 + i, lp_iters=3,
+                         contraction_limit_factor=16, level_budget=2)
+            for i in range(2)]
+    solo = [impart_partition(hg, c) for hg, c in zip(hgs, cfgs)]
+    inst = impart_partition_instances(hgs, cfgs)
+    for i, (s, b) in enumerate(zip(solo, inst)):
+        assert s.degraded and b.degraded, f"instance {i}"
+        np.testing.assert_array_equal(b.part, s.part,
+                                      err_msg=f"instance {i}")
+        assert b.cut == s.cut
 
 
 # --------------------------------------------------------------------------

@@ -1,0 +1,397 @@
+"""Fault-tolerant serving (DESIGN.md §13): deadlines, fault injection,
+quarantine, checkpoint/restore, device-loss elasticity.
+
+The robustness contract under test: every request ends in a STRUCTURED
+terminal state (ok / degraded / rejected / timed_out / recovered /
+quarantined — never an unhandled exception), and every request the
+faults did NOT touch stays bit-identical to ``solve_solo``.  Snapshots
+are on-trajectory and refinement is deterministic, so even
+snapshot-resumed requests reproduce the solo answer exactly; only a
+seed-bumped scratch restart (corruption with no snapshot) legitimately
+diverges.
+
+``test_chaos_soak`` drives all four fault kinds through one service run;
+the CI chaos lane runs this file on 8 forced host devices with
+``REPRO_POP_SHARD`` pinned.
+"""
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import popshard
+from repro.data.hypergraphs import _modular_netlist
+from repro.runtime.elastic import (FailureInjector, restore_device_pool,
+                                   simulate_device_loss)
+from repro.serve import faults
+from repro.serve.partition_service import (PartitionRequest,
+                                           PartitionService,
+                                           serve_ckpt_every,
+                                           serve_deadline_s,
+                                           serve_max_queue)
+
+ALPHA = 2
+# deeper ladders than the default so faults have mid-flight ticks to hit
+CLF = 16
+
+
+@pytest.fixture(autouse=True)
+def _full_device_pool():
+    # device-loss tests shrink the module-level pool; never leak that
+    yield
+    restore_device_pool()
+
+
+@pytest.fixture(scope="module")
+def stream():
+    # deeper ladders than request_stream's defaults (≈8 levels at
+    # CLF=16): scheduled faults need mid-flight ticks to land on
+    out = []
+    for i in range(4):
+        hg = _modular_netlist(360 + 40 * i, 460 + 50 * i, seed=20 + i,
+                              n_modules=5, p_local=0.8, fanout_tail=1.5)
+        out.append({"name": f"svc-fault-{i}", "hg": hg, "k": 3,
+                    "eps": 0.08})
+    return out
+
+
+def _svc(**kw):
+    kw.setdefault("slots", 2)
+    kw.setdefault("alpha", ALPHA)
+    kw.setdefault("lp_iters", 4)
+    kw.setdefault("contraction_limit_factor", CLF)
+    return PartitionService(**kw)
+
+
+def _req(r, seed=0, **kw):
+    return PartitionRequest(name=r["name"], hg=r["hg"], k=r["k"],
+                            eps=r["eps"], seed=seed, **kw)
+
+
+@pytest.fixture(scope="module")
+def solo(stream):
+    svc = PartitionService(slots=2, alpha=ALPHA, lp_iters=4,
+                           contraction_limit_factor=CLF)
+    return {r["name"]: svc.solve_solo(_req(r, seed=i))
+            for i, r in enumerate(stream)}
+
+
+# --------------------------------------------------------------------------
+# fault plan: parsing, env wiring, one-time warnings
+# --------------------------------------------------------------------------
+def test_fault_plan_parse_wire_format():
+    plan = faults.FaultPlan.parse(
+        "2:straggler:delay_ms=80;3:device_loss:survivors=2;"
+        "4:corrupt:slot=1,mode=nan_cut;5:crash")
+    assert plan.pending == 4
+    kinds = [e.kind for e in plan.events]
+    assert kinds == ["straggler", "device_loss", "corrupt", "crash"]
+    assert plan.events[0].delay_s == pytest.approx(0.08)
+    assert plan.events[1].survivors == 2
+    assert plan.events[2].slot == 1 and plan.events[2].mode == "nan_cut"
+    # each event fires once; late events fire on the next poll
+    assert [e.kind for e in plan.events_for(3)] == ["straggler",
+                                                    "device_loss"]
+    assert plan.events_for(3) == []
+    assert [e.kind for e in plan.events_for(9)] == ["corrupt", "crash"]
+    assert plan.pending == 0
+    plan.reset()
+    assert plan.pending == 4
+
+
+def test_fault_plan_rejects_bad_specs():
+    with pytest.raises(ValueError, match="unknown fault kind"):
+        faults.FaultPlan.parse("2:meteor")
+    with pytest.raises(ValueError, match="tick:kind"):
+        faults.FaultPlan.parse("nonsense")
+    with pytest.raises(ValueError, match="unknown key"):
+        faults.FaultPlan.parse("2:crash:sever=9")
+    with pytest.raises(ValueError, match=">= 1"):
+        faults.FaultEvent(tick=0, kind="crash")
+
+
+def test_fault_plan_env_warns_once(monkeypatch):
+    monkeypatch.setenv("REPRO_FAULT_PLAN", "not:a:plan:at:all")
+    with pytest.warns(UserWarning, match="REPRO_FAULT_PLAN"):
+        assert faults.fault_plan_env() is None
+    # warn-once: the same bad value does not warn again
+    import warnings as w
+    with w.catch_warnings():
+        w.simplefilter("error")
+        assert faults.fault_plan_env() is None
+    monkeypatch.setenv("REPRO_FAULT_PLAN",
+                       "2:crash;3:device_loss:survivors=1")
+    plan = faults.fault_plan_env()
+    assert plan is not None and plan.pending == 2
+
+
+def test_failure_injector_lifts_to_fault_plan():
+    inj = FailureInjector({3: "generic failure", 5: "straggler",
+                           7: "nan corruption", 9: "node loss"})
+    plan = inj.as_fault_plan()
+    assert [e.kind for e in plan.events] == [
+        "crash", "straggler", "corrupt", "device_loss"]
+
+
+def test_robustness_env_knobs(monkeypatch):
+    monkeypatch.setenv("REPRO_SERVE_DEADLINE_S", "2.5")
+    assert serve_deadline_s() == pytest.approx(2.5)
+    monkeypatch.setenv("REPRO_SERVE_DEADLINE_S", "0")
+    assert serve_deadline_s() is None
+    monkeypatch.setenv("REPRO_SERVE_DEADLINE_S", "whenever")
+    with pytest.warns(UserWarning, match="REPRO_SERVE_DEADLINE_S"):
+        assert serve_deadline_s() is None
+    monkeypatch.setenv("REPRO_SERVE_MAX_QUEUE", "7")
+    assert serve_max_queue() == 7
+    monkeypatch.setenv("REPRO_SERVE_MAX_QUEUE", "-3")
+    with pytest.warns(UserWarning, match="REPRO_SERVE_MAX_QUEUE"):
+        assert serve_max_queue() == 0
+    monkeypatch.setenv("REPRO_SERVE_CKPT_EVERY", "4")
+    assert serve_ckpt_every() == 4
+    monkeypatch.setenv("REPRO_SERVE_CKPT_EVERY", "often")
+    with pytest.warns(UserWarning, match="REPRO_SERVE_CKPT_EVERY"):
+        assert serve_ckpt_every() == 0
+
+
+# --------------------------------------------------------------------------
+# deadlines, admission control, load shedding
+# --------------------------------------------------------------------------
+def test_admission_control_rejects_over_capacity(stream):
+    svc = _svc(slots=1, max_queue=2)
+    assert svc.submit(_req(stream[0])) is None
+    assert svc.submit(_req(stream[1])) is None
+    res = svc.submit(_req(stream[2]))
+    assert res is not None and res.status == "rejected"
+    assert res.part is None and "queue full" in res.error
+    assert svc.results[stream[2]["name"]].status == "rejected"
+
+
+def test_queue_timeout_sheds_structured(stream):
+    svc = _svc(slots=1)
+    svc.submit(_req(stream[0], max_queue_s=0.0))
+    time.sleep(0.01)
+    svc.step()
+    res = svc.results[stream[0]["name"]]
+    assert res.status == "timed_out" and res.part is None
+
+
+def test_expired_deadline_sheds_from_queue(stream):
+    svc = _svc(slots=1)
+    svc.submit(_req(stream[0], deadline_s=1e-6))
+    time.sleep(0.01)
+    svc.step()
+    assert svc.results[stream[0]["name"]].status == "timed_out"
+
+
+def test_near_deadline_finishes_degraded(stream):
+    # admitted with a generous deadline, which then runs out mid-flight:
+    # the slot fast-forwards and returns a VALID best-so-far partition
+    # flagged degraded instead of missing the deadline outright
+    hg = _modular_netlist(420, 540, seed=11, n_modules=5, p_local=0.8,
+                          fanout_tail=1.5)
+    svc = _svc(slots=1)
+    req = PartitionRequest(name="deep", hg=hg, k=3, seed=0,
+                           deadline_s=3600.0)
+    svc.submit(req)
+    svc.step()
+    s = svc.slots[0]
+    assert s.occupied and s.li > 0, "graph too shallow for a mid-flight test"
+    s.request.deadline_s = (time.perf_counter() - req.submitted_s) + 1e-4
+    svc.step()
+    res = svc.results["deep"]
+    assert res.status == "degraded" and res.degraded
+    assert res.part is not None and len(res.part) == hg.n
+    assert 0 <= res.part.min() and res.part.max() < 3
+    assert np.isfinite(res.cut)
+    assert any(e["kind"] == "degraded" for e in svc.events)
+
+
+# --------------------------------------------------------------------------
+# corruption -> validation -> quarantine / recovery
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("mode", faults.CORRUPT_MODES)
+def test_corruption_detected_and_recovered(stream, solo, mode):
+    # corrupt one slot's post-dispatch state; with per-tick snapshots the
+    # retry resumes from the pre-corruption snapshot, so the answer is
+    # STILL bit-identical to solo — and the co-batched request never
+    # sees the poison at all
+    a, b = stream[0], stream[1]
+    plan = faults.FaultPlan.parse(f"2:corrupt:slot=0,mode={mode}")
+    svc = _svc(slots=2, ckpt_every=1, fault_plan=plan)
+    svc.submit(_req(a, seed=0))
+    svc.submit(_req(b, seed=1))
+    svc.drain()
+    ra, rb = svc.results[a["name"]], svc.results[b["name"]]
+    faulted = {e["request"] for e in svc.events
+               if e["kind"] == "corrupt_injected"}
+    assert faulted, "corruption never fired"
+    for r, (sp, sc) in ((ra, solo[a["name"]]), (rb, solo[b["name"]])):
+        expect = "recovered" if r.name in faulted else "ok"
+        assert r.status == expect, (r.name, r.status)
+        np.testing.assert_array_equal(r.part, sp, err_msg=r.name)
+        assert r.cut == sc
+    assert any(e["kind"] == "quarantine" for e in svc.events)
+
+
+def test_corruption_without_snapshot_restarts_seed_bumped(stream):
+    # no checkpointing: the retry restarts from scratch with a bumped
+    # seed — a VALID answer (recovered), though not necessarily solo's
+    r = stream[0]
+    plan = faults.FaultPlan.parse("2:corrupt:slot=0")
+    svc = _svc(slots=1, ckpt_every=0, fault_plan=plan)
+    svc.submit(_req(r))
+    svc.drain()
+    res = svc.results[r["name"]]
+    assert res.status == "recovered"
+    assert res.part is not None and len(res.part) == r["hg"].n
+    assert 0 <= res.part.min() and res.part.max() < r["k"]
+
+
+def test_repeated_corruption_quarantines_terminally(stream):
+    # corruption every tick outlasts the single retry: the request ends
+    # quarantined (structured, part=None), the slot is freed, and a
+    # fresh request then uses it normally
+    r, r2 = stream[0], stream[1]
+    plan = faults.FaultPlan(
+        [faults.FaultEvent(tick=t, kind="corrupt", slot=0)
+         for t in range(1, 30)])
+    svc = _svc(slots=1, ckpt_every=0, fault_plan=plan)
+    svc.submit(_req(r))
+    svc.drain()
+    res = svc.results[r["name"]]
+    assert res.status == "quarantined" and res.part is None
+    assert "balance cap" in res.error or "block id" in res.error
+    assert not svc.slots[0].occupied
+    svc.fault_plan = None
+    svc.submit(_req(r2, seed=1))
+    svc.drain()
+    assert svc.results[r2["name"]].status == "ok"
+
+
+# --------------------------------------------------------------------------
+# crash + straggler injection
+# --------------------------------------------------------------------------
+def test_mid_tick_crash_retries_bit_identical(stream, solo):
+    plan = faults.FaultPlan.parse("2:crash")
+    svc = _svc(slots=2, fault_plan=plan)
+    for i, r in enumerate(stream[:2]):
+        svc.submit(_req(r, seed=i))
+    svc.drain()
+    assert any(e["kind"] == "crash" for e in svc.events)
+    for name in (stream[0]["name"], stream[1]["name"]):
+        res = svc.results[name]
+        sp, sc = solo[name]
+        assert res.status == "ok"
+        np.testing.assert_array_equal(res.part, sp, err_msg=name)
+        assert res.cut == sc
+
+
+def test_straggler_injection_leaves_results_unchanged(stream, solo):
+    plan = faults.FaultPlan.parse("2:straggler:delay_ms=60")
+    svc = _svc(slots=2, fault_plan=plan)
+    svc.submit(_req(stream[0], seed=0))
+    svc.drain()
+    assert any(e["kind"] == "straggler_injected" for e in svc.events)
+    res = svc.results[stream[0]["name"]]
+    sp, sc = solo[stream[0]["name"]]
+    assert res.status == "ok"
+    np.testing.assert_array_equal(res.part, sp)
+    assert res.cut == sc
+
+
+# --------------------------------------------------------------------------
+# checkpoint/restore + device-loss elasticity
+# --------------------------------------------------------------------------
+def test_slot_snapshots_round_trip(stream, tmp_path):
+    svc = _svc(slots=2, ckpt_every=1, ckpt_dir=str(tmp_path))
+    svc.submit(_req(stream[0]))
+    svc.step()
+    items, extra = svc._latest_snapshot()
+    assert items is not None
+    metas = list(extra["slots"].values())
+    assert metas[0]["name"] == stream[0]["name"]
+    key = f"slot0.parts"
+    assert key in items and items[key].ndim == 2
+
+
+def test_device_loss_resumes_bit_identical(stream, solo):
+    # lose all but one device mid-flight: the pool shrinks, the mesh is
+    # rebuilt over the survivors, every in-flight request resumes from
+    # its snapshot — and the answers are STILL bit-identical to solo
+    plan = faults.FaultPlan.parse("2:device_loss:survivors=1")
+    svc = _svc(slots=2, ckpt_every=1, fault_plan=plan)
+    for i, r in enumerate(stream[:2]):
+        svc.submit(_req(r, seed=i))
+    svc.drain()
+    losses = [e for e in svc.events if e["kind"] == "device_loss"]
+    assert losses and losses[0]["survivors"] == 1
+    assert losses[0]["resumed_from_ckpt"] + \
+        losses[0]["restarted_from_scratch"] == 2
+    assert losses[0]["recovery_s"] >= 0.0
+    assert len(popshard.local_devices()) == 1
+    for i, r in enumerate(stream[:2]):
+        res = svc.results[r["name"]]
+        sp, sc = solo[r["name"]]
+        assert res.status == "recovered"
+        np.testing.assert_array_equal(res.part, sp, err_msg=r["name"])
+        assert res.cut == sc
+
+
+def test_device_loss_without_snapshots_restarts_deterministic(stream, solo):
+    # checkpointing off: resume falls back to a scratch re-install with
+    # the ORIGINAL seed — deterministic, so still bit-identical to solo
+    plan = faults.FaultPlan.parse("2:device_loss:survivors=1")
+    svc = _svc(slots=1, ckpt_every=0, fault_plan=plan)
+    svc.submit(_req(stream[0]))
+    svc.drain()
+    losses = [e for e in svc.events if e["kind"] == "device_loss"]
+    assert losses and losses[0]["restarted_from_scratch"] == 1
+    res = svc.results[stream[0]["name"]]
+    sp, sc = solo[stream[0]["name"]]
+    assert res.status == "recovered"
+    np.testing.assert_array_equal(res.part, sp)
+    assert res.cut == sc
+
+
+def test_device_pool_restore():
+    full = len(popshard.local_devices())
+    assert len(simulate_device_loss(1)) == 1
+    assert len(popshard.local_devices()) == 1
+    assert len(restore_device_pool()) == full
+
+
+# --------------------------------------------------------------------------
+# the chaos soak: all four fault kinds in one run (the CI chaos lane)
+# --------------------------------------------------------------------------
+def test_chaos_soak(stream, solo):
+    # straggler, device loss, corruption, and a crash all hit one service
+    # run with per-tick snapshots.  Contract: every request ends in a
+    # structured terminal state; nothing escapes as an exception; and
+    # because every recovery path here is snapshot-resume or same-seed
+    # restart, EVERY completed request is bit-identical to solo.
+    plan = faults.FaultPlan.parse(
+        "2:straggler:delay_ms=40;3:device_loss:survivors=2;"
+        "4:corrupt:slot=0,mode=block_range;5:crash")
+    svc = _svc(slots=4, ckpt_every=1, fault_plan=plan)
+    for i, r in enumerate(stream):
+        svc.submit(_req(r, seed=i))
+    res = svc.drain()
+    assert plan.pending == 0, "some scheduled faults never fired"
+    assert len(res) == len(stream) and not svc.busy
+    terminal = {"ok", "degraded", "rejected", "timed_out", "recovered",
+                "quarantined"}
+    faulted = {e.get("request") for e in svc.events
+               if e["kind"] in ("corrupt_injected", "quarantine")}
+    for i, r in enumerate(stream):
+        got = svc.results[r["name"]]
+        assert got.status in terminal, (r["name"], got.status)
+        sp, sc = solo[r["name"]]
+        np.testing.assert_array_equal(got.part, sp, err_msg=r["name"])
+        assert got.cut == sc
+        if got.status == "ok":
+            assert r["name"] not in faulted
+    kinds = {e["kind"] for e in svc.events}
+    assert {"straggler_injected", "device_loss", "corrupt_injected",
+            "quarantine", "crash"} <= kinds
+    counts = svc.outcome_counts()
+    assert sum(counts.values()) == len(stream)
