@@ -19,6 +19,9 @@ from .recombine import recombine, ring_recombination, overlay_clustering
 from .mutate import mutate_population, mutate_path, similarity_sets
 from .vcycle import vcycle, vcycle_population
 from .population import make_population_step, population_step_fn
+from .incremental import (incremental_partition, repartition_k_change,
+                          IncrementalConfig, IncrementalResult,
+                          IncrementalState)
 from . import metrics, refine, ilp
 
 __all__ = [
@@ -33,5 +36,8 @@ __all__ = [
     "MultilevelResult", "recombine", "ring_recombination",
     "overlay_clustering", "mutate_population", "mutate_path",
     "similarity_sets", "vcycle", "vcycle_population",
-    "make_population_step", "population_step_fn", "metrics", "refine", "ilp",
+    "make_population_step", "population_step_fn",
+    "incremental_partition", "repartition_k_change", "IncrementalConfig",
+    "IncrementalResult", "IncrementalState",
+    "metrics", "refine", "ilp",
 ]

@@ -162,11 +162,21 @@ class Hypergraph:
             edge_weights=self.edge_weights,
         )
 
-    def with_edge_weights(self, new_weights: np.ndarray) -> "Hypergraph":
+    def with_edge_weights(self, new_weights: np.ndarray,
+                          new_vertex_weights: np.ndarray | None = None
+                          ) -> "Hypergraph":
+        """Reweighted copy sharing ALL structure (pins, offsets, layout
+        cache, device structure arrays via donation).  The optional
+        ``new_vertex_weights`` extends the same donation path to vertex
+        drift (DESIGN.md §14): identity of the vertex-weight array tells
+        ``arrays()`` whether that leaf needs re-shipping."""
         hg = Hypergraph(
             n=self.n, m=self.m, pins=self.pins,
             edge_offsets=self.edge_offsets,
-            vertex_weights=self.vertex_weights,
+            vertex_weights=(self.vertex_weights
+                            if new_vertex_weights is None
+                            else np.asarray(new_vertex_weights,
+                                            np.float32)),
             edge_weights=np.asarray(new_weights, np.float32),
         )
         hg._incident, hg._vertex_offsets = self._incident, self._vertex_offsets
@@ -194,12 +204,18 @@ class Hypergraph:
             donor = self._arrays_donor
             base = donor._arrays_cache.get(key) if donor is not None else None
             if base is not None:
-                # same structure, different edge weights: reuse every
-                # structural device leaf from the donor's arrays
+                # same structure, different weights: reuse every
+                # structural device leaf from the donor's arrays and
+                # re-ship only the weight leaves that actually changed
                 ew = np.zeros(base.m_pad, np.float32)
                 ew[: self.m] = self.edge_weights
                 hit = dataclasses.replace(base,
                                           edge_weights=jnp.asarray(ew))
+                if self.vertex_weights is not donor.vertex_weights:
+                    vw = np.zeros(base.n_pad, np.float32)
+                    vw[: self.n] = self.vertex_weights
+                    hit = dataclasses.replace(hit,
+                                              vertex_weights=jnp.asarray(vw))
             else:
                 hit = HypergraphArrays.from_host(self, pad_pins, pad_edges,
                                                  pad_vertices)

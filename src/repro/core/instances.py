@@ -129,6 +129,13 @@ class InstanceBatch:
     ns: Tuple[int, ...]          # host true vertex counts
     ks: Tuple[int, ...]          # host true block counts
     orig_n_pads: Tuple[int, ...]  # natural paddings before bucketing
+    # bounded migration (DESIGN.md §14): per-instance incumbent rows and
+    # moved-weight budgets.  None = the whole batch is unconstrained (the
+    # pre-§14 program, byte-for-byte); unconstrained instances co-batched
+    # with incremental ones ride with an all-zeros incumbent and an inf
+    # budget, whose masks are all-True — bit-identical trajectories.
+    incumbent: Optional[jnp.ndarray] = None   # [I, n_pad] int32
+    mig_budget: Optional[jnp.ndarray] = None  # [I] f32
 
     @property
     def n_instances(self) -> int:
@@ -141,11 +148,18 @@ class InstanceBatch:
 
 def stack_instances(hgas: Sequence[HypergraphArrays], ks: Sequence[int],
                     epss: Sequence[float],
-                    grid: Optional[Sequence[int]] = None) -> InstanceBatch:
+                    grid: Optional[Sequence[int]] = None,
+                    incumbents: Optional[Sequence] = None,
+                    mig_budgets: Optional[Sequence] = None) -> InstanceBatch:
     """Stack independent levels into one bucket batch.  Targets are the
     per-axis maxima over the group (``grid`` rounds the vertex axis), so
     any mix of natural pow2 paddings stacks; each instance is re-padded
-    inertly first."""
+    inertly first.
+
+    ``incumbents``/``mig_budgets`` (optional, DESIGN.md §14): per-instance
+    incumbent assignments and migration budgets; ``None`` entries (cold
+    instances sharing the bucket) get a zeros incumbent + inf budget,
+    which is bit-identical to the unconstrained trace."""
     if not (len(hgas) == len(ks) == len(epss)):
         raise ValueError("hgas/ks/epss length mismatch")
     n_pad = bucket_n_pad(max(h.n_pad for h in hgas), grid)
@@ -169,6 +183,19 @@ def stack_instances(hgas: Sequence[HypergraphArrays], ks: Sequence[int],
         n=jnp.stack([jnp.asarray(r.n, jnp.int32) for r in rep]),
         m=jnp.stack([jnp.asarray(r.m, jnp.int32) for r in rep]),
         incident=None)
+    inc = mb = None
+    if incumbents is not None and any(x is not None for x in incumbents):
+        inc_rows = np.zeros((len(hgas), n_pad), np.int32)
+        mb_rows = np.full(len(hgas), np.inf, np.float32)
+        for i, x in enumerate(incumbents):
+            if x is None:
+                continue
+            x = np.asarray(x, np.int32)
+            inc_rows[i, :x.shape[0]] = x
+            b = None if mig_budgets is None else mig_budgets[i]
+            mb_rows[i] = np.inf if b is None else float(b)
+        inc = jnp.asarray(inc_rows)
+        mb = jnp.asarray(mb_rows)
     return InstanceBatch(
         hga=stacked, k_pad=k_pad,
         k_live=jnp.asarray([int(k) for k in ks], jnp.int32),
@@ -176,7 +203,8 @@ def stack_instances(hgas: Sequence[HypergraphArrays], ks: Sequence[int],
         ns=tuple(int(jnp.asarray(h.n)) if not isinstance(h.n, (int,
                  np.integer)) else int(h.n) for h in hgas),
         ks=tuple(int(k) for k in ks),
-        orig_n_pads=tuple(h.n_pad for h in hgas))
+        orig_n_pads=tuple(h.n_pad for h in hgas),
+        incumbent=inc, mig_budget=mb)
 
 
 def stack_parts(parts_list: Sequence, n_pad: int) -> np.ndarray:
@@ -193,12 +221,14 @@ def stack_parts(parts_list: Sequence, n_pad: int) -> np.ndarray:
 # batched dispatch units (vmap the population impls over the instance axis)
 # --------------------------------------------------------------------------
 def _lp_attempt_instances_impl(hga, parts, cuts, fracs, live, attempts,
-                               k: int, cap, k_live):
-    def one(h, p, c, f, lv, att, cp, kl):
+                               k: int, cap, k_live, incumbent=None,
+                               mig_budget=None):
+    def one(h, p, c, f, lv, att, cp, kl, inc, mb):
         return refine_mod._lp_attempt_population_impl(
-            h, p, c, f, att, k, cp, live=lv, k_live=kl)
+            h, p, c, f, att, k, cp, live=lv, k_live=kl, incumbent=inc,
+            mig_budget=mb)
     return jax.vmap(one)(hga, parts, cuts, fracs, live, attempts, cap,
-                         k_live)
+                         k_live, incumbent, mig_budget)
 
 
 _lp_attempt_instances = partial(jax.jit, static_argnames=("k",))(
@@ -211,21 +241,28 @@ def _lp_attempt_instances_mesh(mesh, k: int):
     EVERY leaf — structure included — shards its instance axis over
     "pop".  Instances are independent, so there is no collective at all;
     each shard runs its instances' exact solo trip counts."""
-    def body(hga, parts, cuts, fracs, live, attempts, cap, k_live):
+    def body(hga, parts, cuts, fracs, live, attempts, cap, k_live,
+             incumbent, mig_budget):
         return _lp_attempt_instances_impl(hga, parts, cuts, fracs, live,
-                                          attempts, k, cap, k_live)
+                                          attempts, k, cap, k_live,
+                                          incumbent=incumbent,
+                                          mig_budget=mig_budget)
 
     fn = shard_map(body, mesh,
-                   in_specs=(P("pop"),) * 8,
+                   in_specs=(P("pop"),) * 10,
                    out_specs=(P("pop"),) * 5)
     return jax.jit(fn)
 
 
-def _fm_pass_instances_impl(hga, parts, k: int, cap, steps, k_live):
-    def one(h, p, cp, st, kl):
+def _fm_pass_instances_impl(hga, parts, k: int, cap, steps, k_live,
+                            incumbent=None, mig_budget=None):
+    def one(h, p, cp, st, kl, inc, mb):
         return refine_mod._fm_pass_population_impl(h, p, k, cp, st,
-                                                   k_live=kl)
-    return jax.vmap(one)(hga, parts, cap, steps, k_live)
+                                                   k_live=kl,
+                                                   incumbent=inc,
+                                                   mig_budget=mb)
+    return jax.vmap(one)(hga, parts, cap, steps, k_live, incumbent,
+                         mig_budget)
 
 
 _fm_pass_instances = partial(jax.jit, static_argnames=("k",))(
@@ -234,11 +271,13 @@ _fm_pass_instances = partial(jax.jit, static_argnames=("k",))(
 
 @lru_cache(maxsize=32)
 def _fm_pass_instances_mesh(mesh, k: int):
-    def body(hga, parts, cap, steps, k_live):
-        return _fm_pass_instances_impl(hga, parts, k, cap, steps, k_live)
+    def body(hga, parts, cap, steps, k_live, incumbent, mig_budget):
+        return _fm_pass_instances_impl(hga, parts, k, cap, steps, k_live,
+                                       incumbent=incumbent,
+                                       mig_budget=mig_budget)
 
     fn = shard_map(body, mesh,
-                   in_specs=(P("pop"),) * 5,
+                   in_specs=(P("pop"),) * 7,
                    out_specs=(P("pop"),) * 2)
     return jax.jit(fn)
 
@@ -271,7 +310,10 @@ def _take_i(batch: InstanceBatch, idx) -> InstanceBatch:
         fm_steps=batch.fm_steps[j],
         ns=tuple(batch.ns[i] for i in idx),
         ks=tuple(batch.ks[i] for i in idx),
-        orig_n_pads=tuple(batch.orig_n_pads[i] for i in idx))
+        orig_n_pads=tuple(batch.orig_n_pads[i] for i in idx),
+        incumbent=None if batch.incumbent is None else batch.incumbent[j],
+        mig_budget=(None if batch.mig_budget is None
+                    else batch.mig_budget[j]))
 
 
 # --------------------------------------------------------------------------
@@ -298,10 +340,12 @@ def _dispatch_lp(batch: InstanceBatch, parts, cuts32, fracs, live, att,
         sh = popshard.pop_sharding(mesh)
         nI = parts.shape[0]
         put = lambda x: jax.device_put(_pad_i(x, npop), sh)
+        opt = lambda x: None if x is None else put(x)
         hga_p = jax.tree_util.tree_map(put, batch.hga)
         fn = _lp_attempt_instances_mesh(mesh, k)
         out = fn(hga_p, *(put(a) for a in args), put(batch.cap),
-                 put(batch.k_live))
+                 put(batch.k_live), opt(batch.incumbent),
+                 opt(batch.mig_budget))
         return tuple(np.asarray(o)[:nI] for o in out)
     if path == "chunk":
         devs = popshard.local_devices()
@@ -313,14 +357,19 @@ def _dispatch_lp(batch: InstanceBatch, parts, cuts32, fracs, live, att,
             for di in range(ndev):
                 lo, hi = bounds[di], bounds[di + 1]
                 put = lambda x: jax.device_put(x[lo:hi], devs[di])
+                opt = lambda x: None if x is None else put(x)
                 outs.append(_lp_attempt_instances(
                     jax.tree_util.tree_map(put, batch.hga),
                     *(put(a) for a in args),
-                    k=k, cap=put(batch.cap), k_live=put(batch.k_live)))
+                    k=k, cap=put(batch.cap), k_live=put(batch.k_live),
+                    incumbent=opt(batch.incumbent),
+                    mig_budget=opt(batch.mig_budget)))
             return tuple(np.concatenate([np.asarray(o[i]) for o in outs])
                          for i in range(5))
     out = _lp_attempt_instances(batch.hga, *args, k=k, cap=batch.cap,
-                                k_live=batch.k_live)
+                                k_live=batch.k_live,
+                                incumbent=batch.incumbent,
+                                mig_budget=batch.mig_budget)
     return tuple(np.asarray(o) for o in out)
 
 
@@ -331,13 +380,13 @@ def _dispatch_fm(batch: InstanceBatch, parts, path: str):
         npop = mesh.shape["pop"]
         sh = popshard.pop_sharding(mesh)
         nI = parts.shape[0]
+        put = lambda x: jax.device_put(_pad_i(x, npop), sh)
+        opt = lambda x: None if x is None else put(x)
         fn = _fm_pass_instances_mesh(mesh, k)
-        out = fn(jax.device_put(jax.tree_util.tree_map(
-                     lambda x: _pad_i(x, npop), batch.hga), sh),
-                 jax.device_put(_pad_i(jnp.asarray(parts), npop), sh),
-                 jax.device_put(_pad_i(batch.cap, npop), sh),
-                 jax.device_put(_pad_i(batch.fm_steps, npop), sh),
-                 jax.device_put(_pad_i(batch.k_live, npop), sh))
+        out = fn(jax.tree_util.tree_map(put, batch.hga),
+                 put(jnp.asarray(parts)), put(batch.cap),
+                 put(batch.fm_steps), put(batch.k_live),
+                 opt(batch.incumbent), opt(batch.mig_budget))
         return (np.asarray(out[0])[:nI],
                 np.asarray(out[1])[:nI].astype(np.float64))
     if path == "chunk":
@@ -350,16 +399,21 @@ def _dispatch_fm(batch: InstanceBatch, parts, path: str):
             for di in range(ndev):
                 lo, hi = bounds[di], bounds[di + 1]
                 put = lambda x: jax.device_put(x[lo:hi], devs[di])
+                opt = lambda x: None if x is None else put(x)
                 outs.append(_fm_pass_instances(
                     jax.tree_util.tree_map(put, batch.hga),
                     put(jnp.asarray(parts)), k=k, cap=put(batch.cap),
-                    steps=put(batch.fm_steps), k_live=put(batch.k_live)))
+                    steps=put(batch.fm_steps), k_live=put(batch.k_live),
+                    incumbent=opt(batch.incumbent),
+                    mig_budget=opt(batch.mig_budget)))
             return (np.concatenate([np.asarray(o[0]) for o in outs]),
                     np.concatenate([np.asarray(o[1])
                                     for o in outs]).astype(np.float64))
     out = _fm_pass_instances(batch.hga, jnp.asarray(parts), k=k,
                              cap=batch.cap, steps=batch.fm_steps,
-                             k_live=batch.k_live)
+                             k_live=batch.k_live,
+                             incumbent=batch.incumbent,
+                             mig_budget=batch.mig_budget)
     return np.asarray(out[0]), np.asarray(out[1], np.float64)
 
 
@@ -461,21 +515,33 @@ def refine_grouped(entries, grid: Optional[Sequence[int]] = None,
                    ) -> List[Tuple[np.ndarray, np.ndarray]]:
     """Refine a heterogeneous set of instances by bucketed stacks.
 
-    ``entries``: sequence of ``(hga, parts [A, n_pad_i], k, eps)``.
+    ``entries``: sequence of ``(hga, parts [A, n_pad_i], k, eps)`` or
+    ``(hga, parts, k, eps, incumbent, mig_budget)`` — incremental
+    entries (DESIGN.md §14) carry their incumbent assignment [n_i] and
+    moved-weight budget; both entry kinds co-batch in one bucket (cold
+    entries ride the constrained trace with an inf budget, which is
+    bit-identical to the unconstrained one).
     Returns per-entry ``(parts [A, n_pad_i], cuts [A])`` in input order,
     each bit-identical to ``refine.refine_population`` on that entry
-    alone.  This is the dispatch unit the V-cycle drivers and the
-    partition service share.
+    alone (with the same incumbent/budget).  This is the dispatch unit
+    the V-cycle drivers and the partition service share.
     """
     groups: dict = {}
-    for i, (hga, _, k, _) in enumerate(entries):
-        groups.setdefault(group_key(hga, k, grid), []).append(i)
+    for i, e in enumerate(entries):
+        groups.setdefault(group_key(e[0], e[2], grid), []).append(i)
     out: List = [None] * len(entries)
     for idx in groups.values():
         hgas = [entries[i][0] for i in idx]
         ks = [entries[i][2] for i in idx]
         epss = [entries[i][3] for i in idx]
-        batch = stack_instances(hgas, ks, epss, grid=grid)
+        incs = [entries[i][4] if len(entries[i]) > 4 else None
+                for i in idx]
+        mbs = [entries[i][5] if len(entries[i]) > 5 else None
+               for i in idx]
+        if all(x is None for x in incs):
+            incs = mbs = None
+        batch = stack_instances(hgas, ks, epss, grid=grid,
+                                incumbents=incs, mig_budgets=mbs)
         parts = stack_parts([entries[i][1] for i in idx], batch.n_pad)
         rp, rc = refine_instances(batch, parts,
                                   fm_node_limit=fm_node_limit,

@@ -75,13 +75,25 @@ def pad_parts(parts, n_pad: int) -> jnp.ndarray:
 def accept_moves(part: jnp.ndarray, target: jnp.ndarray, gain: jnp.ndarray,
                  propose: jnp.ndarray, vertex_weights: jnp.ndarray,
                  bw: jnp.ndarray, cap: jnp.ndarray, frac: jnp.ndarray,
-                 k: int) -> jnp.ndarray:
+                 k: int, incumbent: jnp.ndarray | None = None,
+                 mig_remaining: jnp.ndarray | None = None) -> jnp.ndarray:
     """Balanced parallel-move acceptance (shared by lp_round and the
     distributed population step).
 
     Proposals (vertex -> target block, expected gain) are ranked by gain;
     the top ``frac`` are kept; per-target-block capacity is enforced with
     a prefix sum over the sorted proposal weights — no sequential loop.
+
+    ``incumbent`` + ``mig_remaining`` (optional, DESIGN.md §14) add the
+    bounded-migration objective: ``mig_remaining`` is the moved-vertex
+    weight still allowed relative to ``incumbent``.  A second prefix sum
+    over the sorted order accumulates the POSITIVE migration deltas of
+    the kept proposals; a migration-increasing proposal is accepted only
+    while that conservative cumulative stays within the remaining
+    budget (rejected earlier proposals only make it safer), and
+    migration-decreasing proposals are always migration-feasible.  With
+    an infinite budget every mask is all-True, so unconstrained
+    trajectories are bit-identical to the constrained trace.
     """
     n_pad = part.shape[0]
     order = jnp.argsort(jnp.where(propose, -gain, -NEG))
@@ -98,6 +110,14 @@ def accept_moves(part: jnp.ndarray, target: jnp.ndarray, gain: jnp.ndarray,
     fit_own = jnp.take_along_axis(
         fits_sorted, jnp.minimum(tgt_sorted, k - 1)[:, None], axis=-1)[:, 0]
     accept_sorted = fit_own & (tgt_sorted < k)
+    if incumbent is not None:
+        moved_now = (part != incumbent).astype(vertex_weights.dtype)
+        moved_tgt = (target != incumbent).astype(vertex_weights.dtype)
+        delta = vertex_weights * (moved_tgt - moved_now)
+        delta_sorted = jnp.where(propose, delta, 0.0)[order]
+        pos_pref = jnp.cumsum(jnp.maximum(delta_sorted, 0.0))
+        mig_ok = (delta_sorted <= 0.0) | (pos_pref <= mig_remaining + 1e-6)
+        accept_sorted = accept_sorted & mig_ok
     accept = jnp.zeros(n_pad, bool).at[order].set(accept_sorted)
     return jnp.where(accept, target, part)
 
@@ -113,7 +133,10 @@ def _with_weights(hga: HypergraphArrays,
 def _lp_round_from_gains(h: HypergraphArrays, part: jnp.ndarray, k: int,
                          cap: jnp.ndarray, frac: jnp.ndarray,
                          gains: jnp.ndarray,
-                         k_live: jnp.ndarray | None = None) -> jnp.ndarray:
+                         k_live: jnp.ndarray | None = None,
+                         incumbent: jnp.ndarray | None = None,
+                         mig_budget: jnp.ndarray | None = None
+                         ) -> jnp.ndarray:
     """Proposal + balanced acceptance given a precomputed gain matrix
     (the gain assembly is hoisted out so population callers can route it
     through the batched kernels instead of vmapping a pallas_call).
@@ -124,6 +147,11 @@ def _lp_round_from_gains(h: HypergraphArrays, part: jnp.ndarray, k: int,
     k=k_live run would — columns below k_live are untouched and argmax
     tie-breaking over the row-major flat order is preserved, so the
     trajectory is bit-identical.
+
+    ``incumbent`` [n_pad] + ``mig_budget`` (optional traced scalar,
+    DESIGN.md §14): bound the total moved-vertex weight relative to the
+    incumbent assignment.  The remaining budget for this round is the
+    full budget minus what the current partition has already migrated.
     """
     n_pad = h.n_pad
     own = jax.nn.one_hot(part, k, dtype=bool)
@@ -136,8 +164,13 @@ def _lp_round_from_gains(h: HypergraphArrays, part: jnp.ndarray, k: int,
     valid = (jnp.arange(n_pad) < h.n) & (h.vertex_weights > 0)
     propose = valid & (best_g > 1e-9)
     bw = metrics.block_weights(h, part, k)
+    mig_remaining = None
+    if incumbent is not None:
+        moved = jnp.where(part != incumbent, h.vertex_weights, 0.0).sum()
+        mig_remaining = mig_budget - moved
     return accept_moves(part, best_j, best_g, propose, h.vertex_weights,
-                        bw, cap, frac, k)
+                        bw, cap, frac, k, incumbent=incumbent,
+                        mig_remaining=mig_remaining)
 
 
 def _lp_round_impl(hga: HypergraphArrays, part: jnp.ndarray, k: int,
@@ -170,7 +203,9 @@ def _lp_round_population_impl(hga: HypergraphArrays, parts: jnp.ndarray,
                               k: int, cap: jnp.ndarray, fracs: jnp.ndarray,
                               edge_weight_override: jnp.ndarray | None = None,
                               edge_weights_pop: jnp.ndarray | None = None,
-                              k_live: jnp.ndarray | None = None
+                              k_live: jnp.ndarray | None = None,
+                              incumbent: jnp.ndarray | None = None,
+                              mig_budget: jnp.ndarray | None = None
                               ) -> jnp.ndarray:
     """lp_round for all members: gains come from the batched dispatcher
     (one kernel launch for the population), the proposal/acceptance tail
@@ -179,13 +214,17 @@ def _lp_round_population_impl(hga: HypergraphArrays, parts: jnp.ndarray,
     ``edge_weights_pop`` [alpha, m_pad] gives each member its OWN edge
     weights over the shared structure (the mutation cohort, DESIGN.md
     §10); ``edge_weight_override`` [m_pad] stays the shared-bias variant.
+    ``incumbent`` [n_pad] + ``mig_budget`` scalar are shared by all
+    members (every lane bounds its own migration, DESIGN.md §14).
     """
     h = _with_weights(hga, edge_weight_override)
     gains = metrics._gain_matrix_population_impl(
         h, parts, k, ew_pop=edge_weights_pop)
     return jax.vmap(
         lambda p, f, g: _lp_round_from_gains(h, p, k, cap, f, g,
-                                             k_live=k_live))(
+                                             k_live=k_live,
+                                             incumbent=incumbent,
+                                             mig_budget=mig_budget))(
             parts, fracs, gains)
 
 
@@ -209,7 +248,9 @@ def _lp_attempt_population_impl(hga: HypergraphArrays, parts: jnp.ndarray,
                                 edge_weights_pop=None,
                                 pop_axis: str | None = None,
                                 live: jnp.ndarray | None = None,
-                                k_live: jnp.ndarray | None = None):
+                                k_live: jnp.ndarray | None = None,
+                                incumbent: jnp.ndarray | None = None,
+                                mig_budget: jnp.ndarray | None = None):
     """Device-resident LP attempt loop fused into one ``lax.while_loop``.
 
     Per member (mirroring the scalar ``lp_refine`` inner loop exactly):
@@ -253,7 +294,9 @@ def _lp_attempt_population_impl(hga: HypergraphArrays, parts: jnp.ndarray,
         cands = _lp_round_population_impl(hga, parts, k, cap, fracs,
                                           edge_weight_override,
                                           edge_weights_pop,
-                                          k_live=k_live)
+                                          k_live=k_live,
+                                          incumbent=incumbent,
+                                          mig_budget=mig_budget)
         if edge_weights_pop is None:
             cs = jax.vmap(lambda p: metrics.cutsize(hga, p, k))(cands)
         else:  # each member's acceptance cut on its own reweight
@@ -290,16 +333,17 @@ def _lp_attempt_population_mesh(mesh, k: int):
     sharded over "pop".  Cached per (mesh, k); jit handles the rest of
     the signature (presence of the optional weight args, bucket shapes).
     """
-    def body(hga, parts, cuts, fracs, attempts, cap, ewo, ew_pop):
+    def body(hga, parts, cuts, fracs, attempts, cap, ewo, ew_pop,
+             incumbent, mig_budget):
         return _lp_attempt_population_impl(
             hga, parts, cuts, fracs, attempts, k, cap,
             edge_weight_override=ewo, edge_weights_pop=ew_pop,
-            pop_axis="pop")
+            pop_axis="pop", incumbent=incumbent, mig_budget=mig_budget)
 
     fn = shard_map(
         body, mesh,
         in_specs=(P(), P("pop"), P("pop"), P("pop"), P(), P(), P(),
-                  P("pop")),
+                  P("pop"), P(), P()),
         out_specs=(P("pop"), P("pop"), P("pop"), P("pop"), P()))
     return jax.jit(fn)
 
@@ -337,7 +381,8 @@ def lp_refine(hga: HypergraphArrays, part: np.ndarray, k: int, eps: float,
 def lp_refine_population(hga: HypergraphArrays, parts, k: int, eps: float,
                          max_iters: int = 24, patience: int = 3,
                          edge_weight_override=None, edge_weights_pop=None,
-                         shard: str | None = None
+                         shard: str | None = None,
+                         incumbent=None, mig_budget: float | None = None
                          ) -> Tuple[np.ndarray, np.ndarray]:
     """Batched ``lp_refine``: ONE device dispatch per round covers the
     whole population, attempts included.
@@ -360,10 +405,19 @@ def lp_refine_population(hga: HypergraphArrays, parts, k: int, eps: float,
     (DESIGN.md §11) — structure replicated, member rows sharded over
     "pop", trip counts synchronised by a psum'd improvement flag — with
     per-member trajectories bit-identical to the single-device engine.
+
+    ``incumbent`` [n] + ``mig_budget`` (optional, DESIGN.md §14): every
+    member's moved-vertex weight relative to the incumbent stays within
+    the budget throughout refinement (an infinite budget is bit-identical
+    to omitting both).
     """
     cap = _cap_for(hga, k, eps)
     parts = pad_parts(parts, hga.n_pad)
     alpha = parts.shape[0]
+    inc = mb = None
+    if incumbent is not None:
+        inc = pad_part(incumbent, hga.n_pad)
+        mb = float(np.inf if mig_budget is None else mig_budget)
     if edge_weights_pop is not None:
         edge_weights_pop = jnp.asarray(edge_weights_pop, jnp.float32)
         cuts = np.asarray(metrics.cutsize_population_weighted(
@@ -379,6 +433,8 @@ def lp_refine_population(hga: HypergraphArrays, parts, k: int, eps: float,
         if edge_weight_override is not None:
             ewo_m = jax.device_put(edge_weight_override,
                                    popshard.replicated(mesh))
+        if inc is not None:
+            inc = jax.device_put(inc, popshard.replicated(mesh))
         # host mirror (the FM tier's design): active rows merge with
         # numpy writes, never through a single-device detour
         parts = np.array(parts)
@@ -430,7 +486,8 @@ def lp_refine_population(hga: HypergraphArrays, parts, k: int, eps: float,
                     _put_rows(fracs[idx], npop, pop_sh),
                     jnp.int32(remaining), cap_m, ewo_m,
                     None if sub_ew is None
-                    else _put_rows(sub_ew, npop, pop_sh))
+                    else _put_rows(sub_ew, npop, pop_sh),
+                    inc, mb)
                 parts[idx] = np.asarray(new_sub)[:na]
                 new_cuts = np.asarray(new_cuts)[:na]
                 improved = np.asarray(improved)[:na]
@@ -441,7 +498,8 @@ def lp_refine_population(hga: HypergraphArrays, parts, k: int, eps: float,
                         hga, sub, jnp.asarray(cuts[idx], jnp.float32),
                         jnp.asarray(fracs[idx]), jnp.int32(remaining), k,
                         cap, edge_weight_override=edge_weight_override,
-                        edge_weights_pop=sub_ew)
+                        edge_weights_pop=sub_ew, incumbent=inc,
+                        mig_budget=mb)
                 improved = np.asarray(improved)
                 if len(idx) < alpha:
                     parts = parts.at[jnp.asarray(idx)].set(new_sub)
@@ -465,7 +523,9 @@ def lp_refine_population(hga: HypergraphArrays, parts, k: int, eps: float,
 # --------------------------------------------------------------------------
 def _fm_pass_impl(hga: HypergraphArrays, part: jnp.ndarray, k: int,
                   cap: jnp.ndarray, steps: int,
-                  k_live: jnp.ndarray | None = None
+                  k_live: jnp.ndarray | None = None,
+                  incumbent: jnp.ndarray | None = None,
+                  mig_budget: jnp.ndarray | None = None
                   ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """One FM pass: up to ``steps`` single moves (negative gains allowed),
     returns the best prefix (partition + its cut).
@@ -482,15 +542,27 @@ def _fm_pass_impl(hga: HypergraphArrays, part: jnp.ndarray, k: int,
     over [n_pad, k] preserves the row-major (v, j) order of the
     [n_pad, k_live] matrix a solo run would scan, so the selected move
     sequence — and therefore the best prefix — is bit-identical.
+
+    ``incumbent`` [n_pad] + ``mig_budget`` (optional, DESIGN.md §14):
+    the moved-vertex weight relative to the incumbent is carried through
+    the loop state; a move whose migration delta would push it past the
+    budget is masked to NEG exactly like a balance violation.  Every
+    trajectory prefix then satisfies the budget by induction, so the
+    best-prefix rollback is always feasible.
     """
     n_pad = hga.n_pad
     valid = (jnp.arange(n_pad) < hga.n) & (hga.vertex_weights > 0)
     phi0 = metrics.pins_in_block(hga, part, k)
     bw0 = metrics.block_weights(hga, part, k)
     cut0 = metrics.cutsize(hga, part, k)
+    if incumbent is None:
+        mig0 = jnp.float32(0.0)
+    else:
+        mig0 = jnp.where(part != incumbent, hga.vertex_weights, 0.0).sum()
 
     def body(carry):
-        part, phi, bw, locked, cur_cut, best_cut, best_part, t, _ = carry
+        (part, phi, bw, locked, cur_cut, best_cut, best_part, mig_w,
+         t, _) = carry
         # FM pins the segsum path: this body is vmapped by the population
         # pass, so batching must stay a plain XLA transform (never a
         # pallas_call), and FM only runs on coarse levels whose tiny pin
@@ -503,6 +575,15 @@ def _fm_pass_impl(hga: HypergraphArrays, part: jnp.ndarray, k: int,
         score = jnp.where(own | ~feasible, NEG, gains)
         if k_live is not None:
             score = jnp.where(jnp.arange(k)[None, :] >= k_live, NEG, score)
+        delta_mig = None
+        if incumbent is not None:
+            moved_tgt = (jnp.arange(k, dtype=jnp.int32)[None, :]
+                         != incumbent[:, None]).astype(jnp.float32)
+            moved_cur = (part != incumbent).astype(jnp.float32)
+            delta_mig = hga.vertex_weights[:, None] * (
+                moved_tgt - moved_cur[:, None])                # [n_pad, k]
+            score = jnp.where(mig_w + delta_mig > mig_budget + 1e-6,
+                              NEG, score)
         score = jnp.where((locked | ~valid)[:, None], NEG, score)
         flat = jnp.argmax(score)
         v = (flat // k).astype(jnp.int32)
@@ -526,18 +607,20 @@ def _fm_pass_impl(hga: HypergraphArrays, part: jnp.ndarray, k: int,
         bw = jnp.where(do, bw_new, bw)
         locked = locked.at[v].set(jnp.where(do, True, locked[v]))
         cur_cut = jnp.where(do, cut_new, cur_cut)
+        if incumbent is not None:
+            mig_w = jnp.where(do, mig_w + delta_mig[v, j], mig_w)
         better = do & (cur_cut < best_cut - 1e-9)
         best_cut = jnp.where(better, cur_cut, best_cut)
         best_part = jnp.where(better, part, best_part)
         return (part, phi, bw, locked, cur_cut, best_cut, best_part,
-                t + 1, do)
+                mig_w, t + 1, do)
 
     def cond(carry):
         t, alive = carry[-2], carry[-1]
         return (t < steps) & alive
 
     locked0 = jnp.zeros(n_pad, bool)
-    init = (part, phi0, bw0, locked0, cut0, cut0, part,
+    init = (part, phi0, bw0, locked0, cut0, cut0, part, mig0,
             jnp.int32(0), jnp.bool_(True))
     out = jax.lax.while_loop(cond, body, init)
     return out[6], out[5]
@@ -549,15 +632,20 @@ _fm_pass = jax.jit(_fm_pass_impl, static_argnames=("k", "steps"))
 def _fm_pass_population_impl(hga: HypergraphArrays, parts: jnp.ndarray,
                              k: int, cap: jnp.ndarray, steps: int,
                              edge_weights_pop: jnp.ndarray | None = None,
-                             k_live: jnp.ndarray | None = None
+                             k_live: jnp.ndarray | None = None,
+                             incumbent: jnp.ndarray | None = None,
+                             mig_budget: jnp.ndarray | None = None
                              ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     if edge_weights_pop is None:
         return jax.vmap(
             lambda p: _fm_pass_impl(hga, p, k, cap, steps,
-                                    k_live=k_live))(parts)
+                                    k_live=k_live, incumbent=incumbent,
+                                    mig_budget=mig_budget))(parts)
     return jax.vmap(
         lambda p, ew: _fm_pass_impl(metrics.member_arrays(hga, ew), p, k,
-                                    cap, steps, k_live=k_live))(
+                                    cap, steps, k_live=k_live,
+                                    incumbent=incumbent,
+                                    mig_budget=mig_budget))(
                                         parts, edge_weights_pop)
 
 
@@ -574,12 +662,14 @@ def _fm_pass_population_mesh(mesh, k: int, steps: int):
     (DESIGN.md §11): structure replicated, member rows sharded over
     "pop".  FM lanes are fully row-independent (no collective needed);
     each shard's move loop even exits as soon as ITS lanes are done."""
-    def body(hga, parts, cap, ew_pop):
+    def body(hga, parts, cap, ew_pop, incumbent, mig_budget):
         return _fm_pass_population_impl(hga, parts, k, cap, steps,
-                                        edge_weights_pop=ew_pop)
+                                        edge_weights_pop=ew_pop,
+                                        incumbent=incumbent,
+                                        mig_budget=mig_budget)
 
     fn = shard_map(body, mesh,
-                   in_specs=(P(), P("pop"), P(), P("pop")),
+                   in_specs=(P(), P("pop"), P(), P("pop"), P(), P()),
                    out_specs=(P("pop"), P("pop")))
     return jax.jit(fn)
 
@@ -663,7 +753,8 @@ def _put_rows(arr, npop: int, pop_sh):
 def fm_refine_population(hga: HypergraphArrays, parts, k: int, eps: float,
                          max_passes: int = 8,
                          step_budget: int | None = None,
-                         edge_weights_pop=None, shard: str | None = None
+                         edge_weights_pop=None, shard: str | None = None,
+                         incumbent=None, mig_budget: float | None = None
                          ) -> Tuple[np.ndarray, np.ndarray]:
     """Batched ``fm_refine`` with per-member pass acceptance: a member
     stops improving exactly when the scalar loop would have broken.
@@ -676,10 +767,17 @@ def fm_refine_population(hga: HypergraphArrays, parts, k: int, eps: float,
     ``jax.local_devices()`` with async dispatch; ``off`` stays on one
     device.  None of them changes results: members are row-independent,
     so all paths return bit-identical per-member partitions and cuts.
+
+    ``incumbent`` [n] + ``mig_budget``: bounded migration (DESIGN.md
+    §14), enforced move-by-move inside every member's pass.
     """
     cap = _cap_for(hga, k, eps)
     parts = np.array(pad_parts(parts, hga.n_pad))  # writable host copy
     alpha = parts.shape[0]
+    inc = mb = None
+    if incumbent is not None:
+        inc = pad_part(incumbent, hga.n_pad)
+        mb = float(np.inf if mig_budget is None else mig_budget)
     if edge_weights_pop is not None:
         edge_weights_pop = np.asarray(edge_weights_pop, np.float32)
         cuts = np.asarray(metrics.cutsize_population_weighted(
@@ -695,10 +793,14 @@ def fm_refine_population(hga: HypergraphArrays, parts, k: int, eps: float,
     if devs:
         hga_d = [_device_put_cached(hga, d) for d in devs]
         cap_d = [_cap_for(hga, k, eps, d) for d in devs]
+        inc_d = ([jax.device_put(inc, d) for d in devs]
+                 if inc is not None else [None] * len(devs))
     mesh_fn = None
     if path == "mesh":
         mesh, npop, pop_sh, hga_m, cap_m = _mesh_dispatch(hga, k, eps)
         mesh_fn = _fm_pass_population_mesh(mesh, k, steps)
+        if inc is not None:
+            inc = jax.device_put(inc, popshard.replicated(mesh))
     for _ in range(max_passes):
         idx = np.nonzero(~done)[0]  # compact: finished members drop out
         if len(idx) == 0:
@@ -711,7 +813,8 @@ def fm_refine_population(hga: HypergraphArrays, parts, k: int, eps: float,
             out_p, out_c = mesh_fn(
                 hga_m, _put_rows(sub, npop, pop_sh), cap_m,
                 None if sub_ew is None
-                else _put_rows(sub_ew, npop, pop_sh))
+                else _put_rows(sub_ew, npop, pop_sh),
+                inc, mb)
             cands = np.asarray(out_p)[:na]
             cs = np.asarray(out_c)[:na].astype(np.float64)
         elif devs and len(idx) > 1:
@@ -728,7 +831,8 @@ def fm_refine_population(hga: HypergraphArrays, parts, k: int, eps: float,
                         devs[di])
                 outs.append(_fm_pass_population(
                     hga_d[di], chunk, k, cap_d[di], steps,
-                    edge_weights_pop=ew_chunk))
+                    edge_weights_pop=ew_chunk, incumbent=inc_d[di],
+                    mig_budget=mb))
             cands = np.concatenate([np.asarray(o[0]) for o in outs])
             cs = np.concatenate(
                 [np.asarray(o[1]) for o in outs]).astype(np.float64)
@@ -736,7 +840,8 @@ def fm_refine_population(hga: HypergraphArrays, parts, k: int, eps: float,
             cands, cs = _fm_pass_population(
                 hga, jnp.asarray(sub), k, cap, steps,
                 edge_weights_pop=None if sub_ew is None
-                else jnp.asarray(sub_ew))
+                else jnp.asarray(sub_ew), incumbent=inc,
+                mig_budget=mb)
             cands = np.asarray(cands)
             cs = np.asarray(cs, np.float64)
         take = cs < cuts[idx] - 1e-6
@@ -761,20 +866,23 @@ def refine(hga: HypergraphArrays, part: np.ndarray, k: int, eps: float,
 
 def refine_population(hga: HypergraphArrays, parts, k: int, eps: float,
                       fm_node_limit: int = 4096, edge_weights_pop=None,
-                      shard: str | None = None, **kw
+                      shard: str | None = None, incumbent=None,
+                      mig_budget: float | None = None, **kw
                       ) -> Tuple[np.ndarray, np.ndarray]:
     """Two-tier refinement for the whole population in batched dispatches
     (the production path of ``impart_partition``, ``vcycle`` and the
     mutation cohort's population V-cycle).  Both tiers route through the
     ``REPRO_POP_SHARD`` dispatcher (``shard`` overrides, DESIGN.md §11).
-    Returns (parts [alpha, n_pad], cuts [alpha])."""
+    ``incumbent`` + ``mig_budget`` bound migration through BOTH tiers
+    (DESIGN.md §14).  Returns (parts [alpha, n_pad], cuts [alpha])."""
     parts, cuts = lp_refine_population(hga, parts, k, eps,
                                        edge_weights_pop=edge_weights_pop,
-                                       shard=shard, **kw)
+                                       shard=shard, incumbent=incumbent,
+                                       mig_budget=mig_budget, **kw)
     if int(hga.n) <= fm_node_limit:
         parts, cuts = fm_refine_population(
             hga, parts, k, eps, edge_weights_pop=edge_weights_pop,
-            shard=shard)
+            shard=shard, incumbent=incumbent, mig_budget=mig_budget)
     return parts, cuts
 
 

@@ -156,6 +156,63 @@ def request_stream(count: int, tag: str = "service", scale: float = 1.0
     return reqs
 
 
+def drift_stream(base: Hypergraph, count: int, *,
+                 magnitude: float = 0.2, vertex_magnitude: float = 0.0,
+                 pin_edit_frac: float = 0.0, tag: str = "drift"
+                 ) -> List[Hypergraph]:
+    """Deterministic drifting-workload stream over ``base`` (DESIGN.md
+    §14), shared by ``benchmarks/incremental.py``, the tests, and
+    ``examples/incremental_placement.py``.
+
+    Step ``i`` is drawn crc32-seeded per ``(tag, i)`` (salted ``hash()``
+    would differ per process) and drifts the PREVIOUS step:
+
+    * edge weights multiply by ``exp(N(0, magnitude))`` — traffic/co-
+      activation drift;
+    * vertex weights likewise when ``vertex_magnitude > 0`` — compute
+      hot-spots;
+    * when ``pin_edit_frac > 0``, that fraction of edges is rewired to
+      fresh vertex sets of the same size — small topology edits that
+      change the structure token and exercise the structure-patching
+      fallback.
+
+    Pure weight drift chains through ``with_edge_weights``, so every
+    step shares the base's donated structure arrays (nothing but weight
+    leaves re-ships to the device) — the stream itself exercises the
+    reuse path the incremental subsystem depends on.
+    """
+    out: List[Hypergraph] = []
+    prev = base
+    for i in range(count):
+        seed = zlib.crc32(f"{tag}:{i}".encode()) % (2 ** 31)
+        rng = np.random.default_rng(seed)
+        ew = (np.asarray(prev.edge_weights, np.float64)
+              * np.exp(rng.normal(0.0, magnitude, prev.m))
+              ).astype(np.float32)
+        vw = prev.vertex_weights
+        if vertex_magnitude > 0.0:
+            vw = (np.asarray(vw, np.float64)
+                  * np.exp(rng.normal(0.0, vertex_magnitude, prev.n))
+                  ).astype(np.float32)
+        if pin_edit_frac > 0.0:
+            edges = [prev.pins[prev.edge_offsets[e]:
+                              prev.edge_offsets[e + 1]].copy()
+                     for e in range(prev.m)]
+            n_edit = max(int(pin_edit_frac * prev.m), 1)
+            for e in rng.choice(prev.m, size=n_edit, replace=False):
+                edges[e] = rng.choice(prev.n, size=len(edges[e]),
+                                      replace=False)
+            hg = Hypergraph.from_edge_lists(edges, n=prev.n,
+                                            vertex_weights=vw,
+                                            edge_weights=ew)
+        else:
+            hg = prev.with_edge_weights(
+                ew, None if vw is prev.vertex_weights else vw)
+        out.append(hg)
+        prev = hg
+    return out
+
+
 BENCH_ISPD: Dict[str, Dict] = {
     "ibm01_like": {"n": 12752, "m": 14111, "seed": 201},
     "ibm02_like": {"n": 19601, "m": 19584, "seed": 202},

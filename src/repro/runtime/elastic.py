@@ -73,6 +73,31 @@ def restore_device_pool() -> list:
     return popshard.set_device_limit(None)
 
 
+def repartition_after_loss(hg, assignment, k_new: int, *,
+                           eps: float = 0.08,
+                           migration_frac: Optional[float] = 0.25,
+                           alpha: int = 4, seed: int = 0,
+                           lp_iters: int = 8, state=None):
+    """Device-loss repartitioning as a forced k-change incremental solve
+    (DESIGN.md §14): the survivors' assignment is remapped
+    ``b -> b % k_new`` and the warm-start pipeline runs at the surviving
+    device count, with additional data movement bounded by
+    ``migration_frac`` of the total vertex weight.  Passing the
+    ``IncrementalState`` that served the original placement reuses the
+    resident hierarchy outright (weights are unchanged at loss time;
+    device loss only shrinks k, so the coarsest level stays fine
+    enough) — recovery skips the coarsening rebuild entirely, which is
+    what makes warm recovery beat a from-scratch solve on wall clock
+    (``tests/test_incremental.py`` regression-tests this).  Returns the
+    ``IncrementalResult``."""
+    from repro.core import incremental as incr
+    cfg = incr.IncrementalConfig(
+        k=k_new, eps=eps, alpha=alpha, migration_frac=migration_frac,
+        seed=seed, lp_iters=lp_iters)
+    return incr.repartition_k_change(hg, np.asarray(assignment, np.int32),
+                                     k_new, cfg, state=state)
+
+
 class NodeFailure(RuntimeError):
     pass
 

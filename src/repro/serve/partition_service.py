@@ -73,7 +73,9 @@ from repro.core.impart import ImpartConfig, impart_partition
 from repro.core.dcoarsen import build_hierarchy
 from repro.core.initial_partition import initial_partition_population
 from repro.core import budget as budget_mod
+from repro.core import incremental as incremental_mod
 from repro.core import instances as instances_mod
+from repro.core import metrics as metrics_mod
 from repro.core import popshard
 from repro.core import refine as refine_mod
 from repro.checkpoint import CheckpointManager
@@ -204,6 +206,12 @@ class PartitionRequest:
     deadline_s: Optional[float] = None
     max_queue_s: Optional[float] = None
     submitted_s: float = 0.0  # stamped by submit()
+    # incremental refresh (DESIGN.md §14): a previous assignment to warm
+    # -start from, with moved-vertex weight bounded by
+    # ``migration_frac`` of the total (None = unbounded).  Incremental
+    # and cold requests co-batch through the same grouped dispatches.
+    incumbent: Optional[np.ndarray] = None
+    migration_frac: Optional[float] = None
 
 
 @dataclasses.dataclass
@@ -217,6 +225,9 @@ class PartitionResult:
     status: str = STATUS_OK
     degraded: bool = False
     error: Optional[str] = None
+    # incremental requests: moved-vertex weight of the answer relative
+    # to the request's incumbent (None for cold requests)
+    migration_weight: Optional[float] = None
 
     @property
     def ok(self) -> bool:
@@ -243,6 +254,11 @@ class _Slot:
     retries: int = 0        # quarantine retries consumed
     hold_ticks: int = 0     # backoff: skip this many dispatch ticks
     recovered: bool = False  # state was restored/restarted at least once
+    # incremental requests: per-level projected incumbents and
+    # residual-adjusted budgets (core.incremental.project_incumbent);
+    # None for cold requests
+    incs: Optional[List[np.ndarray]] = None
+    buds: Optional[List[float]] = None
 
     @property
     def occupied(self) -> bool:
@@ -260,6 +276,8 @@ class _Slot:
         self.retries = 0
         self.hold_ticks = 0
         self.recovered = False
+        self.incs = None
+        self.buds = None
 
 
 class PartitionService:
@@ -339,11 +357,26 @@ class PartitionService:
             recombination_enabled=False, mutation_enabled=False,
             final_vcycles=0, pop_shard=self.shard)
 
+    def _icfg_for(self, req: PartitionRequest, seed_bump: int = 0
+                  ) -> incremental_mod.IncrementalConfig:
+        return incremental_mod.IncrementalConfig(
+            k=req.k, eps=req.eps, alpha=self.alpha,
+            migration_frac=req.migration_frac,
+            seed=req.seed + seed_bump, lp_iters=self.lp_iters,
+            fm_node_limit=self.fm_node_limit,
+            contraction_limit_factor=self.contraction_limit_factor,
+            pop_shard=self.shard)
+
     def solve_solo(self, req: PartitionRequest
                    ) -> Tuple[np.ndarray, float]:
         """The reference: run ``req``'s exact pipeline alone (no slot
         sharing).  The service's answer for the same request is
-        bit-identical — the batching contract."""
+        bit-identical — the batching contract (incremental requests run
+        the standalone ``incremental_partition`` pipeline)."""
+        if req.incumbent is not None:
+            ires = incremental_mod.incremental_partition(
+                req.hg, req.incumbent, self._icfg_for(req))
+            return ires.part, ires.cut
         res = impart_partition(req.hg, self._cfg_for(req))
         return res.part, res.cut
 
@@ -354,6 +387,14 @@ class PartitionService:
         immediately with a structured ``rejected`` result (also recorded
         in ``results``) instead of queuing forever."""
         req.submitted_s = time.perf_counter()
+        if req.incumbent is not None:
+            inc = np.asarray(req.incumbent, np.int32)
+            if (inc.shape != (req.hg.n,) or inc.min(initial=0) < 0
+                    or inc.max(initial=0) >= req.k):
+                return self._emit_shed(
+                    req, STATUS_REJECTED,
+                    f"invalid incumbent: shape {inc.shape}, "
+                    f"expected [{req.hg.n}] with blocks in [0, {req.k})")
         if req.deadline_s is None:
             req.deadline_s = self.default_deadline_s
         if self.max_queue and len(self.queue) >= self.max_queue:
@@ -401,18 +442,37 @@ class PartitionService:
         """(Re)build a slot's pipeline state from scratch: hierarchy +
         initial population at the coarsest level.  Deterministic in
         (req, seed_bump) — a scratch reinstall with bump 0 reproduces
-        the original trajectory exactly."""
+        the original trajectory exactly.  Incremental requests build a
+        partition-aware hierarchy around the incumbent and seed the
+        UNREFINED incumbent population (the ladder's first tick refines
+        the coarsest level, exactly like ``incremental_partition``)."""
         cfg = self._cfg_for(req, seed_bump=seed_bump)
-        hier = build_hierarchy(
-            req.hg, cfg.k, seed=cfg.seed,
-            contraction_limit_factor=cfg.contraction_limit_factor)
-        num = hier.num_levels
-        parts, _ = initial_partition_population(
-            hier.level_host(num - 1), cfg.k, cfg.eps,
-            seeds=[cfg.seed * 101 + i for i in range(cfg.alpha)],
-            tries_per_strategy=1, hga=hier.level_arrays(num - 1))
+        if req.incumbent is not None:
+            icfg = self._icfg_for(req, seed_bump=seed_bump)
+            inc0 = np.asarray(req.incumbent, np.int32)
+            hier = build_hierarchy(
+                req.hg, icfg.k, seed=icfg.seed, restrict_part=inc0,
+                contraction_limit_factor=icfg.contraction_limit_factor)
+            budget_w = (np.inf if icfg.migration_frac is None else
+                        float(icfg.migration_frac)
+                        * float(np.sum(req.hg.vertex_weights)))
+            incs, buds = incremental_mod.project_incumbent(
+                hier, inc0, icfg.k, budget_w)
+            parts = incremental_mod.seed_incumbent_population(
+                hier, incs[-1], buds[-1], icfg)
+            slot.incs, slot.buds = incs, buds
+        else:
+            hier = build_hierarchy(
+                req.hg, cfg.k, seed=cfg.seed,
+                contraction_limit_factor=cfg.contraction_limit_factor)
+            num = hier.num_levels
+            parts, _ = initial_partition_population(
+                hier.level_host(num - 1), cfg.k, cfg.eps,
+                seeds=[cfg.seed * 101 + i for i in range(cfg.alpha)],
+                tries_per_strategy=1, hga=hier.level_arrays(num - 1))
+            slot.incs, slot.buds = None, None
         slot.request, slot.cfg, slot.hier = req, cfg, hier
-        slot.parts, slot.li = parts, num - 1
+        slot.parts, slot.li = parts, hier.num_levels - 1
         slot.need_project = False
 
     def _admit(self) -> None:
@@ -466,9 +526,23 @@ class PartitionService:
             key = f"slot{idx}.parts"
             if key not in items:
                 return False
-            s.hier = build_hierarchy(
-                s.request.hg, s.cfg.k, seed=m["seed"],
-                contraction_limit_factor=s.cfg.contraction_limit_factor)
+            if s.request.incumbent is not None:
+                inc0 = np.asarray(s.request.incumbent, np.int32)
+                s.hier = build_hierarchy(
+                    s.request.hg, s.cfg.k, seed=m["seed"],
+                    restrict_part=inc0,
+                    contraction_limit_factor=s.cfg
+                    .contraction_limit_factor)
+                budget_w = (np.inf if s.request.migration_frac is None
+                            else float(s.request.migration_frac)
+                            * float(np.sum(s.request.hg.vertex_weights)))
+                s.incs, s.buds = incremental_mod.project_incumbent(
+                    s.hier, inc0, s.cfg.k, budget_w)
+            else:
+                s.hier = build_hierarchy(
+                    s.request.hg, s.cfg.k, seed=m["seed"],
+                    contraction_limit_factor=s.cfg
+                    .contraction_limit_factor)
             s.parts = np.asarray(items[key], np.int32)
             s.li = int(m["li"])
             s.need_project = bool(m["need_project"])
@@ -563,20 +637,36 @@ class PartitionService:
                 degraded: bool = False) -> None:
         req = s.request
         parts = np.asarray(parts)
-        best = int(np.argmin(cuts))
         if degraded:
             status = STATUS_DEGRADED
         elif s.recovered:
             status = STATUS_RECOVERED
         else:
             status = STATUS_OK
+        migration = None
+        if s.incs is not None:
+            # budget-aware selection with incumbent fallback — the same
+            # ``select_best`` the standalone solve runs, so service and
+            # solo answers stay bit-identical
+            inc0 = np.asarray(req.incumbent, np.int32)
+            hga0 = s.hier.level_arrays(0)
+            inc_cut = float(metrics_mod.cutsize(
+                hga0, refine_mod.pad_part(inc0, hga0.n_pad), req.k))
+            part, cut, migration = incremental_mod.select_best(
+                parts[:, : req.hg.n], np.asarray(cuts), inc0, inc_cut,
+                np.asarray(req.hg.vertex_weights, np.float64),
+                s.buds[0])
+        else:
+            best = int(np.argmin(cuts))
+            part = np.asarray(parts[best][: req.hg.n], np.int32)
+            cut = float(cuts[best])
         self.results[req.name] = PartitionResult(
-            name=req.name,
-            part=np.asarray(parts[best][: req.hg.n], np.int32),
-            cut=float(cuts[best]), k=req.k,
+            name=req.name, part=np.asarray(part, np.int32),
+            cut=float(cut), k=req.k,
             submitted_s=req.submitted_s,
             finished_s=time.perf_counter(),
-            status=status, degraded=degraded)
+            status=status, degraded=degraded,
+            migration_weight=migration)
         s.vacate()
 
     def _fast_forward(self, s: _Slot) -> None:
@@ -592,7 +682,9 @@ class PartitionService:
         hga0 = s.hier.level_arrays(0)
         parts, cuts = refine_mod.lp_refine_population(
             hga0, s.parts, s.cfg.k, s.cfg.eps, max_iters=4,
-            shard=self.shard)
+            shard=self.shard,
+            incumbent=None if s.incs is None else s.incs[0],
+            mig_budget=None if s.buds is None else s.buds[0])
         self.events.append({"tick": self.tick, "kind": "degraded",
                             "request": s.request.name})
         self._finish(s, parts, cuts, degraded=True)
@@ -657,8 +749,13 @@ class PartitionService:
             if s.need_project:
                 s.parts = s.hier.project_pop(s.parts, s.li + 1)
                 s.need_project = False
-            entries.append((s.hier.level_arrays(s.li), s.parts,
-                            s.cfg.k, s.cfg.eps))
+            if s.incs is not None:
+                entries.append((s.hier.level_arrays(s.li), s.parts,
+                                s.cfg.k, s.cfg.eps, s.incs[s.li],
+                                s.buds[s.li]))
+            else:
+                entries.append((s.hier.level_arrays(s.li), s.parts,
+                                s.cfg.k, s.cfg.eps))
         for ev in events:
             if ev.kind == "straggler":
                 time.sleep(ev.delay_s)
