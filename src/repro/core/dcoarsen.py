@@ -50,17 +50,20 @@ from __future__ import annotations
 
 import dataclasses
 import os
-from functools import partial
+from functools import lru_cache, partial
 from typing import Optional, Union
 
 import numpy as np
 import jax
 import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
 
+from ..jaxcompat import shard_map
 from .hypergraph import (Hypergraph, HypergraphArrays, HierarchyArrays,
                          DeviceLevel, contract_arrays, _round_pow2,
                          _INCIDENCE_LANE_PAD, _INCIDENCE_MAX_EXPANSION)
 from .coarsen import Hierarchy, coarsen, round_schedule
+from . import popshard
 
 #: Pair-candidate sampling, mirroring the host ``_candidate_pairs``
 #: defaults: strides 1..MAX_STRIDE within each edge; edges larger than
@@ -86,7 +89,8 @@ def build_hierarchy(hg: Hypergraph, k: int, *, seed: int = 0,
                     restrict_part=None, contraction_limit_factor: int = 64,
                     max_rounds: int = 64, min_shrink: float = 0.02,
                     max_cluster_frac: float = 1.0,
-                    path: Optional[str] = None
+                    path: Optional[str] = None,
+                    model_shard: Optional[str] = None
                     ) -> Union[Hierarchy, HierarchyArrays]:
     """Build the multilevel hierarchy with the engine picked by
     ``coarsen_path()`` (or forced via ``path``).  Both return types
@@ -101,7 +105,8 @@ def build_hierarchy(hg: Hypergraph, k: int, *, seed: int = 0,
                           contraction_limit_factor=contraction_limit_factor,
                           max_rounds=max_rounds, min_shrink=min_shrink,
                           seed=seed, restrict_part=restrict_part,
-                          max_cluster_frac=max_cluster_frac)
+                          max_cluster_frac=max_cluster_frac,
+                          model_shard=model_shard)
 
 
 # --------------------------------------------------------------------------
@@ -255,6 +260,268 @@ _coarsen_round = jax.jit(_coarsen_round_impl,
 
 
 # --------------------------------------------------------------------------
+# model-axis sharded contraction (DESIGN.md §15): shard-local contraction
+# over row-sharded pin tables with a lax.ppermute halo for cut edges
+# --------------------------------------------------------------------------
+def _hga_model_pspecs() -> HypergraphArrays:
+    """PartitionSpec pytree for a model-sharded structure: pin tables
+    row-sharded over "model", every [n_pad]/[m_pad] leaf replicated."""
+    return HypergraphArrays(
+        pin_vertex=P("model"), pin_edge=P("model"),
+        vertex_weights=P(), edge_weights=P(), edge_sizes=P(),
+        n=P(), m=P(), incident=None)
+
+
+def _contract_sharded_body(hga: HypergraphArrays, cid, n_new, ew_pop,
+                           S: int):
+    """Shard-local ``contract_arrays`` over [p_pad / S] pin rows.
+
+    Runs inside ``shard_map`` over the mesh "model" axis.  The input pin
+    arrays are edge-contiguous (the level invariant every producer
+    maintains), so an edge's pins occupy one contiguous global run; the
+    edge is OWNED by the shard holding its first pin, and — guarded by
+    the caller's ``max edge size <= p_loc`` check — the owner's local
+    rows plus ONE ``lax.ppermute`` halo (the right neighbour's full
+    window, mirroring the pop-axis ring of ``popshard.ring_partners``)
+    always contain the whole edge.  Pins of non-owned edges in the
+    window are masked to ghosts, so dedup / sizing / position ranks and
+    the parallel-edge hashes are computed on complete edges shard-
+    locally; the int32/uint32 per-edge partials then ``psum`` exactly
+    (integer adds are associative), after which every [m_pad] decision
+    (merge groups, survivors, dense renumber) is replicated-identical —
+    the same partial-sum pattern as ``population._phi``/``_gains``.
+    Ownership is monotone in edge id (first-pin position is), so
+    scattering each shard's kept pins at its psum'd global offset
+    reassembles the exact (edge, vertex)-sorted pin order the unsharded
+    ``contract_arrays`` emits: the result is bit-equal, ghosts and all.
+    """
+    n_pad, m_pad = hga.n_pad, hga.m_pad
+    p_loc = hga.pin_vertex.shape[0]
+    p_pad = p_loc * S
+    ghost_v = jnp.int32(n_pad - 1)
+    ghost_e = jnp.int32(m_pad - 1)
+    arange_m = jnp.arange(m_pad, dtype=jnp.int32)
+    idx = jax.lax.axis_index("model")
+
+    new_vw = jnp.zeros(n_pad, jnp.float32).at[cid].add(hga.vertex_weights)
+
+    # edge ownership = shard of the edge's first global pin
+    pvc = cid[hga.pin_vertex]
+    pe_l = hga.pin_edge
+    live_l = pe_l != ghost_e
+    gpos = idx * p_loc + jnp.arange(p_loc, dtype=jnp.int32)
+    first_partial = jnp.full(m_pad, p_pad, jnp.int32).at[pe_l].min(
+        jnp.where(live_l, gpos, p_pad))
+    owner = jax.lax.pmin(first_partial, "model") // p_loc
+
+    # halo: the right neighbour's whole window (full ring, no zero-fill;
+    # the wraparound halo shard S-1 receives holds only shard-0-owned
+    # edges, which the ownership mask drops)
+    perm = [(j, (j - 1) % S) for j in range(S)]
+    pv_e = jnp.concatenate([pvc, jax.lax.ppermute(pvc, "model", perm)])
+    pe_e = jnp.concatenate([pe_l, jax.lax.ppermute(pe_l, "model", perm)])
+    mine = (pe_e != ghost_e) & (owner[pe_e] == idx)
+    pv_e = jnp.where(mine, pv_e, ghost_v)
+    pe_e = jnp.where(mine, pe_e, ghost_e)
+
+    # local (edge, vertex) sort + within-edge dedup — every owned edge is
+    # complete in the window, so this is the global dedup restricted to
+    # the shard's own edges
+    pe_s, pv_s = jax.lax.sort((pe_e, pv_e), num_keys=2, is_stable=False)
+    two_p = 2 * p_loc
+    dup = jnp.zeros(two_p, bool).at[1:].set(
+        (pe_s[1:] == pe_s[:-1]) & (pv_s[1:] == pv_s[:-1])
+        & (pe_s[1:] != ghost_e))
+    pv_s = jnp.where(dup, ghost_v, pv_s)
+    pe_s = jnp.where(dup, ghost_e, pe_s)
+
+    # post-dedup sizes: owner-only int32 partials, psum'd exact
+    live_pin = pe_s != ghost_e
+    sizes = jnp.zeros(m_pad, jnp.int32).at[pe_s].add(
+        live_pin.astype(jnp.int32))
+    sizes = jax.lax.psum(sizes, "model")
+    edge_alive = (arange_m < hga.m) & (sizes >= 2)
+    keep_pin = live_pin & edge_alive[pe_s]
+    pv_s = jnp.where(keep_pin, pv_s, ghost_v)
+    pe_s = jnp.where(keep_pin, pe_s, ghost_e)
+
+    # parallel-edge hashes: positions are within-edge kept ranks, which
+    # are local differences (edge complete in window), and the uint32
+    # per-pin terms psum exactly — bit-equal to the global hash
+    local_rank = jnp.cumsum(keep_pin.astype(jnp.int32)) - 1
+    first_rank = jnp.full(m_pad, two_p, jnp.int32).at[pe_s].min(
+        jnp.where(keep_pin, local_rank, two_p))
+    pos = (local_rank - first_rank[pe_s]).astype(jnp.uint32)
+    pu = pv_s.astype(jnp.uint32)
+    a1 = (pu + jnp.uint32(0x9E3779B9)) * (pos * jnp.uint32(2)
+                                          + jnp.uint32(1))
+    a2 = (pu ^ jnp.uint32(0x85EBCA6B)) * (pos + jnp.uint32(0xC2B2AE35))
+    m1 = a1 * (a1 >> jnp.uint32(15))
+    m2 = a2 ^ (a2 << jnp.uint32(7))
+    live_u = keep_pin.astype(jnp.uint32)
+    h1 = jax.lax.psum(
+        jnp.zeros(m_pad, jnp.uint32).at[pe_s].add(m1 * live_u), "model")
+    h2 = jax.lax.psum(
+        jnp.zeros(m_pad, jnp.uint32).at[pe_s].add(m2 * live_u), "model")
+    su = sizes.astype(jnp.uint32)
+    h1 = h1 ^ (su * jnp.uint32(0x27D4EB2F))
+    h2 = h2 ^ su
+    h1 = jnp.where(edge_alive, h1, jnp.uint32(0xFFFFFFFF))
+    h2 = jnp.where(edge_alive, h2, arange_m.astype(jnp.uint32))
+
+    # [m_pad] merge/renumber: replicated-identical on every shard (the
+    # f32 weight merge runs on replicated inputs in replicated order —
+    # no psum touches it, so no float-summation-order hazard)
+    h1s, h2s, eo = jax.lax.sort((h1, h2, arange_m), num_keys=2,
+                                is_stable=False)
+    newg = jnp.ones(m_pad, bool).at[1:].set(
+        (h1s[1:] != h1s[:-1]) | (h2s[1:] != h2s[:-1]))
+    grp = jnp.cumsum(newg.astype(jnp.int32)) - 1
+    alive_s = edge_alive[eo]
+    gw = jnp.zeros(m_pad, jnp.float32).at[grp].add(
+        jnp.where(alive_s, hga.edge_weights[eo], 0.0))
+    rep = jnp.full(m_pad, m_pad, jnp.int32).at[grp].min(
+        jnp.where(alive_s, eo, m_pad))
+    grp_of = jnp.zeros(m_pad, jnp.int32).at[eo].set(grp)
+    keep_edge = edge_alive & (arange_m == rep[grp_of])
+    merged_w = jnp.where(keep_edge, gw[grp_of], 0.0)
+
+    pin_ok = keep_edge[pe_s] & (pe_s != ghost_e)
+    pv_s = jnp.where(pin_ok, pv_s, ghost_v)
+    pe_s = jnp.where(pin_ok, pe_s, ghost_e)
+    new_eid = (jnp.cumsum(keep_edge.astype(jnp.int32)) - 1).astype(
+        jnp.int32)
+    m_new = keep_edge.sum()
+    pe_s = jnp.where(pe_s != ghost_e, new_eid[pe_s], ghost_e)
+    tgt = jnp.where(keep_edge, new_eid, ghost_e)
+    new_ew = jnp.zeros(m_pad, jnp.float32).at[tgt].add(
+        jnp.where(keep_edge, merged_w, 0.0))
+    new_es = jnp.zeros(m_pad, jnp.int32).at[tgt].add(
+        jnp.where(keep_edge, sizes, 0))
+
+    # reassemble the compacted global pin order: shard offsets from the
+    # gathered live counts, then a write-once scatter psum (each global
+    # slot is written by exactly one shard; integer adds are exact)
+    live_now = pe_s != ghost_e
+    lr = jnp.cumsum(live_now.astype(jnp.int32)) - 1
+    cnts = jax.lax.all_gather(live_now.sum(), "model")
+    offset = jnp.where(jnp.arange(S) < idx, cnts, 0).sum()
+    p_new = cnts.sum()
+    dest = jnp.where(live_now, offset + lr, p_pad)
+    pv_out = jax.lax.psum(
+        jnp.zeros(p_pad, jnp.int32).at[dest].add(
+            jnp.where(live_now, pv_s, 0), mode="drop"), "model")
+    pe_out = jax.lax.psum(
+        jnp.zeros(p_pad, jnp.int32).at[dest].add(
+            jnp.where(live_now, pe_s, 0), mode="drop"), "model")
+    arange_p = jnp.arange(p_pad, dtype=jnp.int32)
+    pv_out = jnp.where(arange_p < p_new, pv_out, ghost_v)
+    pe_out = jnp.where(arange_p < p_new, pe_out, ghost_e)
+
+    if ew_pop is None:
+        return (new_vw, new_ew, new_es, m_new, pv_out, pe_out, p_new)
+
+    # per-member weight rows ride the (replicated) structural edge map
+    def _contract_row(w_row):
+        gw_r = jnp.zeros(m_pad, jnp.float32).at[grp].add(
+            jnp.where(alive_s, w_row[eo], 0.0))
+        merged_r = jnp.where(keep_edge, gw_r[grp_of], 0.0)
+        return jnp.zeros(m_pad, jnp.float32).at[tgt].add(
+            jnp.where(keep_edge, merged_r, 0.0))
+
+    ew_pop_new = jax.vmap(_contract_row)(ew_pop)
+    return (new_vw, new_ew, new_es, m_new, pv_out, pe_out, p_new,
+            ew_pop_new)
+
+
+@lru_cache(maxsize=8)
+def _contract_sharded_fn(mesh, has_pop: bool):
+    """shard_map'd sharded contraction over ``mesh``'s "model" axis.
+    Returns ``(coarse, p_new[, ew_pop_new])`` bit-equal to the global
+    ``contract_arrays`` (asserted by ``tests/test_model_shard.py``)."""
+    S = mesh.shape["model"]
+    n_out = 8 if has_pop else 7
+
+    def body(hga, cid, n_new, ew_pop):
+        return _contract_sharded_body(hga, cid, n_new, ew_pop, S)
+
+    in_specs = (_hga_model_pspecs(), P(), P(), P())
+    sharded = shard_map(body, mesh, in_specs, (P(),) * n_out)
+
+    def run(hga: HypergraphArrays, cid, n_new, ew_pop=None):
+        out = sharded(hga, cid, n_new, ew_pop)
+        new_vw, new_ew, new_es, m_new, pv, pe, p_new = out[:7]
+        coarse = HypergraphArrays(
+            pin_vertex=pv, pin_edge=pe, vertex_weights=new_vw,
+            edge_weights=new_ew, edge_sizes=new_es,
+            n=n_new, m=m_new, incident=None)
+        if has_pop:
+            return coarse, p_new, out[7]
+        return coarse, p_new
+
+    return run
+
+
+def _match_round_impl(hga, part, key, c_max, max_stride: int,
+                      max_edge_size: int):
+    """Rating + matching only — the replicated front half of a model-
+    sharded round (pair ratings are non-integer f32, so psum'd partials
+    would break bit-identity; they stay replicated, DESIGN.md §15)."""
+    lo, hi, rating = _pair_ratings(hga, part, max_stride=max_stride,
+                                   max_edge_size=max_edge_size)
+    cid, n_new = _mutual_match_dev(hga, lo, hi, rating, key, c_max)
+    new_part = None
+    if part is not None:
+        new_part = jnp.zeros(hga.n_pad, jnp.int32).at[cid].max(part)
+    return cid, n_new, new_part
+
+
+_match_round = jax.jit(_match_round_impl,
+                       static_argnames=("max_stride", "max_edge_size"))
+
+
+@lru_cache(maxsize=8)
+def _coarsen_round_model(mesh):
+    """The coarsening round with the model-sharded contraction, as TWO
+    dispatches: the replicated match jit, then the shard_map'd
+    contraction.  They must not fuse into one jit — the shard_map's
+    P("model") input constraint back-propagates through the shared pin
+    operands and mis-partitions the replicated rating sort/scatters
+    (observed to zero out the candidate ratings under GSPMD)."""
+    contract_sh = jax.jit(_contract_sharded_fn(mesh, False))
+
+    def run(hga, part, key, c_max, max_stride, max_edge_size):
+        cid, n_new, new_part = _match_round(hga, part, key, c_max,
+                                            max_stride=max_stride,
+                                            max_edge_size=max_edge_size)
+        coarse, p_new = contract_sh(hga, cid, n_new)
+        return coarse, cid, new_part, p_new
+
+    return run
+
+
+def _model_mesh(model_shard: Optional[str]):
+    """The ("pop", "model") mesh when the model-shard path is on and the
+    model axis is real, else None (the replicated rounds)."""
+    if popshard.resolve_model(model_shard) != "mesh":
+        return None
+    mesh = popshard.pop_mesh()
+    return mesh if mesh.shape["model"] > 1 else None
+
+
+def _round_can_shard(hga: HypergraphArrays, mesh, max_size: int) -> bool:
+    """Per-level guard for the sharded contraction: the pin padding must
+    split evenly over the model axis and every edge must fit inside one
+    shard window (edge size <= p_loc, so owner rows + one halo always
+    hold the whole edge)."""
+    if mesh is None:
+        return False
+    S = mesh.shape["model"]
+    p_loc = hga.p_pad // S
+    return hga.p_pad % S == 0 and max_size <= p_loc
+
+
+# --------------------------------------------------------------------------
 # host-side schedule loop (readbacks: 3 scalars per round)
 # --------------------------------------------------------------------------
 @partial(jax.jit, static_argnames=("n_pad2", "m_pad2", "p_pad2"))
@@ -324,7 +591,8 @@ def device_coarsen(hg: Hypergraph, k: int, *,
                    contraction_limit_factor: int = 64, max_rounds: int = 64,
                    min_shrink: float = 0.02, seed: int = 0,
                    restrict_part=None,
-                   max_cluster_frac: float = 1.0) -> HierarchyArrays:
+                   max_cluster_frac: float = 1.0,
+                   model_shard: Optional[str] = None) -> HierarchyArrays:
     """Build the multilevel hierarchy entirely on device.
 
     The host keeps only the round schedule (shared with the numpy
@@ -348,12 +616,21 @@ def device_coarsen(hg: Hypergraph, k: int, *,
     levels = [DeviceLevel(hga=hga, cluster_id=None, n=hg.n, m=hg.m,
                           p=hg.num_pins, part=part, host_hg=hg)]
     key = jax.random.PRNGKey(seed)
+    mesh = _model_mesh(model_shard)
     cur, cur_part, n_cur = hga, part, hg.n
     for _ in range(sched.max_rounds):
         if sched.done(n_cur):
             break
         key, sub = jax.random.split(key)
-        coarse, cid, new_part, p_new = _coarsen_round(
+        # the sharded contraction is bit-equal to the replicated one, so
+        # levels it cannot take (odd padding split, an oversized edge)
+        # just fall back round-by-round
+        if mesh is not None and _round_can_shard(
+                cur, mesh, int(cur.edge_sizes.max())):
+            round_fn = _coarsen_round_model(mesh)
+        else:
+            round_fn = _coarsen_round
+        coarse, cid, new_part, p_new = round_fn(
             cur, cur_part, sub, jnp.float32(sched.c_max),
             max_stride=MAX_STRIDE, max_edge_size=MAX_EDGE_SIZE)
         n_new = int(coarse.n)
@@ -461,6 +738,45 @@ _coarsen_round_population = jax.jit(
     static_argnames=("max_stride", "max_edge_size", "batch"))
 
 
+def _match_round_population_impl(hga, parts, ew_pop, key, c_max,
+                                 max_stride: int, max_edge_size: int,
+                                 batch: bool):
+    """Cohort rating + consensus matching — the replicated front half of
+    a model-sharded population round (see ``_match_round_impl``)."""
+    lo, hi, rating_pop = _pair_ratings_population(
+        hga, parts, ew_pop, max_stride=max_stride,
+        max_edge_size=max_edge_size, batch=batch)
+    cid, n_new = _mutual_match_dev(hga, lo, hi, rating_pop.sum(axis=0),
+                                   key, c_max)
+    new_parts = jax.vmap(
+        lambda p: jnp.zeros(hga.n_pad, jnp.int32).at[cid].max(p))(parts)
+    return cid, n_new, new_parts
+
+
+_match_round_population = jax.jit(
+    _match_round_population_impl,
+    static_argnames=("max_stride", "max_edge_size", "batch"))
+
+
+@lru_cache(maxsize=8)
+def _coarsen_round_population_model(mesh):
+    """Cohort coarsening round with the model-sharded contraction —
+    two dispatches for the same reason as ``_coarsen_round_model``;
+    every member's weight row rides the replicated edge map inside the
+    shard_map."""
+    contract_sh = jax.jit(_contract_sharded_fn(mesh, True))
+
+    def run(hga, parts, ew_pop, key, c_max, max_stride, max_edge_size,
+            batch):
+        cid, n_new, new_parts = _match_round_population(
+            hga, parts, ew_pop, key, c_max, max_stride=max_stride,
+            max_edge_size=max_edge_size, batch=batch)
+        coarse, p_new, ew_new = contract_sh(hga, cid, n_new, ew_pop)
+        return coarse, cid, new_parts, ew_new, p_new
+
+    return run
+
+
 @partial(jax.jit, static_argnames=("n_pad2", "m_pad2", "p_pad2"))
 def _rebucket_pop_jit(hga: HypergraphArrays, cid, parts, ew_pop,
                       n_pad2: int, m_pad2: int, p_pad2: int):
@@ -531,7 +847,9 @@ def population_coarsen(hg: Hypergraph, parts, ew_pop, k: int, *,
                        contraction_limit_factor: int = 64,
                        max_rounds: int = 64, min_shrink: float = 0.02,
                        seed: int = 0, max_cluster_frac: float = 1.0,
-                       batch: bool = True) -> PopulationHierarchy:
+                       batch: bool = True,
+                       model_shard: Optional[str] = None
+                       ) -> PopulationHierarchy:
     """Build ONE partition-aware hierarchy for the whole mutation cohort.
 
     ``parts`` [alpha, n] warm-start partitions, ``ew_pop`` [alpha, m]
@@ -560,12 +878,18 @@ def population_coarsen(hg: Hypergraph, parts, ew_pop, k: int, *,
     levels = [PopulationLevel(hga=hga, cluster_id=None, ew_pop=ew_pop,
                               parts=parts, n=hg.n, m=hg.m, p=hg.num_pins)]
     key = jax.random.PRNGKey(seed)
+    mesh = _model_mesh(model_shard)
     cur, cur_parts, cur_ew, n_cur = hga, parts, ew_pop, hg.n
     for _ in range(sched.max_rounds):
         if sched.done(n_cur):
             break
         key, sub = jax.random.split(key)
-        coarse, cid, new_parts, new_ew, p_new = _coarsen_round_population(
+        if mesh is not None and _round_can_shard(
+                cur, mesh, int(cur.edge_sizes.max())):
+            round_fn = _coarsen_round_population_model(mesh)
+        else:
+            round_fn = _coarsen_round_population
+        coarse, cid, new_parts, new_ew, p_new = round_fn(
             cur, cur_parts, cur_ew, sub, jnp.float32(sched.c_max),
             max_stride=MAX_STRIDE, max_edge_size=MAX_EDGE_SIZE, batch=batch)
         n_new = int(coarse.n)

@@ -66,6 +66,9 @@ class ImpartConfig:
     # "mesh"/"chunk"/"off"; None defers to REPRO_POP_SHARD
     # (auto = mesh when >1 local device — DESIGN.md §11)
     pop_shard: Optional[str] = None
+    # structure sharding over the mesh "model" axis: "mesh"/"off"; None
+    # defers to REPRO_MODEL_SHARD (auto = off — DESIGN.md §15)
+    model_shard: Optional[str] = None
 
     def __post_init__(self):
         # fail at construction, not minutes in at the first (or never-
@@ -90,6 +93,14 @@ class ImpartConfig:
                     f"unknown pop_shard {self.pop_shard!r}; expected one "
                     f"of {POP_SHARD_PATHS + ('auto',)} (or None for "
                     "REPRO_POP_SHARD routing)")
+        if self.model_shard is not None:
+            from .popshard import MODEL_SHARD_PATHS
+            self.model_shard = self.model_shard.strip().lower()
+            if self.model_shard not in MODEL_SHARD_PATHS + ("auto",):
+                raise ValueError(
+                    f"unknown model_shard {self.model_shard!r}; expected "
+                    f"one of {MODEL_SHARD_PATHS + ('auto',)} (or None for "
+                    "REPRO_MODEL_SHARD routing)")
 
 
 @dataclasses.dataclass
@@ -111,7 +122,8 @@ def impart_partition(hg: Hypergraph, cfg: ImpartConfig) -> ImpartResult:
     t0 = time.perf_counter()
     k, eps = cfg.k, cfg.eps
     hier = build_hierarchy(hg, k, seed=cfg.seed,
-                           contraction_limit_factor=cfg.contraction_limit_factor)
+                           contraction_limit_factor=cfg.contraction_limit_factor,
+                           model_shard=cfg.model_shard)
     num_levels = hier.num_levels
     n, n_c = hg.n, hier.level_n(num_levels - 1)
     thresholds = recombination_thresholds(n, n_c, cfg.beta)
@@ -143,7 +155,8 @@ def impart_partition(hg: Hypergraph, cfg: ImpartConfig) -> ImpartResult:
         # available (cfg.pop_shard / REPRO_POP_SHARD)
         parts, cuts = refine_mod.refine_population(
             hga, parts, k, eps, fm_node_limit=cfg.fm_node_limit,
-            max_iters=cfg.lp_iters, shard=cfg.pop_shard)
+            max_iters=cfg.lp_iters, shard=cfg.pop_shard,
+            model_shard=cfg.model_shard)
         trace.append((n_li, list(cuts), "refine"))
 
         # fire the geometric-threshold recombination rounds (irregular
@@ -153,14 +166,16 @@ def impart_partition(hg: Hypergraph, cfg: ImpartConfig) -> ImpartResult:
             lv_host = hier.level_host(li)
             parts, cuts = ring_recombination(
                 lv_host, np.asarray(parts)[:, : n_li], cuts, k, eps,
-                seed=cfg.seed * 31 + next_thr, shard=cfg.pop_shard)
+                seed=cfg.seed * 31 + next_thr, shard=cfg.pop_shard,
+                model_shard=cfg.model_shard)
             trace.append((n_li, list(cuts), f"recombine@{next_thr}"))
             if cfg.mutation_enabled:
                 parts, cuts = mutate_population(
                     lv_host, parts, cuts, k, eps,
                     threshold=cfg.similarity_threshold,
                     mu=cfg.mutation_mu, seed=cfg.seed * 17 + next_thr,
-                    path=cfg.mutation_path, shard=cfg.pop_shard)
+                    path=cfg.mutation_path, shard=cfg.pop_shard,
+                    model_shard=cfg.model_shard)
                 trace.append((n_li, list(cuts), f"mutate@{next_thr}"))
             next_thr += 1
         steps_done += 1
@@ -174,7 +189,8 @@ def impart_partition(hg: Hypergraph, cfg: ImpartConfig) -> ImpartResult:
                 parts = hier.project_pop(parts, lj + 1)
             hga0 = hier.level_arrays(0)
             parts, cuts = refine_mod.lp_refine_population(
-                hga0, parts, k, eps, max_iters=4, shard=cfg.pop_shard)
+                hga0, parts, k, eps, max_iters=4, shard=cfg.pop_shard,
+                model_shard=cfg.model_shard)
             trace.append((hg.n, list(cuts), "budget-exhausted"))
             degraded = True
             break
@@ -186,7 +202,9 @@ def impart_partition(hg: Hypergraph, cfg: ImpartConfig) -> ImpartResult:
         for v in range(cfg.final_vcycles):
             if exhausted(t0, cfg.time_budget_s):
                 break
-            part, cut = vcycle(hg, part, k, eps, seed=cfg.seed * 997 + v)
+            part, cut = vcycle(hg, part, k, eps, seed=cfg.seed * 997 + v,
+                               shard=cfg.pop_shard,
+                               model_shard=cfg.model_shard)
             trace.append((hg.n, [cut], f"final-vcycle@{v}"))
 
     return ImpartResult(
@@ -236,7 +254,8 @@ def impart_partition_instances(hgs: List[Hypergraph],
     for hg, cfg in zip(hgs, cfgs):
         hier = build_hierarchy(
             hg, cfg.k, seed=cfg.seed,
-            contraction_limit_factor=cfg.contraction_limit_factor)
+            contraction_limit_factor=cfg.contraction_limit_factor,
+            model_shard=cfg.model_shard)
         num = hier.num_levels
         parts, cuts = initial_partition_population(
             hier.level_host(num - 1), cfg.k, cfg.eps,
@@ -268,7 +287,8 @@ def impart_partition_instances(hgs: List[Hypergraph],
             break
         outs = instances_mod.refine_grouped(
             entries, grid=grid, fm_node_limit=fm_limit,
-            max_iters=lp_iters, shard=cfgs[0].pop_shard)
+            max_iters=lp_iters, shard=cfgs[0].pop_shard,
+            model_shard=cfgs[0].model_shard)
         for (rp, rc), i in zip(outs, step_idx):
             s, cfg, hier = st[i], cfgs[i], st[i]["hier"]
             li = hier.num_levels - 1 - t
@@ -285,7 +305,7 @@ def impart_partition_instances(hgs: List[Hypergraph],
                     lv_host, np.asarray(s["parts"])[:, : n_li],
                     s["cuts"], cfg.k, cfg.eps,
                     seed=cfg.seed * 31 + s["next_thr"],
-                    shard=cfg.pop_shard)
+                    shard=cfg.pop_shard, model_shard=cfg.model_shard)
                 s["trace"].append(
                     (n_li, list(s["cuts"]), f"recombine@{s['next_thr']}"))
                 if cfg.mutation_enabled:
@@ -294,7 +314,8 @@ def impart_partition_instances(hgs: List[Hypergraph],
                         threshold=cfg.similarity_threshold,
                         mu=cfg.mutation_mu,
                         seed=cfg.seed * 17 + s["next_thr"],
-                        path=cfg.mutation_path, shard=cfg.pop_shard)
+                        path=cfg.mutation_path, shard=cfg.pop_shard,
+                        model_shard=cfg.model_shard)
                     s["trace"].append(
                         (n_li, list(s["cuts"]), f"mutate@{s['next_thr']}"))
                 s["next_thr"] += 1
@@ -309,7 +330,7 @@ def impart_partition_instances(hgs: List[Hypergraph],
                 hga0 = hier.level_arrays(0)
                 s["parts"], s["cuts"] = refine_mod.lp_refine_population(
                     hga0, s["parts"], cfg.k, cfg.eps, max_iters=4,
-                    shard=cfg.pop_shard)
+                    shard=cfg.pop_shard, model_shard=cfg.model_shard)
                 s["trace"].append(
                     (hgs[i].n, list(s["cuts"]), "budget-exhausted"))
                 s["degraded"] = True
@@ -323,7 +344,9 @@ def impart_partition_instances(hgs: List[Hypergraph],
         if not s["degraded"]:
             for v in range(cfg.final_vcycles):
                 part, cut = vcycle(hg, part, cfg.k, cfg.eps,
-                                   seed=cfg.seed * 997 + v)
+                                   seed=cfg.seed * 997 + v,
+                                   shard=cfg.pop_shard,
+                                   model_shard=cfg.model_shard)
                 s["trace"].append((hg.n, [cut], f"final-vcycle@{v}"))
         results.append(ImpartResult(
             part=np.asarray(part, np.int32), cut=float(cut),

@@ -119,6 +119,7 @@ class IncrementalConfig:
     perturb_frac: Optional[float] = None   # None -> REPRO_INCR_PERTURB
     reuse: Optional[bool] = None           # None -> REPRO_INCR_REUSE
     pop_shard: Optional[str] = None        # None -> REPRO_POP_SHARD
+    model_shard: Optional[str] = None      # None -> REPRO_MODEL_SHARD
 
     def __post_init__(self):
         if self.k < 2:
@@ -235,7 +236,8 @@ class IncrementalState:
         how = "cold" if e is None else "patched"
         hier = dcoarsen.build_hierarchy(
             hg, cfg.k, seed=cfg.seed, restrict_part=incumbent,
-            contraction_limit_factor=cfg.contraction_limit_factor)
+            contraction_limit_factor=cfg.contraction_limit_factor,
+            model_shard=cfg.model_shard)
         self._entry = dict(token=token, k_built=cfg.k, seed=cfg.seed,
                            clf=cfg.contraction_limit_factor, hier=hier,
                            hg=hg)
@@ -375,7 +377,8 @@ def incremental_partition(hg: Hypergraph, incumbent,
     else:
         hier = dcoarsen.build_hierarchy(
             hg, cfg.k, seed=cfg.seed, restrict_part=inc0,
-            contraction_limit_factor=cfg.contraction_limit_factor)
+            contraction_limit_factor=cfg.contraction_limit_factor,
+            model_shard=cfg.model_shard)
         how = "cold"
     incs, buds = project_incumbent(hier, inc0, cfg.k, budget_w)
     top = hier.num_levels - 1
@@ -387,8 +390,8 @@ def incremental_partition(hg: Hypergraph, incumbent,
         parts, cuts = refine_mod.refine_population(
             hier.level_arrays(li), parts, cfg.k, cfg.eps,
             max_iters=cfg.lp_iters, fm_node_limit=cfg.fm_node_limit,
-            shard=cfg.pop_shard, incumbent=incs[li],
-            mig_budget=buds[li])
+            shard=cfg.pop_shard, model_shard=cfg.model_shard,
+            incumbent=incs[li], mig_budget=buds[li])
     hga0 = hier.level_arrays(0)
     inc_cut = float(metrics.cutsize(
         hga0, refine_mod.pad_part(inc0, hga0.n_pad), cfg.k))

@@ -222,11 +222,11 @@ def stack_parts(parts_list: Sequence, n_pad: int) -> np.ndarray:
 # --------------------------------------------------------------------------
 def _lp_attempt_instances_impl(hga, parts, cuts, fracs, live, attempts,
                                k: int, cap, k_live, incumbent=None,
-                               mig_budget=None):
+                               mig_budget=None, pin_axis=None):
     def one(h, p, c, f, lv, att, cp, kl, inc, mb):
         return refine_mod._lp_attempt_population_impl(
             h, p, c, f, att, k, cp, live=lv, k_live=kl, incumbent=inc,
-            mig_budget=mb)
+            mig_budget=mb, pin_axis=pin_axis)
     return jax.vmap(one)(hga, parts, cuts, fracs, live, attempts, cap,
                          k_live, incumbent, mig_budget)
 
@@ -235,32 +235,50 @@ _lp_attempt_instances = partial(jax.jit, static_argnames=("k",))(
     _lp_attempt_instances_impl)
 
 
+def _hga_instance_specs(model: bool):
+    """Spec (sub)tree for a STACKED HypergraphArrays: instance axis over
+    "pop" on every leaf; with ``model`` (DESIGN.md §15) the [I, P_pad]
+    pin tables additionally row-shard their pin axis over "model"."""
+    if not model:
+        return P("pop")
+    return HypergraphArrays(
+        pin_vertex=P("pop", "model"), pin_edge=P("pop", "model"),
+        vertex_weights=P("pop"), edge_weights=P("pop"),
+        edge_sizes=P("pop"), n=P("pop"), m=P("pop"), incident=None)
+
+
 @lru_cache(maxsize=32)
-def _lp_attempt_instances_mesh(mesh, k: int):
+def _lp_attempt_instances_mesh(mesh, k: int, model: bool = False):
     """Instance-axis LP attempt loop over the ("pop", "model") mesh:
     EVERY leaf — structure included — shards its instance axis over
-    "pop".  Instances are independent, so there is no collective at all;
-    each shard runs its instances' exact solo trip counts."""
+    "pop".  Instances are independent, so there is no cross-instance
+    collective; each shard runs its instances' exact solo trip counts.
+    With ``model`` each instance's pin tables are additionally
+    row-sharded over "model" and its pin reductions psum'd (inside the
+    instance vmap — the collective is per-instance, DESIGN.md §15)."""
     def body(hga, parts, cuts, fracs, live, attempts, cap, k_live,
              incumbent, mig_budget):
-        return _lp_attempt_instances_impl(hga, parts, cuts, fracs, live,
-                                          attempts, k, cap, k_live,
-                                          incumbent=incumbent,
-                                          mig_budget=mig_budget)
+        return _lp_attempt_instances_impl(
+            hga, parts, cuts, fracs, live, attempts, k, cap, k_live,
+            incumbent=incumbent, mig_budget=mig_budget,
+            pin_axis="model" if model else None)
 
     fn = shard_map(body, mesh,
-                   in_specs=(P("pop"),) * 10,
+                   in_specs=(_hga_instance_specs(model),)
+                   + (P("pop"),) * 9,
                    out_specs=(P("pop"),) * 5)
     return jax.jit(fn)
 
 
 def _fm_pass_instances_impl(hga, parts, k: int, cap, steps, k_live,
-                            incumbent=None, mig_budget=None):
+                            incumbent=None, mig_budget=None,
+                            pin_axis=None):
     def one(h, p, cp, st, kl, inc, mb):
         return refine_mod._fm_pass_population_impl(h, p, k, cp, st,
                                                    k_live=kl,
                                                    incumbent=inc,
-                                                   mig_budget=mb)
+                                                   mig_budget=mb,
+                                                   pin_axis=pin_axis)
     return jax.vmap(one)(hga, parts, cap, steps, k_live, incumbent,
                          mig_budget)
 
@@ -270,14 +288,17 @@ _fm_pass_instances = partial(jax.jit, static_argnames=("k",))(
 
 
 @lru_cache(maxsize=32)
-def _fm_pass_instances_mesh(mesh, k: int):
+def _fm_pass_instances_mesh(mesh, k: int, model: bool = False):
     def body(hga, parts, cap, steps, k_live, incumbent, mig_budget):
         return _fm_pass_instances_impl(hga, parts, k, cap, steps, k_live,
                                        incumbent=incumbent,
-                                       mig_budget=mig_budget)
+                                       mig_budget=mig_budget,
+                                       pin_axis="model" if model
+                                       else None)
 
     fn = shard_map(body, mesh,
-                   in_specs=(P("pop"),) * 7,
+                   in_specs=(_hga_instance_specs(model),)
+                   + (P("pop"),) * 6,
                    out_specs=(P("pop"),) * 2)
     return jax.jit(fn)
 
@@ -327,8 +348,39 @@ def _chunk_bounds(n: int, ndev: int) -> List[int]:
     return [n * d // ndev for d in range(ndev + 1)]
 
 
+def _model_active(batch: InstanceBatch, mesh,
+                  model_shard: Optional[str]) -> bool:
+    """Does this stacked dispatch row-shard its pin tables over "model"?
+    (``model_shard``/``REPRO_MODEL_SHARD`` routing + a real model axis
+    dividing the bucket's pin padding, DESIGN.md §15)."""
+    p_pad = int(batch.hga.pin_vertex.shape[-1])
+    return (popshard.resolve_model(model_shard) == "mesh"
+            and popshard.model_axis_active(p_pad, mesh))
+
+
+def _put_hga(batch_hga, npop: int, mesh, sh, model: bool):
+    """Place a stacked structure for a mesh dispatch: every leaf's
+    instance axis over "pop"; with ``model`` the pin tables additionally
+    shard their pin axis over "model" (DESIGN.md §15)."""
+    padded = jax.tree_util.tree_map(lambda x: _pad_i(x, npop), batch_hga)
+    if not model:
+        return jax.tree_util.tree_map(
+            lambda x: jax.device_put(x, sh), padded)
+    from jax.sharding import NamedSharding
+    pin_sh = NamedSharding(mesh, P("pop", "model"))
+    row = lambda x: jax.device_put(x, sh)
+    return dataclasses.replace(
+        padded,
+        pin_vertex=jax.device_put(padded.pin_vertex, pin_sh),
+        pin_edge=jax.device_put(padded.pin_edge, pin_sh),
+        vertex_weights=row(padded.vertex_weights),
+        edge_weights=row(padded.edge_weights),
+        edge_sizes=row(padded.edge_sizes),
+        n=row(padded.n), m=row(padded.m))
+
+
 def _dispatch_lp(batch: InstanceBatch, parts, cuts32, fracs, live, att,
-                 path: str):
+                 path: str, model_shard: Optional[str] = None):
     """One grouped LP attempt dispatch; returns numpy
     (parts, cuts, improved, fracs, used) stacked [I, ...]."""
     k = batch.k_pad
@@ -339,10 +391,11 @@ def _dispatch_lp(batch: InstanceBatch, parts, cuts32, fracs, live, att,
         npop = mesh.shape["pop"]
         sh = popshard.pop_sharding(mesh)
         nI = parts.shape[0]
+        model = _model_active(batch, mesh, model_shard)
         put = lambda x: jax.device_put(_pad_i(x, npop), sh)
         opt = lambda x: None if x is None else put(x)
-        hga_p = jax.tree_util.tree_map(put, batch.hga)
-        fn = _lp_attempt_instances_mesh(mesh, k)
+        hga_p = _put_hga(batch.hga, npop, mesh, sh, model)
+        fn = _lp_attempt_instances_mesh(mesh, k, model)
         out = fn(hga_p, *(put(a) for a in args), put(batch.cap),
                  put(batch.k_live), opt(batch.incumbent),
                  opt(batch.mig_budget))
@@ -373,17 +426,19 @@ def _dispatch_lp(batch: InstanceBatch, parts, cuts32, fracs, live, att,
     return tuple(np.asarray(o) for o in out)
 
 
-def _dispatch_fm(batch: InstanceBatch, parts, path: str):
+def _dispatch_fm(batch: InstanceBatch, parts, path: str,
+                 model_shard: Optional[str] = None):
     k = batch.k_pad
     if path == "mesh":
         mesh = popshard.pop_mesh()
         npop = mesh.shape["pop"]
         sh = popshard.pop_sharding(mesh)
         nI = parts.shape[0]
+        model = _model_active(batch, mesh, model_shard)
         put = lambda x: jax.device_put(_pad_i(x, npop), sh)
         opt = lambda x: None if x is None else put(x)
-        fn = _fm_pass_instances_mesh(mesh, k)
-        out = fn(jax.tree_util.tree_map(put, batch.hga),
+        fn = _fm_pass_instances_mesh(mesh, k, model)
+        out = fn(_put_hga(batch.hga, npop, mesh, sh, model),
                  put(jnp.asarray(parts)), put(batch.cap),
                  put(batch.fm_steps), put(batch.k_live),
                  opt(batch.incumbent), opt(batch.mig_budget))
@@ -418,7 +473,8 @@ def _dispatch_fm(batch: InstanceBatch, parts, path: str):
 
 
 def lp_refine_instances(batch: InstanceBatch, parts, max_iters: int = 24,
-                        patience: int = 3, shard: Optional[str] = None
+                        patience: int = 3, shard: Optional[str] = None,
+                        model_shard: Optional[str] = None
                         ) -> Tuple[np.ndarray, np.ndarray]:
     """``lp_refine_population`` for a stacked bucket: per-instance stall
     counters, per-instance attempt budgets, improved lanes frozen in
@@ -447,7 +503,7 @@ def lp_refine_instances(batch: InstanceBatch, parts, max_iters: int = 24,
             att = np.where(act, np.maximum(remaining, 0), 0)
             new_parts, new_cuts, improved, new_fracs, used = _dispatch_lp(
                 batch, parts, cuts.astype(np.float32), fracs, live, att,
-                path)
+                path, model_shard)
             parts = np.where(live[:, :, None], new_parts, parts)
             cuts = np.where(live, new_cuts.astype(np.float64), cuts)
             fracs = np.where(live, new_fracs, fracs)
@@ -462,7 +518,8 @@ def lp_refine_instances(batch: InstanceBatch, parts, max_iters: int = 24,
 
 
 def fm_refine_instances(batch: InstanceBatch, parts,
-                        max_passes: int = 8, shard: Optional[str] = None
+                        max_passes: int = 8, shard: Optional[str] = None,
+                        model_shard: Optional[str] = None
                         ) -> Tuple[np.ndarray, np.ndarray]:
     """``fm_refine_population`` for a stacked bucket.  Converged lanes
     are re-dispatched but inert (an unimproving FM pass repeats its
@@ -478,7 +535,7 @@ def fm_refine_instances(batch: InstanceBatch, parts,
     for _ in range(max_passes):
         if done.all():
             break
-        cands, cs = _dispatch_fm(batch, parts, path)
+        cands, cs = _dispatch_fm(batch, parts, path, model_shard)
         take = (cs < cuts - 1e-6) & ~done
         parts = np.where(take[:, :, None], cands, parts)
         cuts = np.where(take, cs, cuts)
@@ -488,7 +545,8 @@ def fm_refine_instances(batch: InstanceBatch, parts,
 
 def refine_instances(batch: InstanceBatch, parts,
                      fm_node_limit: int = 4096, max_iters: int = 24,
-                     patience: int = 3, shard: Optional[str] = None
+                     patience: int = 3, shard: Optional[str] = None,
+                     model_shard: Optional[str] = None
                      ) -> Tuple[np.ndarray, np.ndarray]:
     """Two-tier refinement for a stacked bucket, the instance-axis
     mirror of ``refine.refine_population``: the LP tier covers every
@@ -496,14 +554,17 @@ def refine_instances(batch: InstanceBatch, parts,
     n is within ``fm_node_limit`` (sliced out and written back), exactly
     the per-instance decision the solo driver makes."""
     parts, cuts = lp_refine_instances(batch, parts, max_iters=max_iters,
-                                      patience=patience, shard=shard)
+                                      patience=patience, shard=shard,
+                                      model_shard=model_shard)
     fm_idx = [i for i, n in enumerate(batch.ns) if n <= fm_node_limit]
     if fm_idx:
         if len(fm_idx) == batch.n_instances:
-            parts, cuts = fm_refine_instances(batch, parts, shard=shard)
+            parts, cuts = fm_refine_instances(batch, parts, shard=shard,
+                                              model_shard=model_shard)
         else:
             sub = _take_i(batch, fm_idx)
-            sp, sc = fm_refine_instances(sub, parts[fm_idx], shard=shard)
+            sp, sc = fm_refine_instances(sub, parts[fm_idx], shard=shard,
+                                         model_shard=model_shard)
             parts[fm_idx] = sp
             cuts[fm_idx] = sc
     return parts, cuts
@@ -511,7 +572,8 @@ def refine_instances(batch: InstanceBatch, parts,
 
 def refine_grouped(entries, grid: Optional[Sequence[int]] = None,
                    fm_node_limit: int = 4096, max_iters: int = 24,
-                   patience: int = 3, shard: Optional[str] = None
+                   patience: int = 3, shard: Optional[str] = None,
+                   model_shard: Optional[str] = None
                    ) -> List[Tuple[np.ndarray, np.ndarray]]:
     """Refine a heterogeneous set of instances by bucketed stacks.
 
@@ -546,7 +608,7 @@ def refine_grouped(entries, grid: Optional[Sequence[int]] = None,
         rp, rc = refine_instances(batch, parts,
                                   fm_node_limit=fm_node_limit,
                                   max_iters=max_iters, patience=patience,
-                                  shard=shard)
+                                  shard=shard, model_shard=model_shard)
         for j, i in enumerate(idx):
             out[i] = (rp[j][:, : batch.orig_n_pads[j]], rc[j])
     return out

@@ -30,25 +30,37 @@ def block_weights(hga: HypergraphArrays, part: jnp.ndarray, k: int) -> jnp.ndarr
     return jax.ops.segment_sum(hga.vertex_weights, part, num_segments=k)
 
 
-def pins_in_block(hga: HypergraphArrays, part: jnp.ndarray, k: int) -> jnp.ndarray:
-    """Phi [m_pad, k]: for each edge, how many of its pins are in block j."""
+def pins_in_block(hga: HypergraphArrays, part: jnp.ndarray, k: int,
+                  pin_axis: str | None = None) -> jnp.ndarray:
+    """Phi [m_pad, k]: for each edge, how many of its pins are in block j.
+
+    ``pin_axis``: when the pin tables are row-sharded over a mesh axis
+    (DESIGN.md §15) this runs on the local rows and psums the int32
+    partial counts — integer addition commutes exactly, so the summed
+    Phi is bit-equal to the replicated computation (the
+    ``population._phi`` template)."""
     pin_parts = part[hga.pin_vertex]                      # [P]
     flat = hga.pin_edge.astype(jnp.int32) * k + pin_parts
     counts = jax.ops.segment_sum(
         jnp.ones_like(flat, jnp.int32), flat, num_segments=hga.m_pad * k
     )
-    return counts.reshape(hga.m_pad, k)
+    counts = counts.reshape(hga.m_pad, k)
+    if pin_axis is not None:
+        counts = jax.lax.psum(counts, pin_axis)
+    return counts
 
 
-def connectivity(hga: HypergraphArrays, part: jnp.ndarray, k: int) -> jnp.ndarray:
+def connectivity(hga: HypergraphArrays, part: jnp.ndarray, k: int,
+                 pin_axis: str | None = None) -> jnp.ndarray:
     """lambda(e) [m_pad]: number of distinct blocks spanned by each edge."""
-    phi = pins_in_block(hga, part, k)
+    phi = pins_in_block(hga, part, k, pin_axis=pin_axis)
     return (phi > 0).sum(axis=-1).astype(jnp.int32)
 
 
-def cutsize(hga: HypergraphArrays, part: jnp.ndarray, k: int) -> jnp.ndarray:
+def cutsize(hga: HypergraphArrays, part: jnp.ndarray, k: int,
+            pin_axis: str | None = None) -> jnp.ndarray:
     """Sum of weights of edges spanning >= 2 blocks (the paper's objective)."""
-    lam = connectivity(hga, part, k)
+    lam = connectivity(hga, part, k, pin_axis=pin_axis)
     return jnp.where(lam > 1, hga.edge_weights, 0.0).sum()
 
 
@@ -87,9 +99,17 @@ def _edge_gain_terms(hga: HypergraphArrays, phi: jnp.ndarray):
     return becomes_internal, was_internal
 
 
-def _gain_segsum(hga: HypergraphArrays, phi: jnp.ndarray) -> jnp.ndarray:
+def _gain_segsum(hga: HypergraphArrays, phi: jnp.ndarray,
+                 pin_axis: str | None = None) -> jnp.ndarray:
     """XLA reference assembly: per-pin gather + segment-sum.  Materialises
-    a [P, k] intermediate — fine for small k, the fallback everywhere."""
+    a [P, k] intermediate — fine for small k, the fallback everywhere.
+
+    With ``pin_axis`` the gathers run over the local pin rows and the two
+    segment-sums become psum'd partials (the ``population._gains``
+    template — g and l are psum'd separately).  Edge weights are
+    integer-valued f32 on every instance the engines ingest, so the
+    partial sums are exact and the summed gains bit-equal the replicated
+    assembly (DESIGN.md §15)."""
     becomes_internal, was_internal = _edge_gain_terms(hga, phi)
     per_pin_gain = becomes_internal[hga.pin_edge]          # [P, k]
     per_pin_loss = was_internal[hga.pin_edge]              # [P]
@@ -97,11 +117,14 @@ def _gain_segsum(hga: HypergraphArrays, phi: jnp.ndarray) -> jnp.ndarray:
                             num_segments=hga.n_pad)        # [n_pad, k]
     l = jax.ops.segment_sum(per_pin_loss, hga.pin_vertex,
                             num_segments=hga.n_pad)        # [n_pad]
+    if pin_axis is not None:
+        g = jax.lax.psum(g, pin_axis)
+        l = jax.lax.psum(l, pin_axis)
     return g - l[:, None]
 
 
-def _gain_compact(hga: HypergraphArrays, phi: jnp.ndarray, k: int
-                  ) -> jnp.ndarray:
+def _gain_compact(hga: HypergraphArrays, phi: jnp.ndarray, k: int,
+                  pin_axis: str | None = None) -> jnp.ndarray:
     """Sparse XLA assembly for large k, O(P) instead of O(P * k).
 
     ``becomes_internal`` has at most TWO nonzero columns per edge: an
@@ -132,6 +155,11 @@ def _gain_compact(hga: HypergraphArrays, phi: jnp.ndarray, k: int
          .at[pv, c1[pe]].add(w[pe], mode="drop")
          .at[pv, c2[pe]].add(w[pe], mode="drop"))
     l = jax.ops.segment_sum(was_internal[pe], pv, num_segments=hga.n_pad)
+    if pin_axis is not None:
+        # sharded pin rows: g and l are per-shard partials (psum'd
+        # separately, like _gain_segsum / population._gains)
+        g = jax.lax.psum(g, pin_axis)
+        l = jax.lax.psum(l, pin_axis)
     return g - l[:, None]
 
 
@@ -147,7 +175,8 @@ def _resolve_gain_path(hga: HypergraphArrays, k: int, assemble: str) -> str:
 
 def gain_matrix(hga: HypergraphArrays, part: jnp.ndarray, k: int,
                 phi: jnp.ndarray | None = None,
-                assemble: str = "auto") -> jnp.ndarray:
+                assemble: str = "auto",
+                pin_axis: str | None = None) -> jnp.ndarray:
     """Full [n_pad, k] cut-size gain matrix.
 
     gain[v, j] = reduction in cut if v moves from part[v] to j
@@ -162,12 +191,17 @@ def gain_matrix(hga: HypergraphArrays, part: jnp.ndarray, k: int,
     scalar and vmapped population entry points agree bit-for-bit.
     """
     if phi is None:
-        phi = pins_in_block(hga, part, k)                  # [m_pad, k]
+        phi = pins_in_block(hga, part, k, pin_axis=pin_axis)  # [m_pad, k]
     path = _resolve_gain_path(hga, k, assemble)
+    if pin_axis is not None and path not in ("segsum", "compact"):
+        # kernel assembly indexes the dense incidence layout by GLOBAL
+        # pin position; on row-sharded pins only the XLA partial paths
+        # exist (model-shard placement drops the layout anyway)
+        path = "segsum"
     if path == "compact":
-        g = _gain_compact(hga, phi, k)
+        g = _gain_compact(hga, phi, k, pin_axis=pin_axis)
     elif path == "segsum" or hga.incident is None:
-        g = _gain_segsum(hga, phi)
+        g = _gain_segsum(hga, phi, pin_axis=pin_axis)
     else:
         from repro.kernels import ops
         bi, wi = _edge_gain_terms(hga, phi)
@@ -227,10 +261,12 @@ cutsize_population = jax.jit(
 
 def _cutsize_population_weighted_impl(hga: HypergraphArrays,
                                       parts: jnp.ndarray,
-                                      ew_pop: jnp.ndarray, k: int
+                                      ew_pop: jnp.ndarray, k: int,
+                                      pin_axis: str | None = None
                                       ) -> jnp.ndarray:
     return jax.vmap(
-        lambda p, ew: cutsize(member_arrays(hga, ew), p, k))(parts, ew_pop)
+        lambda p, ew: cutsize(member_arrays(hga, ew), p, k,
+                              pin_axis=pin_axis))(parts, ew_pop)
 
 
 #: [alpha] cuts where each member is measured with ITS OWN edge-weight
@@ -242,7 +278,8 @@ cutsize_population_weighted = jax.jit(
 
 def _gain_matrix_population_impl(hga: HypergraphArrays, parts: jnp.ndarray,
                                  k: int, assemble: str = "auto",
-                                 ew_pop: jnp.ndarray | None = None
+                                 ew_pop: jnp.ndarray | None = None,
+                                 pin_axis: str | None = None
                                  ) -> jnp.ndarray:
     """Population gain matrices [alpha, n_pad, k] in one dispatch.
 
@@ -257,14 +294,17 @@ def _gain_matrix_population_impl(hga: HypergraphArrays, parts: jnp.ndarray,
     the one shared incidence layout and simply stream per-member tables.
     """
     path = _resolve_gain_path(hga, k, assemble)
-    if path in ("segsum", "compact") or hga.incident is None:
+    if path in ("segsum", "compact") or hga.incident is None \
+            or pin_axis is not None:
         if ew_pop is None:
             return _over_parts(
-                lambda h, p, kk: gain_matrix(h, p, kk, assemble=path))(
+                lambda h, p, kk: gain_matrix(h, p, kk, assemble=path,
+                                             pin_axis=pin_axis))(
                     hga, parts, k)
         return jax.vmap(
             lambda p, ew: gain_matrix(member_arrays(hga, ew), p, k,
-                                      assemble=path))(parts, ew_pop)
+                                      assemble=path, pin_axis=pin_axis))(
+                parts, ew_pop)
     from repro.kernels import ops
     phi = _over_parts(pins_in_block)(hga, parts, k)     # [alpha, m_pad, k]
     if ew_pop is None:

@@ -80,7 +80,8 @@ def similarity_sets(hga, parts, cuts, k: int,
 def mutate_population(hg: Hypergraph, parts, cuts, k: int, eps: float,
                       threshold: float = 20.0, mu: float = 0.1,
                       seed: int = 0, path: Optional[str] = None,
-                      shard: Optional[str] = None
+                      shard: Optional[str] = None,
+                      model_shard: Optional[str] = None
                       ) -> Tuple[np.ndarray, np.ndarray]:
     """Apply the mutation operator to every offspring with a non-empty
     similarity set.  Returns the updated population (stacked).
@@ -118,7 +119,7 @@ def mutate_population(hg: Hypergraph, parts, cuts, k: int, eps: float,
         for j in mutated_js]).astype(np.float32)
     mutated, _ = vcycle_population(hg, new_parts[mutated_js], w_pop, k,
                                    eps, seed=seed * 7919, path=path,
-                                   shard=shard)
+                                   shard=shard, model_shard=model_shard)
     new_parts[mutated_js] = mutated
 
     # report true (unweighted) cuts, one batched dispatch

@@ -45,6 +45,13 @@ from ..jaxcompat import make_mesh, shard_map
 
 POP_SHARD_PATHS = ("mesh", "chunk", "off")
 
+#: Structure-sharding paths over the mesh's "model" axis (DESIGN.md §15).
+#: "mesh" row-shards the pin tables over "model" and turns the pin-indexed
+#: segment-sums into psum'd partials; "off" (the default) keeps structure
+#: replicated — the single-device reference every model-sharded dispatch
+#: must reproduce bit-for-bit.
+MODEL_SHARD_PATHS = ("mesh", "off")
+
 # Elasticity: the surviving-device pool.  ``None`` = every local device;
 # an integer caps the pool to the first N devices — the simulation of a
 # device loss on this container (``runtime.elastic.simulate_device_loss``
@@ -110,29 +117,78 @@ def model_axis_size() -> int:
     return s if s >= 1 else 1
 
 
+def model_shard_path() -> str:
+    """Structure-sharding routing: ``REPRO_MODEL_SHARD=mesh|off`` forces a
+    path; ``auto`` (unset) is ``off`` — structure sharding is opt-in
+    because it only pays when the pin arrays outgrow one device, while
+    the replicated engine has no collective in its gain pipeline."""
+    env = os.environ.get("REPRO_MODEL_SHARD", "auto").strip().lower()
+    if env in MODEL_SHARD_PATHS:
+        return env
+    return "off"
+
+
+def resolve_model(shard: str | None) -> str:
+    """Validate an explicit ``model_shard=`` override (None/"auto" defers
+    to ``REPRO_MODEL_SHARD``)."""
+    if shard is None:
+        return model_shard_path()
+    s = shard.strip().lower()
+    if s == "auto":
+        return model_shard_path()
+    if s not in MODEL_SHARD_PATHS:
+        raise ValueError(f"unknown model shard path {shard!r}; "
+                         f"expected one of {MODEL_SHARD_PATHS} (or 'auto')")
+    return s
+
+
 _MESH_CACHE: dict = {}
 
 
+def _pool_token() -> tuple:
+    """Identity of the CURRENT device pool: the tuple of device ids the
+    survivor pool resolves to.  Keying the mesh cache on this (rather
+    than the bare device count) means a mid-run pool change — a device
+    loss, a restore, or any future pool that happens to share a count
+    with an earlier one — can never be served a mesh built over dead or
+    different devices."""
+    return tuple(d.id for d in local_devices())
+
+
 def pop_mesh():
-    """The local ("pop", "model") mesh, cached per (device count, model
-    size).  ``pop`` spans ``n_devices // model``; with the default
+    """The local ("pop", "model") mesh, cached per (device pool token,
+    model size).  ``pop`` spans ``n_devices // model``; with the default
     model=1 every local device holds a slice of the population.  The
-    device count is the SURVIVOR pool (``local_devices``), so after a
-    device loss this transparently hands every consumer the rebuilt,
-    smaller mesh — re-closing the recombination ring over the survivors
+    pool token is the SURVIVOR pool's device ids (``local_devices``), so
+    after a device loss — or a mid-run ``REPRO_POP_MESH_MODEL`` change —
+    this transparently hands every consumer the correct rebuilt mesh
     (``ring_partners`` ppermutes on this mesh)."""
     devs = local_devices()
     ndev = len(devs)
     nmodel = model_axis_size()
     if ndev % nmodel != 0:
         nmodel = 1
-    key = (ndev, nmodel)
+    key = (_pool_token(), nmodel)
     mesh = _MESH_CACHE.get(key)
     if mesh is None:
         mesh = make_mesh((ndev // nmodel, nmodel), ("pop", "model"),
                          devices=devs)
         _MESH_CACHE[key] = mesh
     return mesh
+
+
+def model_axis_active(p_pad: int, mesh=None) -> bool:
+    """Should THIS dispatch row-shard its pin tables over "model"?
+
+    True iff the model path is routed on (``REPRO_MODEL_SHARD=mesh`` or
+    an explicit override resolved by the caller), the mesh's model axis
+    is real (>1) and it divides ``p_pad`` (pin tables are padded to
+    powers of two >= 256, so any power-of-two axis size divides; odd
+    sizes fall back to the replicated engine rather than mis-shard)."""
+    if mesh is None:
+        mesh = pop_mesh()
+    nmodel = mesh.shape["model"]
+    return nmodel > 1 and p_pad % nmodel == 0
 
 
 def pop_sharding(mesh) -> NamedSharding:
@@ -220,6 +276,92 @@ def device_put_cached(obj, target):
     while len(_PLACEMENT_CACHE) > _PLACEMENT_CACHE_MAX:
         _PLACEMENT_CACHE.popitem(last=False)
     return placed
+
+
+def hga_model_specs(hga, pin_spec, rep_spec):
+    """A spec pytree matching ``hga`` with the pin tables on ``pin_spec``
+    and everything else on ``rep_spec``.  The incidence layout is dropped
+    (set to None): the dense gain layout indexes global pin positions, so
+    it is meaningless on a row-sharded pin table, and dropping it routes
+    gain assembly onto the XLA segment-sum paths that the psum'd partials
+    are proven against."""
+    import dataclasses as _dc
+    return _dc.replace(hga, pin_vertex=pin_spec, pin_edge=pin_spec,
+                       vertex_weights=rep_spec, edge_weights=rep_spec,
+                       edge_sizes=rep_spec, n=rep_spec, m=rep_spec,
+                       incident=None)
+
+
+def model_put_cached(hga, mesh):
+    """Place a HypergraphArrays with its pin tables row-sharded over the
+    mesh's "model" axis and every edge/vertex-indexed leaf replicated —
+    the model-shard layout (DESIGN.md §15).  Memoised like
+    ``device_put_cached`` so a level's structure ships once per mesh."""
+    import dataclasses as _dc
+    key = (placement_token(hga), "model-shard", mesh)
+    hit = _PLACEMENT_CACHE.get(key)
+    if hit is not None:
+        _PLACEMENT_CACHE.move_to_end(key)
+        return hit
+    shardings = hga_model_specs(hga, NamedSharding(mesh, P("model")),
+                                NamedSharding(mesh, P()))
+    placed = jax.device_put(_dc.replace(hga, incident=None), shardings)
+    _PLACEMENT_CACHE[key] = placed
+    weakref.finalize(hga, _PLACEMENT_CACHE.pop, key, None)
+    while len(_PLACEMENT_CACHE) > _PLACEMENT_CACHE_MAX:
+        _PLACEMENT_CACHE.popitem(last=False)
+    return placed
+
+
+# --------------------------------------------------------------------------
+# Artificial per-device structure-memory budget
+# --------------------------------------------------------------------------
+# The forced-host-device CI lanes run on one CPU with no real per-device
+# HBM limit, so "this instance OOMs unsharded but fits sharded" would be
+# unprovable there.  ``REPRO_DEVICE_MEM_BUDGET`` (bytes per device) is an
+# artificial budget checked at refinement dispatch against the structure
+# bytes each device would hold: pin tables divided by the model-axis
+# shard count, edge/vertex tables replicated.  Unset = no check.
+class DeviceBudgetExceeded(RuntimeError):
+    """Structure bytes per device exceed ``REPRO_DEVICE_MEM_BUDGET``."""
+
+
+def device_mem_budget() -> int | None:
+    """The artificial per-device budget in bytes, or None when unset."""
+    raw = os.environ.get("REPRO_DEVICE_MEM_BUDGET", "").strip()
+    if not raw:
+        return None
+    try:
+        b = int(raw)
+    except ValueError:
+        return None
+    return b if b > 0 else None
+
+
+def structure_bytes_per_device(hga, nmodel: int) -> int:
+    """Structure bytes ONE device holds: the two int32 pin tables are
+    row-sharded ``nmodel`` ways; vertex weights, edge weights and edge
+    sizes stay replicated (they are the replicated operands of the psum'd
+    partial reductions)."""
+    p_pad = int(hga.pin_vertex.shape[-1])
+    n_pad = int(hga.vertex_weights.shape[-1])
+    m_pad = int(hga.edge_weights.shape[-1])
+    pins = 2 * 4 * p_pad // max(1, nmodel)
+    return pins + 4 * n_pad + 2 * 4 * m_pad
+
+
+def enforce_structure_budget(hga, nmodel: int) -> None:
+    """Raise ``DeviceBudgetExceeded`` when the per-device structure bytes
+    for an ``nmodel``-way shard exceed ``REPRO_DEVICE_MEM_BUDGET``.
+    No-op when the budget knob is unset."""
+    budget = device_mem_budget()
+    if budget is None:
+        return
+    need = structure_bytes_per_device(hga, nmodel)
+    if need > budget:
+        raise DeviceBudgetExceeded(
+            f"structure needs {need} bytes/device ({nmodel}-way model "
+            f"shard) but REPRO_DEVICE_MEM_BUDGET={budget}")
 
 
 # --------------------------------------------------------------------------

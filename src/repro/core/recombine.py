@@ -75,7 +75,8 @@ def _ils_clustered(chg: Hypergraph, k: int, eps: float, warm: np.ndarray,
 
 
 def recombine(hg: Hypergraph, part_a: np.ndarray, part_b: np.ndarray,
-              cut_a: float, cut_b: float, k: int, eps: float, seed: int = 0
+              cut_a: float, cut_b: float, k: int, eps: float, seed: int = 0,
+              shard: str | None = None, model_shard: str | None = None
               ) -> Tuple[np.ndarray, float]:
     """Produce one offspring from two parents at the current level."""
     part_a = np.asarray(part_a, np.int32)[: hg.n]
@@ -102,7 +103,8 @@ def recombine(hg: Hypergraph, part_a: np.ndarray, part_b: np.ndarray,
         cpart, _ = _ils_clustered(chg, k, eps, warm, seed, restarts=2)
     else:
         # too large to treat as a clustered instance: V-cycle the level
-        off, off_cut = vcycle(hg, better, k, eps, seed=seed)
+        off, off_cut = vcycle(hg, better, k, eps, seed=seed, shard=shard,
+                              model_shard=model_shard)
         return off, off_cut
 
     offspring = cpart[cid]
@@ -116,7 +118,8 @@ def recombine(hg: Hypergraph, part_a: np.ndarray, part_b: np.ndarray,
 
 def ring_recombination(hg: Hypergraph, parts, cuts, k: int,
                        eps: float, seed: int = 0,
-                       shard: str | None = None
+                       shard: str | None = None,
+                       model_shard: str | None = None
                        ) -> Tuple[np.ndarray, np.ndarray]:
     """Paper's circular pairing: (1,2), (2,3), ..., (alpha, 1).
 
@@ -136,7 +139,8 @@ def ring_recombination(hg: Hypergraph, parts, cuts, k: int,
     for i in range(alpha):
         off, c = recombine(hg, stacked[i], partners[i],
                            float(cuts[i]), float(partner_cuts[i]),
-                           k, eps, seed=seed * 1009 + i)
+                           k, eps, seed=seed * 1009 + i, shard=shard,
+                           model_shard=model_shard)
         new_parts.append(np.asarray(off, np.int32)[: hg.n])
         new_cuts.append(c)
     return np.stack(new_parts), np.asarray(new_cuts, np.float64)

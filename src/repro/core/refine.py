@@ -205,7 +205,8 @@ def _lp_round_population_impl(hga: HypergraphArrays, parts: jnp.ndarray,
                               edge_weights_pop: jnp.ndarray | None = None,
                               k_live: jnp.ndarray | None = None,
                               incumbent: jnp.ndarray | None = None,
-                              mig_budget: jnp.ndarray | None = None
+                              mig_budget: jnp.ndarray | None = None,
+                              pin_axis: str | None = None
                               ) -> jnp.ndarray:
     """lp_round for all members: gains come from the batched dispatcher
     (one kernel launch for the population), the proposal/acceptance tail
@@ -216,10 +217,14 @@ def _lp_round_population_impl(hga: HypergraphArrays, parts: jnp.ndarray,
     §10); ``edge_weight_override`` [m_pad] stays the shared-bias variant.
     ``incumbent`` [n_pad] + ``mig_budget`` scalar are shared by all
     members (every lane bounds its own migration, DESIGN.md §14).
+    ``pin_axis``: pin tables row-sharded over that mesh axis — the gain
+    matrices arrive as psum'd partials, bit-equal to the replicated
+    assembly (DESIGN.md §15); the acceptance tail below runs on
+    replicated [n_pad]-indexed values and is untouched.
     """
     h = _with_weights(hga, edge_weight_override)
     gains = metrics._gain_matrix_population_impl(
-        h, parts, k, ew_pop=edge_weights_pop)
+        h, parts, k, ew_pop=edge_weights_pop, pin_axis=pin_axis)
     return jax.vmap(
         lambda p, f, g: _lp_round_from_gains(h, p, k, cap, f, g,
                                              k_live=k_live,
@@ -250,7 +255,8 @@ def _lp_attempt_population_impl(hga: HypergraphArrays, parts: jnp.ndarray,
                                 live: jnp.ndarray | None = None,
                                 k_live: jnp.ndarray | None = None,
                                 incumbent: jnp.ndarray | None = None,
-                                mig_budget: jnp.ndarray | None = None):
+                                mig_budget: jnp.ndarray | None = None,
+                                pin_axis: str | None = None):
     """Device-resident LP attempt loop fused into one ``lax.while_loop``.
 
     Per member (mirroring the scalar ``lp_refine`` inner loop exactly):
@@ -296,12 +302,15 @@ def _lp_attempt_population_impl(hga: HypergraphArrays, parts: jnp.ndarray,
                                           edge_weights_pop,
                                           k_live=k_live,
                                           incumbent=incumbent,
-                                          mig_budget=mig_budget)
+                                          mig_budget=mig_budget,
+                                          pin_axis=pin_axis)
         if edge_weights_pop is None:
-            cs = jax.vmap(lambda p: metrics.cutsize(hga, p, k))(cands)
+            cs = jax.vmap(
+                lambda p: metrics.cutsize(hga, p, k,
+                                          pin_axis=pin_axis))(cands)
         else:  # each member's acceptance cut on its own reweight
             cs = metrics._cutsize_population_weighted_impl(
-                hga, cands, edge_weights_pop, k)
+                hga, cands, edge_weights_pop, k, pin_axis=pin_axis)
         take = cs < cuts - 1e-6
         if live is not None:
             take = take & live
@@ -326,24 +335,41 @@ _lp_attempt_population = partial(jax.jit, static_argnames=("k",))(
     _lp_attempt_population_impl)
 
 
+def _hga_specs(model: bool):
+    """shard_map spec (sub)tree for a HypergraphArrays argument: fully
+    replicated, or — on the model-shard path (DESIGN.md §15) — pin
+    tables row-sharded over "model" with every edge/vertex-indexed leaf
+    replicated.  The model placement drops the incidence layout, so the
+    spec tree's structure matches (incident=None)."""
+    if not model:
+        return P()
+    return HypergraphArrays(pin_vertex=P("model"), pin_edge=P("model"),
+                            vertex_weights=P(), edge_weights=P(),
+                            edge_sizes=P(), n=P(), m=P(), incident=None)
+
+
 @lru_cache(maxsize=32)
-def _lp_attempt_population_mesh(mesh, k: int):
+def _lp_attempt_population_mesh(mesh, k: int, model: bool = False):
     """The fused LP attempt loop shard_map'd over the ("pop", "model")
-    mesh: structure replicated, partition/cut/frac/weight-row leaves
-    sharded over "pop".  Cached per (mesh, k); jit handles the rest of
-    the signature (presence of the optional weight args, bucket shapes).
+    mesh: partition/cut/frac/weight-row leaves sharded over "pop";
+    structure replicated, or — with ``model`` (``REPRO_MODEL_SHARD=mesh``,
+    DESIGN.md §15) — pin tables row-sharded over "model" with the
+    pin-indexed reductions psum'd.  Cached per (mesh, k, model); jit
+    handles the rest of the signature (presence of the optional weight
+    args, bucket shapes).
     """
     def body(hga, parts, cuts, fracs, attempts, cap, ewo, ew_pop,
              incumbent, mig_budget):
         return _lp_attempt_population_impl(
             hga, parts, cuts, fracs, attempts, k, cap,
             edge_weight_override=ewo, edge_weights_pop=ew_pop,
-            pop_axis="pop", incumbent=incumbent, mig_budget=mig_budget)
+            pop_axis="pop", incumbent=incumbent, mig_budget=mig_budget,
+            pin_axis="model" if model else None)
 
     fn = shard_map(
         body, mesh,
-        in_specs=(P(), P("pop"), P("pop"), P("pop"), P(), P(), P(),
-                  P("pop"), P(), P()),
+        in_specs=(_hga_specs(model), P("pop"), P("pop"), P("pop"), P(),
+                  P(), P(), P("pop"), P(), P()),
         out_specs=(P("pop"), P("pop"), P("pop"), P("pop"), P()))
     return jax.jit(fn)
 
@@ -382,7 +408,8 @@ def lp_refine_population(hga: HypergraphArrays, parts, k: int, eps: float,
                          max_iters: int = 24, patience: int = 3,
                          edge_weight_override=None, edge_weights_pop=None,
                          shard: str | None = None,
-                         incumbent=None, mig_budget: float | None = None
+                         incumbent=None, mig_budget: float | None = None,
+                         model_shard: str | None = None
                          ) -> Tuple[np.ndarray, np.ndarray]:
     """Batched ``lp_refine``: ONE device dispatch per round covers the
     whole population, attempts included.
@@ -410,6 +437,12 @@ def lp_refine_population(hga: HypergraphArrays, parts, k: int, eps: float,
     member's moved-vertex weight relative to the incumbent stays within
     the budget throughout refinement (an infinite budget is bit-identical
     to omitting both).
+
+    ``model_shard`` (None = ``REPRO_MODEL_SHARD``, DESIGN.md §15): on the
+    mesh path, "mesh" additionally row-shards the pin tables over the
+    mesh's "model" axis (>1) with the pin-indexed segment-sums psum'd —
+    for instances whose pin arrays outgrow one device — still bit-equal
+    to the replicated engine.
     """
     cap = _cap_for(hga, k, eps)
     parts = pad_parts(parts, hga.n_pad)
@@ -428,8 +461,9 @@ def lp_refine_population(hga: HypergraphArrays, parts, k: int, eps: float,
 
     mesh_fn = ewo_m = None
     if popshard.resolve(shard) == "mesh" and alpha > 1:
-        mesh, npop, pop_sh, hga_m, cap_m = _mesh_dispatch(hga, k, eps)
-        mesh_fn = _lp_attempt_population_mesh(mesh, k)
+        mesh, npop, pop_sh, hga_m, cap_m, model = _mesh_dispatch(
+            hga, k, eps, model_shard)
+        mesh_fn = _lp_attempt_population_mesh(mesh, k, model)
         if edge_weight_override is not None:
             ewo_m = jax.device_put(edge_weight_override,
                                    popshard.replicated(mesh))
@@ -440,6 +474,9 @@ def lp_refine_population(hga: HypergraphArrays, parts, k: int, eps: float,
         parts = np.array(parts)
         if edge_weights_pop is not None:
             edge_weights_pop = np.asarray(edge_weights_pop)
+    else:
+        # replicated structure on every device this path touches
+        popshard.enforce_structure_budget(hga, 1)
 
     stall = np.zeros(alpha, np.int32)
     done = np.zeros(alpha, bool)
@@ -525,7 +562,8 @@ def _fm_pass_impl(hga: HypergraphArrays, part: jnp.ndarray, k: int,
                   cap: jnp.ndarray, steps: int,
                   k_live: jnp.ndarray | None = None,
                   incumbent: jnp.ndarray | None = None,
-                  mig_budget: jnp.ndarray | None = None
+                  mig_budget: jnp.ndarray | None = None,
+                  pin_axis: str | None = None
                   ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """One FM pass: up to ``steps`` single moves (negative gains allowed),
     returns the best prefix (partition + its cut).
@@ -549,12 +587,18 @@ def _fm_pass_impl(hga: HypergraphArrays, part: jnp.ndarray, k: int,
     budget is masked to NEG exactly like a balance violation.  Every
     trajectory prefix then satisfies the budget by induction, so the
     best-prefix rollback is always feasible.
+
+    ``pin_axis`` (DESIGN.md §15): pin tables row-sharded over that mesh
+    axis — phi, the gain matrix and the per-move pin-count ``d`` arrive
+    as psum'd int32/integer-f32 partials; every carried state leaf is
+    [n_pad]/[m_pad]-indexed and identical on all shards, so the move
+    sequence is bit-identical to the replicated pass.
     """
     n_pad = hga.n_pad
     valid = (jnp.arange(n_pad) < hga.n) & (hga.vertex_weights > 0)
-    phi0 = metrics.pins_in_block(hga, part, k)
+    phi0 = metrics.pins_in_block(hga, part, k, pin_axis=pin_axis)
     bw0 = metrics.block_weights(hga, part, k)
-    cut0 = metrics.cutsize(hga, part, k)
+    cut0 = metrics.cutsize(hga, part, k, pin_axis=pin_axis)
     if incumbent is None:
         mig0 = jnp.float32(0.0)
     else:
@@ -569,7 +613,8 @@ def _fm_pass_impl(hga: HypergraphArrays, part: jnp.ndarray, k: int,
         # counts make the [P, k] segment-sum cheaper per move step than
         # the compact path's fixed extract/scatter overhead
         gains = metrics.gain_matrix(hga, part, k, phi=phi,
-                                    assemble="segsum")        # [n_pad, k]
+                                    assemble="segsum",
+                                    pin_axis=pin_axis)        # [n_pad, k]
         own = jax.nn.one_hot(part, k, dtype=bool)
         feasible = (bw[None, :] + hga.vertex_weights[:, None]) <= cap + 1e-6
         score = jnp.where(own | ~feasible, NEG, gains)
@@ -595,6 +640,8 @@ def _fm_pass_impl(hga: HypergraphArrays, part: jnp.ndarray, k: int,
         d = jax.ops.segment_sum(
             (hga.pin_vertex == v).astype(jnp.int32), hga.pin_edge,
             num_segments=hga.m_pad)                            # [m_pad]
+        if pin_axis is not None:
+            d = jax.lax.psum(d, pin_axis)  # v's pins span shards
         delta = (jax.nn.one_hot(j, k, dtype=phi.dtype)
                  - jax.nn.one_hot(b, k, dtype=phi.dtype))      # [k]
         phi_new = phi + d[:, None] * delta[None, :]
@@ -634,18 +681,21 @@ def _fm_pass_population_impl(hga: HypergraphArrays, parts: jnp.ndarray,
                              edge_weights_pop: jnp.ndarray | None = None,
                              k_live: jnp.ndarray | None = None,
                              incumbent: jnp.ndarray | None = None,
-                             mig_budget: jnp.ndarray | None = None
+                             mig_budget: jnp.ndarray | None = None,
+                             pin_axis: str | None = None
                              ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     if edge_weights_pop is None:
         return jax.vmap(
             lambda p: _fm_pass_impl(hga, p, k, cap, steps,
                                     k_live=k_live, incumbent=incumbent,
-                                    mig_budget=mig_budget))(parts)
+                                    mig_budget=mig_budget,
+                                    pin_axis=pin_axis))(parts)
     return jax.vmap(
         lambda p, ew: _fm_pass_impl(metrics.member_arrays(hga, ew), p, k,
                                     cap, steps, k_live=k_live,
                                     incumbent=incumbent,
-                                    mig_budget=mig_budget))(
+                                    mig_budget=mig_budget,
+                                    pin_axis=pin_axis))(
                                         parts, edge_weights_pop)
 
 
@@ -657,19 +707,26 @@ _fm_pass_population = partial(jax.jit, static_argnames=("k", "steps"))(
 
 
 @lru_cache(maxsize=32)
-def _fm_pass_population_mesh(mesh, k: int, steps: int):
+def _fm_pass_population_mesh(mesh, k: int, steps: int,
+                             model: bool = False):
     """The batched FM pass shard_map'd over the ("pop", "model") mesh
     (DESIGN.md §11): structure replicated, member rows sharded over
     "pop".  FM lanes are fully row-independent (no collective needed);
-    each shard's move loop even exits as soon as ITS lanes are done."""
+    each shard's move loop even exits as soon as ITS lanes are done.
+
+    With ``model`` (DESIGN.md §15) the pin tables are additionally
+    row-sharded over "model" and the per-move pin reductions psum'd; the
+    move selection runs on replicated values, so every model shard of a
+    pop row takes the identical trip count and move sequence."""
     def body(hga, parts, cap, ew_pop, incumbent, mig_budget):
-        return _fm_pass_population_impl(hga, parts, k, cap, steps,
-                                        edge_weights_pop=ew_pop,
-                                        incumbent=incumbent,
-                                        mig_budget=mig_budget)
+        return _fm_pass_population_impl(
+            hga, parts, k, cap, steps, edge_weights_pop=ew_pop,
+            incumbent=incumbent, mig_budget=mig_budget,
+            pin_axis="model" if model else None)
 
     fn = shard_map(body, mesh,
-                   in_specs=(P(), P("pop"), P(), P("pop"), P(), P()),
+                   in_specs=(_hga_specs(model), P("pop"), P(), P("pop"),
+                             P(), P()),
                    out_specs=(P("pop"), P("pop")))
     return jax.jit(fn)
 
@@ -732,16 +789,25 @@ def _cap_for(hga: HypergraphArrays, k: int, eps: float, target=None):
     return popshard.device_put_cached(cap, target)
 
 
-def _mesh_dispatch(hga: HypergraphArrays, k: int, eps: float):
+def _mesh_dispatch(hga: HypergraphArrays, k: int, eps: float,
+                   model_shard: str | None = None):
     """Shared setup of a mesh-path dispatch (both tiers): the local
-    ("pop", "model") mesh, its pop-axis size and row sharding, and the
-    replicated structure + cap (shipped once per (level, mesh) through
-    the placement cache)."""
+    ("pop", "model") mesh, its pop-axis size and row sharding, the
+    structure placement + cap (shipped once per (level, mesh) through
+    the placement cache), and whether this dispatch row-shards the pin
+    tables over "model" (``model_shard``/``REPRO_MODEL_SHARD``,
+    DESIGN.md §15) — in which case the structure ships in the
+    model-sharded layout instead of replicated."""
     mesh = popshard.pop_mesh()
     rep = popshard.replicated(mesh)
+    model = (popshard.resolve_model(model_shard) == "mesh"
+             and popshard.model_axis_active(hga.p_pad, mesh))
+    popshard.enforce_structure_budget(
+        hga, mesh.shape["model"] if model else 1)
+    hga_m = (popshard.model_put_cached(hga, mesh) if model
+             else popshard.device_put_cached(hga, rep))
     return (mesh, mesh.shape["pop"], popshard.pop_sharding(mesh),
-            popshard.device_put_cached(hga, rep),
-            _cap_for(hga, k, eps, rep))
+            hga_m, _cap_for(hga, k, eps, rep), model)
 
 
 def _put_rows(arr, npop: int, pop_sh):
@@ -754,7 +820,8 @@ def fm_refine_population(hga: HypergraphArrays, parts, k: int, eps: float,
                          max_passes: int = 8,
                          step_budget: int | None = None,
                          edge_weights_pop=None, shard: str | None = None,
-                         incumbent=None, mig_budget: float | None = None
+                         incumbent=None, mig_budget: float | None = None,
+                         model_shard: str | None = None
                          ) -> Tuple[np.ndarray, np.ndarray]:
     """Batched ``fm_refine`` with per-member pass acceptance: a member
     stops improving exactly when the scalar loop would have broken.
@@ -797,10 +864,13 @@ def fm_refine_population(hga: HypergraphArrays, parts, k: int, eps: float,
                  if inc is not None else [None] * len(devs))
     mesh_fn = None
     if path == "mesh":
-        mesh, npop, pop_sh, hga_m, cap_m = _mesh_dispatch(hga, k, eps)
-        mesh_fn = _fm_pass_population_mesh(mesh, k, steps)
+        mesh, npop, pop_sh, hga_m, cap_m, model = _mesh_dispatch(
+            hga, k, eps, model_shard)
+        mesh_fn = _fm_pass_population_mesh(mesh, k, steps, model)
         if inc is not None:
             inc = jax.device_put(inc, popshard.replicated(mesh))
+    else:
+        popshard.enforce_structure_budget(hga, 1)
     for _ in range(max_passes):
         idx = np.nonzero(~done)[0]  # compact: finished members drop out
         if len(idx) == 0:
@@ -867,22 +937,27 @@ def refine(hga: HypergraphArrays, part: np.ndarray, k: int, eps: float,
 def refine_population(hga: HypergraphArrays, parts, k: int, eps: float,
                       fm_node_limit: int = 4096, edge_weights_pop=None,
                       shard: str | None = None, incumbent=None,
-                      mig_budget: float | None = None, **kw
+                      mig_budget: float | None = None,
+                      model_shard: str | None = None, **kw
                       ) -> Tuple[np.ndarray, np.ndarray]:
     """Two-tier refinement for the whole population in batched dispatches
     (the production path of ``impart_partition``, ``vcycle`` and the
     mutation cohort's population V-cycle).  Both tiers route through the
-    ``REPRO_POP_SHARD`` dispatcher (``shard`` overrides, DESIGN.md §11).
-    ``incumbent`` + ``mig_budget`` bound migration through BOTH tiers
-    (DESIGN.md §14).  Returns (parts [alpha, n_pad], cuts [alpha])."""
+    ``REPRO_POP_SHARD`` dispatcher (``shard`` overrides, DESIGN.md §11)
+    and the ``REPRO_MODEL_SHARD`` structure dispatcher (``model_shard``
+    overrides, DESIGN.md §15).  ``incumbent`` + ``mig_budget`` bound
+    migration through BOTH tiers (DESIGN.md §14).  Returns
+    (parts [alpha, n_pad], cuts [alpha])."""
     parts, cuts = lp_refine_population(hga, parts, k, eps,
                                        edge_weights_pop=edge_weights_pop,
                                        shard=shard, incumbent=incumbent,
-                                       mig_budget=mig_budget, **kw)
+                                       mig_budget=mig_budget,
+                                       model_shard=model_shard, **kw)
     if int(hga.n) <= fm_node_limit:
         parts, cuts = fm_refine_population(
             hga, parts, k, eps, edge_weights_pop=edge_weights_pop,
-            shard=shard, incumbent=incumbent, mig_budget=mig_budget)
+            shard=shard, incumbent=incumbent, mig_budget=mig_budget,
+            model_shard=model_shard)
     return parts, cuts
 
 

@@ -38,7 +38,9 @@ from . import metrics
 def vcycle(hg: Hypergraph, part: np.ndarray, k: int, eps: float,
            seed: int = 0, fm_node_limit: int = 4096,
            contraction_limit_factor: int = 64,
-           eval_weights: np.ndarray | None = None
+           eval_weights: np.ndarray | None = None,
+           shard: Optional[str] = None,
+           model_shard: Optional[str] = None
            ) -> Tuple[np.ndarray, float]:
     """One V-cycle: partition-aware coarsen, refine back up.
 
@@ -48,7 +50,8 @@ def vcycle(hg: Hypergraph, part: np.ndarray, k: int, eps: float,
     """
     part = np.asarray(part, np.int32)
     hier = build_hierarchy(hg, k, seed=seed, restrict_part=part,
-                           contraction_limit_factor=contraction_limit_factor)
+                           contraction_limit_factor=contraction_limit_factor,
+                           model_shard=model_shard)
     num = hier.num_levels
 
     # uncoarsen + refine (the batched engine with a population of one —
@@ -63,7 +66,9 @@ def vcycle(hg: Hypergraph, part: np.ndarray, k: int, eps: float,
             cur = hier.project_pop(cur, li + 1)
         hga = hier.level_arrays(li)
         cur, _ = refine_mod.refine_population(hga, cur, k, eps,
-                                              fm_node_limit=fm_node_limit)
+                                              fm_node_limit=fm_node_limit,
+                                              shard=shard,
+                                              model_shard=model_shard)
 
     out = np.asarray(cur[0])[: hg.n]
     # elitism on the true objective
@@ -88,7 +93,8 @@ def vcycle_instances(hgs: Sequence[Hypergraph], parts: Sequence,
                      fm_node_limit: int = 4096,
                      contraction_limit_factor: int = 64,
                      grid: Optional[Sequence[int]] = None,
-                     shard: Optional[str] = None
+                     shard: Optional[str] = None,
+                     model_shard: Optional[str] = None
                      ) -> List[Tuple[np.ndarray, float]]:
     """One V-cycle for a batch of INDEPENDENT instances (DESIGN.md §12):
     each request builds its own partition-aware hierarchy (host work),
@@ -110,7 +116,8 @@ def vcycle_instances(hgs: Sequence[Hypergraph], parts: Sequence,
         part = np.asarray(part, np.int32)
         hier = build_hierarchy(
             hg, k, seed=seed, restrict_part=part,
-            contraction_limit_factor=contraction_limit_factor)
+            contraction_limit_factor=contraction_limit_factor,
+            model_shard=model_shard)
         hiers.append(hier)
         curs.append(jnp.asarray(hier.level_part(hier.num_levels - 1),
                                 jnp.int32)[None, :])
@@ -127,7 +134,8 @@ def vcycle_instances(hgs: Sequence[Hypergraph], parts: Sequence,
                             epss[i]))
             step_idx.append(i)
         outs = instances_mod.refine_grouped(
-            entries, grid=grid, fm_node_limit=fm_node_limit, shard=shard)
+            entries, grid=grid, fm_node_limit=fm_node_limit, shard=shard,
+            model_shard=model_shard)
         for (rp, _), i in zip(outs, step_idx):
             curs[i] = jnp.asarray(rp)
 
@@ -151,7 +159,8 @@ def vcycle_population(hg: Hypergraph, parts, ew_pop, k: int, eps: float,
                       seed: int = 0, fm_node_limit: int = 4096,
                       contraction_limit_factor: int = 64,
                       path: Optional[str] = None,
-                      shard: Optional[str] = None
+                      shard: Optional[str] = None,
+                      model_shard: Optional[str] = None
                       ) -> Tuple[np.ndarray, np.ndarray]:
     """One V-cycle for the whole mutation cohort (DESIGN.md §10).
 
@@ -187,7 +196,8 @@ def vcycle_population(hg: Hypergraph, parts, ew_pop, k: int, eps: float,
     alpha = parts.shape[0]
     hier = population_coarsen(
         hg, parts, ew_pop, k, seed=seed, batch=batch,
-        contraction_limit_factor=contraction_limit_factor)
+        contraction_limit_factor=contraction_limit_factor,
+        model_shard=model_shard)
     num = hier.num_levels
 
     cur = hier.level_parts(num - 1)
@@ -199,14 +209,16 @@ def vcycle_population(hg: Hypergraph, parts, ew_pop, k: int, eps: float,
         if batch:
             cur, _ = refine_mod.refine_population(
                 hga, cur, k, eps, fm_node_limit=fm_node_limit,
-                edge_weights_pop=ew_li, shard=shard)
+                edge_weights_pop=ew_li, shard=shard,
+                model_shard=model_shard)
         else:  # per-member reference: populations of one, same dispatches
             rows = []
             for a in range(alpha):
                 row, _ = refine_mod.refine_population(
                     hga, jnp.asarray(cur)[a][None, :], k, eps,
                     fm_node_limit=fm_node_limit,
-                    edge_weights_pop=ew_li[a][None, :], shard=shard)
+                    edge_weights_pop=ew_li[a][None, :], shard=shard,
+                    model_shard=model_shard)
                 rows.append(np.asarray(row)[0])
             cur = jnp.asarray(np.stack(rows))
 

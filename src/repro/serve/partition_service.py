@@ -303,6 +303,7 @@ class PartitionService:
                  fm_node_limit: int = 4096,
                  contraction_limit_factor: int = 64,
                  shard: Optional[str] = None,
+                 model_shard: Optional[str] = None,
                  deadline_s: Optional[float] = None,
                  max_queue: Optional[int] = None,
                  ckpt_every: Optional[int] = None,
@@ -324,6 +325,7 @@ class PartitionService:
         self.fm_node_limit = fm_node_limit
         self.contraction_limit_factor = contraction_limit_factor
         self.shard = shard
+        self.model_shard = model_shard
         self.default_deadline_s = (deadline_s if deadline_s is not None
                                    else serve_deadline_s())
         self.max_queue = (max_queue if max_queue is not None
@@ -355,7 +357,8 @@ class PartitionService:
             lp_iters=self.lp_iters, fm_node_limit=self.fm_node_limit,
             contraction_limit_factor=self.contraction_limit_factor,
             recombination_enabled=False, mutation_enabled=False,
-            final_vcycles=0, pop_shard=self.shard)
+            final_vcycles=0, pop_shard=self.shard,
+            model_shard=self.model_shard)
 
     def _icfg_for(self, req: PartitionRequest, seed_bump: int = 0
                   ) -> incremental_mod.IncrementalConfig:
@@ -365,7 +368,7 @@ class PartitionService:
             seed=req.seed + seed_bump, lp_iters=self.lp_iters,
             fm_node_limit=self.fm_node_limit,
             contraction_limit_factor=self.contraction_limit_factor,
-            pop_shard=self.shard)
+            pop_shard=self.shard, model_shard=self.model_shard)
 
     def solve_solo(self, req: PartitionRequest
                    ) -> Tuple[np.ndarray, float]:
@@ -452,7 +455,8 @@ class PartitionService:
             inc0 = np.asarray(req.incumbent, np.int32)
             hier = build_hierarchy(
                 req.hg, icfg.k, seed=icfg.seed, restrict_part=inc0,
-                contraction_limit_factor=icfg.contraction_limit_factor)
+                contraction_limit_factor=icfg.contraction_limit_factor,
+                model_shard=icfg.model_shard)
             budget_w = (np.inf if icfg.migration_frac is None else
                         float(icfg.migration_frac)
                         * float(np.sum(req.hg.vertex_weights)))
@@ -464,7 +468,8 @@ class PartitionService:
         else:
             hier = build_hierarchy(
                 req.hg, cfg.k, seed=cfg.seed,
-                contraction_limit_factor=cfg.contraction_limit_factor)
+                contraction_limit_factor=cfg.contraction_limit_factor,
+                model_shard=cfg.model_shard)
             num = hier.num_levels
             parts, _ = initial_partition_population(
                 hier.level_host(num - 1), cfg.k, cfg.eps,
@@ -532,7 +537,8 @@ class PartitionService:
                     s.request.hg, s.cfg.k, seed=m["seed"],
                     restrict_part=inc0,
                     contraction_limit_factor=s.cfg
-                    .contraction_limit_factor)
+                    .contraction_limit_factor,
+                    model_shard=s.cfg.model_shard)
                 budget_w = (np.inf if s.request.migration_frac is None
                             else float(s.request.migration_frac)
                             * float(np.sum(s.request.hg.vertex_weights)))
@@ -542,7 +548,8 @@ class PartitionService:
                 s.hier = build_hierarchy(
                     s.request.hg, s.cfg.k, seed=m["seed"],
                     contraction_limit_factor=s.cfg
-                    .contraction_limit_factor)
+                    .contraction_limit_factor,
+                    model_shard=s.cfg.model_shard)
             s.parts = np.asarray(items[key], np.int32)
             s.li = int(m["li"])
             s.need_project = bool(m["need_project"])
@@ -682,7 +689,7 @@ class PartitionService:
         hga0 = s.hier.level_arrays(0)
         parts, cuts = refine_mod.lp_refine_population(
             hga0, s.parts, s.cfg.k, s.cfg.eps, max_iters=4,
-            shard=self.shard,
+            shard=self.shard, model_shard=self.model_shard,
             incumbent=None if s.incs is None else s.incs[0],
             mig_budget=None if s.buds is None else s.buds[0])
         self.events.append({"tick": self.tick, "kind": "degraded",
@@ -769,7 +776,8 @@ class PartitionService:
                         f"injected mid-tick crash at tick {self.tick}")
             outs = instances_mod.refine_grouped(
                 entries, grid=self.grid, fm_node_limit=self.fm_node_limit,
-                max_iters=self.lp_iters, shard=self.shard)
+                max_iters=self.lp_iters, shard=self.shard,
+                model_shard=self.model_shard)
         except faults_mod.InjectedCrash as e:
             # slot state is consistent (projection is deterministic and
             # already recorded); the next tick simply retries the dispatch

@@ -1,0 +1,157 @@
+"""Unified cross-path parity harness (DESIGN.md §15).
+
+Every execution-path axis in the stack promises the same contract:
+bit-identical per-member partitions AND cuts whichever route carries
+the work.  The axes:
+
+* ``coarsen``     — ``REPRO_COARSEN_PATH`` (host / device);
+* ``mutate``      — ``REPRO_MUTATE_PATH`` (batch / loop);
+* ``pop_shard``   — ``REPRO_POP_SHARD`` (off / chunk / mesh), passed to
+  the engines as the ``shard=`` override;
+* ``model_shard`` — ``REPRO_MODEL_SHARD`` (off / mesh), passed as the
+  ``model_shard=`` override.
+
+Before this harness every test file re-implemented the scaffolding
+(force one path, run the workload, compare partitions and cuts against
+the all-off baseline).  This module consolidates it:
+
+* :class:`PathCombo` — one point on the path grid; env-var axes are
+  pinned around the run, shard axes are read by the workload from the
+  combo itself;
+* :func:`grid` — the cartesian product of the declared axes;
+* :func:`params` — ``pytest.param`` list with readable ids and
+  per-combo skip/waiver markers;
+* :func:`run` — execute a workload under a combo;
+* :func:`assert_parity` / :func:`check_grid` — the bit-identity bar.
+
+A *workload* is any callable ``workload(combo) -> (parts, cuts)``
+(anything ``np.asarray`` accepts).  The canonical shape::
+
+    COMBOS = parity.grid(pop_shard=(None, "chunk", "mesh"),
+                         model_shard=(None, "mesh"))
+
+    @pytest.fixture(scope="module")
+    def baseline():
+        return parity.run(workload, parity.BASELINE)
+
+    @pytest.mark.parametrize("combo", parity.params(COMBOS))
+    def test_paths_bit_equal(baseline, combo):
+        parity.assert_parity(parity.run(workload, combo), baseline,
+                             label=combo.id)
+
+The in-process grids force each path explicitly, so they are meaningful
+at ANY device count: on the single-device tier-1 lane the mesh paths run
+through a (1, 1) mesh (the shard_map machinery itself is exercised); on
+the multidevice CI lanes (``--xla_force_host_platform_device_count=8``,
+optionally ``REPRO_POP_MESH_MODEL=2``) the same grids cover real
+cross-device sharding of both the population and the structure.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import itertools
+import os
+from typing import Callable, Iterable, Optional, Sequence, Tuple
+
+import numpy as np
+import pytest
+
+# axis name -> env var for the axes routed through the environment;
+# pop_shard/model_shard are explicit kwargs on every engine entry point,
+# so the workload reads those off the combo instead
+AXES = ("coarsen", "mutate", "pop_shard", "model_shard")
+_ENV_AXES = {"coarsen": "REPRO_COARSEN_PATH",
+             "mutate": "REPRO_MUTATE_PATH"}
+
+
+@dataclasses.dataclass(frozen=True)
+class PathCombo:
+    """One point on the path grid.  ``None`` leaves an axis at its
+    engine default (which every grid uses as the baseline meaning)."""
+
+    coarsen: Optional[str] = None
+    mutate: Optional[str] = None
+    pop_shard: Optional[str] = None
+    model_shard: Optional[str] = None
+
+    @property
+    def id(self) -> str:
+        bits = [f"{a}={getattr(self, a)}" for a in AXES
+                if getattr(self, a) is not None]
+        return "-".join(bits) or "default"
+
+    @contextlib.contextmanager
+    def applied(self):
+        """Pin the env-var axes for the duration of the run."""
+        saved = {}
+        try:
+            for axis, var in _ENV_AXES.items():
+                val = getattr(self, axis)
+                if val is not None:
+                    saved[var] = os.environ.get(var)
+                    os.environ[var] = val
+            yield self
+        finally:
+            for var, old in saved.items():
+                if old is None:
+                    os.environ.pop(var, None)
+                else:
+                    os.environ[var] = old
+
+
+BASELINE = PathCombo()
+
+Workload = Callable[[PathCombo], Tuple]
+Waiver = Tuple[Callable[[PathCombo], bool], str]
+
+
+def grid(coarsen: Sequence[Optional[str]] = (None,),
+         mutate: Sequence[Optional[str]] = (None,),
+         pop_shard: Sequence[Optional[str]] = (None,),
+         model_shard: Sequence[Optional[str]] = (None,)):
+    """Cartesian grid over the declared axes (undeclared axes stay at
+    the engine default in every combo)."""
+    return [PathCombo(*vals) for vals in itertools.product(
+        coarsen, mutate, pop_shard, model_shard)]
+
+
+def params(combos: Iterable[PathCombo],
+           waivers: Iterable[Waiver] = ()):
+    """``pytest.param`` list with combo ids; a waiver ``(pred, reason)``
+    turns every matching combo into a skip with that reason."""
+    out = []
+    for combo in combos:
+        marks = [pytest.mark.skip(reason=f"waived: {reason}")
+                 for pred, reason in waivers if pred(combo)]
+        out.append(pytest.param(combo, id=combo.id, marks=marks))
+    return out
+
+
+def run(workload: Workload, combo: PathCombo):
+    """Run ``workload`` under ``combo`` and normalize the result."""
+    with combo.applied():
+        parts, cuts = workload(combo)
+    return np.asarray(parts), np.asarray(cuts)
+
+
+def assert_parity(got, want, label: str = ""):
+    """The bar: partitions AND cuts bit-equal (no tolerance — integer
+    exactness is the §15 design invariant, not an approximation)."""
+    gp, gc = got
+    wp, wc = want
+    np.testing.assert_array_equal(
+        gp, wp, err_msg=f"[{label}] partitions diverged from baseline")
+    np.testing.assert_array_equal(
+        gc, wc, err_msg=f"[{label}] cuts diverged from baseline")
+
+
+def check_grid(workload: Workload, combos: Iterable[PathCombo],
+               baseline: PathCombo = BASELINE):
+    """One-call form: run the baseline once, then every combo against
+    it.  Prefer :func:`params` + a module fixture in test files (each
+    combo reports separately); this form suits subprocess lanes."""
+    want = run(workload, baseline)
+    for combo in combos:
+        assert_parity(run(workload, combo), want, label=combo.id)
+    return want

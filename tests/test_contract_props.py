@@ -1,0 +1,170 @@
+"""Property tests for the contraction invariants (DESIGN.md §15).
+
+Hypothesis drives randomized (hypergraph, clustering) pairs through
+BOTH contraction engines — the replicated ``contract_arrays`` and the
+model-sharded shard_map body (run over the lane's ("pop", "model")
+mesh; a model axis of 1 executes the same shard-local code with S=1,
+and the multidevice lanes give it a real axis) — under the SAME
+strategies:
+
+* pin-count conservation — the live pin count equals the sum of the
+  surviving edges' sizes, and each size is that edge's number of
+  DISTINCT coarse endpoints;
+* single-pin drop — no surviving edge has fewer than two pins;
+* parallel-edge weight merging — the coarse (pin-set -> weight)
+  multiset matches the host ``contract`` reference exactly (weights of
+  merged parallels summed onto one survivor);
+* cross-engine bit-identity — every leaf of the sharded result equals
+  the replicated one;
+* projected cuts exact across levels — a partition-aware hierarchy
+  (``restrict_part``) preserves the projected cut at every level, with
+  the model-sharded hierarchy bit-equal to the replicated one.
+
+Imports are guarded through ``tests/hypothesis_compat.py``: without
+hypothesis the ``@given`` tests skip cleanly and the plain unit test in
+this module keeps running.
+"""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from tests.hypothesis_compat import given, settings, st
+
+from repro.core import dcoarsen, metrics, popshard, refine
+from repro.core.dcoarsen import build_hierarchy
+from repro.core.hypergraph import Hypergraph, contract, contract_arrays
+
+
+def _rand_hg(rng, n, m, max_size=6):
+    edges = [rng.choice(n, size=int(rng.integers(2, max_size + 1)),
+                        replace=False) for _ in range(m)]
+    ew = rng.integers(1, 5, m).astype(np.float32)
+    hg = Hypergraph.from_edge_lists(edges, n=n, edge_weights=ew)
+    hg.vertex_weights[:] = rng.integers(1, 4, n).astype(np.float32)
+    return hg
+
+
+def _rand_cid(rng, hga, n, n_new):
+    """Dense random clustering with ghost slots on the coarse ghost."""
+    cid = np.full(hga.n_pad, hga.n_pad - 1, np.int32)
+    cid[:n] = rng.integers(0, n_new, n)
+    # make it surjective so every coarse id is live
+    cid[rng.permutation(n)[:n_new]] = np.arange(n_new)
+    return cid
+
+
+def _engines():
+    mesh = popshard.pop_mesh()
+    return {"replicated": contract_arrays,
+            "sharded": dcoarsen._contract_sharded_fn(mesh, False)}
+
+
+def _run_both(hg, rng, n_new):
+    hga = hg.arrays()
+    cid = _rand_cid(rng, hga, hg.n, n_new)
+    outs = {}
+    for name, fn in _engines().items():
+        coarse, p_new = fn(hga, jnp.asarray(cid), jnp.int32(n_new))
+        outs[name] = (coarse, int(p_new))
+    return hga, cid, outs
+
+
+def _live(coarse, m_pad):
+    pe = np.asarray(coarse.pin_edge)
+    pv = np.asarray(coarse.pin_vertex)
+    keep = pe != m_pad - 1
+    return pv[keep], pe[keep]
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 10_000), frac=st.sampled_from([3, 5, 9]))
+def test_contraction_invariants_both_engines(seed, frac):
+    rng = np.random.default_rng(seed)
+    hg = _rand_hg(rng, n=120, m=180)
+    n_new = max(hg.n // frac, 2)
+    hga, cid, outs = _run_both(hg, rng, n_new)
+
+    # the host reference fixes the expected merge/drop/renumber outcome
+    want, _ = contract(hg, cid[: hg.n], n_new)
+    want_canon = sorted(
+        (tuple(sorted(want.pins[want.edge_offsets[e]:
+                                want.edge_offsets[e + 1]].tolist())),
+         float(want.edge_weights[e])) for e in range(want.m))
+
+    for name, (coarse, p_new) in outs.items():
+        m_new = int(np.asarray(coarse.m))
+        pv, pe = _live(coarse, hga.m_pad)
+        sizes = np.asarray(coarse.edge_sizes)[:m_new]
+        # pin-count conservation: live pins == sum of surviving sizes,
+        # each size the edge's count of DISTINCT coarse endpoints
+        assert p_new == len(pv) == int(sizes.sum()), name
+        by_edge = {}
+        for v, e in zip(pv, pe):
+            by_edge.setdefault(int(e), []).append(int(v))
+        assert set(by_edge) == set(range(m_new)), name
+        for e, pins in by_edge.items():
+            assert len(pins) == len(set(pins)) == sizes[e], (name, e)
+            assert len(pins) >= 2, (name, e)      # single-pin drop
+        got_canon = sorted(
+            (tuple(sorted(pins)),
+             float(np.asarray(coarse.edge_weights)[e]))
+            for e, pins in by_edge.items())
+        assert got_canon == want_canon, name      # parallel merge exact
+        # coarse vertex weights conserve total mass
+        assert float(np.asarray(coarse.vertex_weights).sum()) \
+            == pytest.approx(float(hg.vertex_weights.sum()))
+
+    # cross-engine bit-identity, every leaf
+    rep, srd = outs["replicated"][0], outs["sharded"][0]
+    for leaf in ("pin_vertex", "pin_edge", "vertex_weights",
+                 "edge_weights", "edge_sizes", "n", "m"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(rep, leaf)), np.asarray(getattr(srd, leaf)),
+            err_msg=f"sharded {leaf} diverged")
+    assert outs["replicated"][1] == outs["sharded"][1]
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 10_000), k=st.sampled_from([2, 4, 8]))
+def test_projected_cuts_exact_across_levels(seed, k):
+    """restrict_part hierarchies: same-block-only contraction means the
+    projected partition cuts the SAME edges at every level — exactly,
+    not approximately — sharded and unsharded alike."""
+    rng = np.random.default_rng(seed)
+    hg = _rand_hg(rng, n=160, m=240)
+    part = rng.integers(0, k, hg.n).astype(np.int32)
+    hiers = {ms: build_hierarchy(hg, k, seed=seed % 97, restrict_part=part,
+                                 path="device", model_shard=ms)
+             for ms in ("off", "mesh")}
+    base = hiers["off"]
+    cut0 = None
+    for li in range(base.num_levels):
+        hga = base.level_arrays(li)
+        cut = float(metrics.cutsize_jit(
+            hga, jnp.asarray(base.level_part(li)), k))
+        if cut0 is None:
+            cut0 = cut
+        assert cut == cut0, f"level {li} cut drifted"
+    assert hiers["mesh"].num_levels == base.num_levels
+    for li in range(base.num_levels):
+        a, b = base.level_arrays(li), hiers["mesh"].level_arrays(li)
+        np.testing.assert_array_equal(np.asarray(a.pin_vertex),
+                                      np.asarray(b.pin_vertex))
+        np.testing.assert_array_equal(
+            np.asarray(base.level_part(li)),
+            np.asarray(hiers["mesh"].level_part(li)))
+
+
+def test_contraction_invariants_smoke():
+    """One deterministic example so this module gates even without
+    hypothesis installed (the @given tests then skip)."""
+    rng = np.random.default_rng(11)
+    hg = _rand_hg(rng, n=90, m=140)
+    hga, cid, outs = _run_both(hg, rng, n_new=20)
+    rep, srd = outs["replicated"], outs["sharded"]
+    assert rep[1] == srd[1]
+    np.testing.assert_array_equal(np.asarray(rep[0].pin_vertex),
+                                  np.asarray(srd[0].pin_vertex))
+    sizes = np.asarray(rep[0].edge_sizes)[: int(np.asarray(rep[0].m))]
+    assert (sizes >= 2).all()
+    assert rep[1] == int(sizes.sum())

@@ -21,6 +21,7 @@ from repro.data.hypergraphs import (_modular_netlist, drift_stream,
 from repro.runtime.elastic import repartition_after_loss
 from repro.serve.partition_service import (PartitionRequest,
                                            PartitionService)
+from tests import parity
 
 K, EPS = 8, 0.08
 
@@ -164,15 +165,20 @@ def test_drift_stream_deterministic():
 
 
 # --------------------------------------------------------------------------
-# service parity across every REPRO_POP_SHARD path
+# service parity across every (REPRO_POP_SHARD, REPRO_MODEL_SHARD) combo
 # --------------------------------------------------------------------------
-@pytest.mark.parametrize("path", popshard.POP_SHARD_PATHS)
-def test_service_incremental_parity(base_case, path):
+SERVICE_GRID = parity.grid(pop_shard=popshard.POP_SHARD_PATHS,
+                           model_shard=(None, "mesh"))
+
+
+@pytest.mark.parametrize("combo", parity.params(SERVICE_GRID))
+def test_service_incremental_parity(base_case, combo):
     hg, inc = base_case
     drifted = drift_stream(hg, 1, magnitude=0.3, tag="svc")[0]
     other = _modular_netlist(420, 560, seed=21, n_modules=6, p_local=0.8,
                              fanout_tail=1.5)
-    svc = PartitionService(slots=4, shard=path)
+    svc = PartitionService(slots=4, shard=combo.pop_shard or "off",
+                           model_shard=combo.model_shard or "off")
     incr_req = PartitionRequest("incr", drifted, K, eps=EPS,
                                 incumbent=inc, migration_frac=0.08)
     cold_req = PartitionRequest("cold", other, K, eps=EPS)
@@ -182,13 +188,16 @@ def test_service_incremental_parity(base_case, path):
     p_solo, c_solo = svc.solve_solo(
         PartitionRequest("incr", drifted, K, eps=EPS, incumbent=inc,
                          migration_frac=0.08))
-    np.testing.assert_array_equal(res["incr"].part, p_solo,
-                                  err_msg=f"shard={path}")
-    assert res["incr"].cut == c_solo
+    parity.assert_parity(
+        (res["incr"].part, np.float64(res["incr"].cut)),
+        (np.asarray(p_solo), np.float64(c_solo)),
+        label=f"{combo.id} incr vs solo")
     p_cold, c_cold = svc.solve_solo(
         PartitionRequest("cold", other, K, eps=EPS))
-    np.testing.assert_array_equal(res["cold"].part, p_cold)
-    assert res["cold"].cut == c_cold
+    parity.assert_parity(
+        (res["cold"].part, np.float64(res["cold"].cut)),
+        (np.asarray(p_cold), np.float64(c_cold)),
+        label=f"{combo.id} cold vs solo")
     vw = np.asarray(hg.vertex_weights, np.float64)
     moved = float(vw[res["incr"].part != inc].sum())
     assert moved <= 0.08 * float(vw.sum()) + 1e-4

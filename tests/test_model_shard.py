@@ -1,0 +1,349 @@
+"""Model-axis structure sharding (DESIGN.md §15).
+
+Gates on the new ``REPRO_MODEL_SHARD`` path family:
+
+* routing — env/override resolution, config validation, the
+  ``model_axis_active`` eligibility rule;
+* the artificial device-memory budget (``REPRO_DEVICE_MEM_BUDGET``) —
+  per-device byte accounting and enforcement on replicated dispatches;
+* the mesh cache regression — ``pop_mesh`` is keyed per (device pool
+  token, model-axis size), so a mid-run ``REPRO_POP_MESH_MODEL`` change
+  or a device loss can never be served a stale mesh;
+* sharded-contraction parity — ``device_coarsen``/``population_coarsen``
+  with ``model_shard="mesh"`` build bit-identical hierarchies to the
+  replicated engine (every level: structure, partitions, member
+  weights);
+* the acceptance bars (slow, subprocess, 8 forced host devices with a
+  real model axis): the full parity grid through ``tests/parity.py``,
+  and the OOM regression — an n >= 1e6 instance whose structure exceeds
+  the per-device budget unsharded completes under
+  ``REPRO_MODEL_SHARD=mesh``.
+"""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+import types
+
+import numpy as np
+import pytest
+
+from repro.core import popshard, refine
+from repro.core.dcoarsen import build_hierarchy, device_coarsen, \
+    population_coarsen
+from repro.data.hypergraphs import _modular_netlist
+from tests import parity
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _subprocess_env(ndev=8, nmodel=2):
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={ndev}"
+    env["JAX_PLATFORMS"] = "cpu"
+    env["PYTHONPATH"] = os.pathsep.join([os.path.join(REPO, "src"), REPO])
+    env["REPRO_POP_MESH_MODEL"] = str(nmodel)
+    for var in ("REPRO_POP_SHARD", "REPRO_MODEL_SHARD",
+                "REPRO_DEVICE_MEM_BUDGET", "REPRO_COARSEN_PATH"):
+        env.pop(var, None)
+    return env
+
+
+# --------------------------------------------------------------------------
+# routing
+# --------------------------------------------------------------------------
+def test_resolve_model_rejects_unknown():
+    with pytest.raises(ValueError, match="unknown model shard"):
+        popshard.resolve_model("pod")
+    assert popshard.resolve_model("MESH ") == "mesh"
+    assert popshard.resolve_model("off") == "off"
+    assert popshard.resolve_model("auto") in popshard.MODEL_SHARD_PATHS
+    assert popshard.resolve_model(None) in popshard.MODEL_SHARD_PATHS
+
+
+def test_model_env_routing(monkeypatch):
+    for p in popshard.MODEL_SHARD_PATHS:
+        monkeypatch.setenv("REPRO_MODEL_SHARD", p)
+        assert popshard.model_shard_path() == p
+        assert popshard.resolve_model(None) == p
+    monkeypatch.setenv("REPRO_MODEL_SHARD", "bogus")  # invalid -> auto
+    assert popshard.model_shard_path() == "off"       # auto = off (§15)
+    monkeypatch.delenv("REPRO_MODEL_SHARD", raising=False)
+    assert popshard.model_shard_path() == "off"
+
+
+def test_model_axis_active_eligibility():
+    # a stub mesh isolates the rule from the lane's device count
+    assert popshard.model_axis_active(
+        1024, types.SimpleNamespace(shape={"model": 2}))
+    assert not popshard.model_axis_active(        # axis of 1 is inert
+        1024, types.SimpleNamespace(shape={"model": 1}))
+    assert not popshard.model_axis_active(        # indivisible p_pad
+        1023, types.SimpleNamespace(shape={"model": 2}))
+
+
+def test_configs_validate_model_shard():
+    from repro.core.impart import ImpartConfig
+    with pytest.raises(ValueError, match="unknown model_shard"):
+        ImpartConfig(k=4, model_shard="pod")
+    assert ImpartConfig(k=4, model_shard="MESH").model_shard == "mesh"
+    assert ImpartConfig(k=4).model_shard is None
+
+
+# --------------------------------------------------------------------------
+# artificial device-memory budget
+# --------------------------------------------------------------------------
+def test_budget_knob_parsing(monkeypatch):
+    monkeypatch.delenv("REPRO_DEVICE_MEM_BUDGET", raising=False)
+    assert popshard.device_mem_budget() is None
+    monkeypatch.setenv("REPRO_DEVICE_MEM_BUDGET", "1048576")
+    assert popshard.device_mem_budget() == 1048576
+    monkeypatch.setenv("REPRO_DEVICE_MEM_BUDGET", "lots")
+    assert popshard.device_mem_budget() is None
+    monkeypatch.setenv("REPRO_DEVICE_MEM_BUDGET", "-3")
+    assert popshard.device_mem_budget() is None
+
+
+def test_structure_bytes_accounting(tiny_hg):
+    hga = tiny_hg.arrays()
+    p_pad = int(hga.pin_vertex.shape[-1])
+    n_pad = int(hga.vertex_weights.shape[-1])
+    m_pad = int(hga.edge_weights.shape[-1])
+    full = popshard.structure_bytes_per_device(hga, 1)
+    assert full == 2 * 4 * p_pad + 4 * n_pad + 2 * 4 * m_pad
+    half = popshard.structure_bytes_per_device(hga, 2)
+    # only the pin tables shard; the replicated leaves don't shrink
+    assert full - half == 4 * p_pad
+
+
+def test_budget_enforced_on_replicated_dispatch(tiny_hg, monkeypatch):
+    hga = tiny_hg.arrays()
+    monkeypatch.setenv("REPRO_DEVICE_MEM_BUDGET", "64")
+    with pytest.raises(popshard.DeviceBudgetExceeded, match="bytes/device"):
+        popshard.enforce_structure_budget(hga, 1)
+    rng = np.random.default_rng(0)
+    parts = [refine.rebalance(tiny_hg.vertex_weights,
+                              rng.integers(0, 2, tiny_hg.n).astype(np.int32),
+                              2, 0.1) for _ in range(2)]
+    for shard in ("off", "mesh"):
+        with pytest.raises(popshard.DeviceBudgetExceeded):
+            refine.lp_refine_population(hga, [p.copy() for p in parts],
+                                        2, 0.1, max_iters=1, shard=shard)
+    # a budget above the instance is a no-op
+    monkeypatch.setenv("REPRO_DEVICE_MEM_BUDGET", str(1 << 30))
+    popshard.enforce_structure_budget(hga, 1)
+
+
+# --------------------------------------------------------------------------
+# mesh cache: keyed per (device pool token, model-axis size)
+# --------------------------------------------------------------------------
+def test_pop_mesh_cache_key_carries_model_size(monkeypatch):
+    monkeypatch.delenv("REPRO_POP_MESH_MODEL", raising=False)
+    m1 = popshard.pop_mesh()
+    assert (popshard._pool_token(), 1) in popshard._MESH_CACHE
+    assert popshard.pop_mesh() is m1          # cached
+    # an indivisible model-axis request falls back to 1 and must reuse
+    # the SAME cache entry, not mint a mesh per bogus size
+    ndev = len(popshard.local_devices())
+    monkeypatch.setenv("REPRO_POP_MESH_MODEL", str(2 * ndev + 1))
+    assert popshard.pop_mesh() is m1
+
+
+@pytest.mark.slow
+def test_pop_mesh_rebuilds_on_model_axis_and_pool_change():
+    """The regression: a cache keyed on the bare device count serves a
+    stale (8, 1) mesh after REPRO_POP_MESH_MODEL=2 or a device loss."""
+    code = """
+    import json, os
+    import jax
+    from repro.core import popshard
+    assert len(jax.local_devices()) == 8
+    os.environ.pop("REPRO_POP_MESH_MODEL", None)
+    m0 = popshard.pop_mesh()
+    os.environ["REPRO_POP_MESH_MODEL"] = "2"
+    m1 = popshard.pop_mesh()                 # mid-run axis change
+    popshard.set_device_limit(4)             # mid-run pool change
+    m2 = popshard.pop_mesh()
+    print(json.dumps({
+        "m0": dict(m0.shape), "m1": dict(m1.shape), "m2": dict(m2.shape),
+        "distinct": len({id(m0), id(m1), id(m2)})}))
+    """
+    env = _subprocess_env()
+    env.pop("REPRO_POP_MESH_MODEL", None)
+    r = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                       capture_output=True, text=True, timeout=300,
+                       env=env)
+    assert r.returncode == 0, r.stderr[-2000:]
+    out = json.loads(r.stdout.strip().splitlines()[-1])
+    assert out["m0"] == {"pop": 8, "model": 1}
+    assert out["m1"] == {"pop": 4, "model": 2}
+    assert out["m2"] == {"pop": 2, "model": 2}
+    assert out["distinct"] == 3
+
+
+# --------------------------------------------------------------------------
+# sharded contraction parity (real sharding on the multidevice lanes; a
+# (1, 1) mesh routes the rounds through the replicated engine, keeping
+# the gate meaningful everywhere)
+# --------------------------------------------------------------------------
+def _hier_leaves(hier):
+    out = []
+    for li in range(hier.num_levels):
+        hga = hier.level_arrays(li)
+        out.append(tuple(np.asarray(x) for x in (
+            hga.pin_vertex, hga.pin_edge, hga.vertex_weights,
+            hga.edge_weights, hga.edge_sizes, hga.n, hga.m)))
+    return out
+
+
+@pytest.mark.parametrize("restrict", [False, True])
+def test_device_coarsen_model_parity(small_hg, restrict):
+    part = None
+    if restrict:
+        rng = np.random.default_rng(2)
+        part = rng.integers(0, 4, small_hg.n).astype(np.int32)
+    base = build_hierarchy(small_hg, 8, seed=3, restrict_part=part,
+                           path="device", model_shard="off")
+    got = build_hierarchy(small_hg, 8, seed=3, restrict_part=part,
+                          path="device", model_shard="mesh")
+    assert got.num_levels == base.num_levels
+    for lb, lg in zip(_hier_leaves(base), _hier_leaves(got)):
+        for a, b in zip(lb, lg):
+            np.testing.assert_array_equal(a, b)
+
+
+def test_population_coarsen_model_parity(small_hg):
+    k, alpha = 4, 3
+    rng = np.random.default_rng(5)
+    parts = np.stack([rng.integers(0, k, small_hg.n).astype(np.int32)
+                      for _ in range(alpha)])
+    w_pop = np.stack([
+        small_hg.edge_weights * (1.0 + 0.1 * rng.integers(0, 3, small_hg.m))
+        for _ in range(alpha)]).astype(np.float32)
+    base = population_coarsen(small_hg, parts, w_pop, k, seed=7,
+                              contraction_limit_factor=8,
+                              model_shard="off")
+    got = population_coarsen(small_hg, parts, w_pop, k, seed=7,
+                             contraction_limit_factor=8,
+                             model_shard="mesh")
+    assert got.num_levels == base.num_levels
+    for lb, lg in zip(base.levels, got.levels):
+        np.testing.assert_array_equal(np.asarray(lb.hga.pin_vertex),
+                                      np.asarray(lg.hga.pin_vertex))
+        np.testing.assert_array_equal(np.asarray(lb.hga.pin_edge),
+                                      np.asarray(lg.hga.pin_edge))
+        np.testing.assert_array_equal(np.asarray(lb.parts),
+                                      np.asarray(lg.parts))
+        np.testing.assert_array_equal(np.asarray(lb.ew_pop),
+                                      np.asarray(lg.ew_pop))
+
+
+# --------------------------------------------------------------------------
+# acceptance bar: the full parity grid on 8 forced devices with a REAL
+# model axis (pop 4 x model 2), driven through tests/parity.py
+# --------------------------------------------------------------------------
+@pytest.mark.slow
+def test_model_mesh_parity_grid_8_devices():
+    code = """
+    import numpy as np, jax
+    assert len(jax.local_devices()) == 8
+    from repro.core import refine
+    from repro.core.popshard import pop_mesh
+    from repro.core.vcycle import vcycle_population
+    from repro.data.hypergraphs import _modular_netlist
+    from tests import parity
+    assert dict(pop_mesh().shape) == {"pop": 4, "model": 2}
+    hg = _modular_netlist(500, 700, seed=11, n_modules=8, p_local=0.8,
+                          fanout_tail=1.5)
+    hga = hg.arrays()
+    k, eps, alpha = 8, 0.08, 4
+    rng = np.random.default_rng(3)
+    parts = [refine.rebalance(hg.vertex_weights,
+                              rng.integers(0, k, hg.n).astype(np.int32),
+                              k, eps) for _ in range(alpha)]
+
+    def refine_workload(combo):
+        return refine.refine_population(
+            hga, [p.copy() for p in parts], k, eps, max_iters=4,
+            shard=combo.pop_shard or "off",
+            model_shard=combo.model_shard or "off")
+
+    parity.check_grid(refine_workload, parity.grid(
+        pop_shard=("off", "chunk", "mesh"), model_shard=(None, "mesh")))
+
+    # integer-valued member weights: the bit-identity bar rests on
+    # integer exactness (DESIGN.md §15) — fractional f32 weights can
+    # legitimately round differently across dispatch layouts
+    w_pop = np.stack([hg.edge_weights * rng.integers(1, 4, hg.m)
+                      for _ in range(3)]).astype(np.float32)
+    mp = np.stack([np.asarray(parts[0])] * 3)
+
+    def vcycle_workload(combo):
+        # combo.applied() pins REPRO_COARSEN_PATH / REPRO_MUTATE_PATH
+        return vcycle_population(hg, mp, w_pop, k, eps, seed=9,
+                                 shard=combo.pop_shard or "off",
+                                 model_shard=combo.model_shard or "off")
+
+    parity.check_grid(vcycle_workload, parity.grid(
+        coarsen=("device",), mutate=("batch", "loop"),
+        pop_shard=(None, "mesh"), model_shard=("mesh",)),
+        baseline=parity.PathCombo(coarsen="device"))
+    print("PARITY-GRID-OK")
+    """
+    r = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                       capture_output=True, text=True, timeout=580,
+                       env=_subprocess_env())
+    assert r.returncode == 0, r.stderr[-3000:]
+    assert "PARITY-GRID-OK" in r.stdout
+
+
+# --------------------------------------------------------------------------
+# OOM regression: the giant instance the tentpole exists for
+# --------------------------------------------------------------------------
+@pytest.mark.slow
+def test_giant_instance_oom_unsharded_completes_sharded():
+    if not hasattr(popshard, "device_mem_budget"):
+        pytest.skip("device-memory budget knob unavailable")
+    code = """
+    import json
+    import numpy as np, jax
+    from repro.core import metrics, popshard, refine
+    from repro.data.hypergraphs import giant_netlist
+    assert len(jax.local_devices()) == 8
+    hg = giant_netlist(1_000_000, 1_300_000, seed=5)
+    hga = hg.arrays()
+    k, eps = 8, 0.05
+    # block warm start: balanced by construction (unit weights), so no
+    # host-side rebalance pass is needed at this size
+    base = (np.arange(hg.n, dtype=np.int64) * k // hg.n).astype(np.int32)
+    parts = [base.copy(), np.roll(base, 1)]
+    assert popshard.structure_bytes_per_device(hga, 1) > \\
+        popshard.device_mem_budget() > \\
+        popshard.structure_bytes_per_device(hga, 2)
+    try:
+        refine.lp_refine_population(hga, [p.copy() for p in parts], k,
+                                    eps, max_iters=1, shard="mesh",
+                                    model_shard="off")
+        raise SystemExit("unsharded dispatch fit under the budget")
+    except popshard.DeviceBudgetExceeded:
+        pass
+    out, cuts = refine.lp_refine_population(
+        hga, [p.copy() for p in parts], k, eps, max_iters=1,
+        shard="mesh", model_shard="mesh")
+    out = np.asarray(out)
+    want = float(metrics.cutsize_jit(hga, refine.pad_part(
+        out[0, :hg.n], hga.n_pad), k))
+    assert float(cuts[0]) == want
+    print(json.dumps({"cut0": float(cuts[0]), "cut_seed": float(
+        metrics.cutsize_jit(hga, refine.pad_part(base, hga.n_pad), k))}))
+    """
+    env = _subprocess_env()
+    # between the 1-way (~54.5 MB) and 2-way (~37.7 MB) footprints
+    env["REPRO_DEVICE_MEM_BUDGET"] = str(45 * 1024 * 1024)
+    r = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                       capture_output=True, text=True, timeout=580,
+                       env=env)
+    assert r.returncode == 0, r.stderr[-3000:]
+    out = json.loads(r.stdout.strip().splitlines()[-1])
+    assert out["cut0"] <= out["cut_seed"]

@@ -37,6 +37,7 @@ from repro.core.vcycle import vcycle_population
 from repro.kernels import ops, ref
 from repro.kernels.rating import (rating_scatter_batch_pallas,
                                   rating_scatter_pallas)
+from tests import parity
 
 
 def _random_hg(seed, n=160, m=240, max_size=8):
@@ -260,17 +261,44 @@ def test_mutate_path_routing():
             os.environ.pop("REPRO_MUTATE_PATH", None)
 
 
-def test_vcycle_population_batch_equals_loop(small_hg):
-    """The acceptance bar: bit-identical per-member partitions AND cuts
-    between the batched cohort V-cycle and the per-member loop."""
+VCYCLE_GRID = parity.grid(mutate=("loop",), model_shard=(None, "mesh")) \
+    + parity.grid(mutate=("batch",), model_shard=("mesh",))
+
+
+@pytest.fixture(scope="module")
+def vcycle_pop_workload(small_hg):
     k, eps = 4, 0.08
     parts, w_pop = _cohort(small_hg, k, eps, alpha=3, seed=5)
-    pb, cb = vcycle_population(small_hg, parts, w_pop, k, eps, seed=9,
-                               path="batch")
-    pl, cl = vcycle_population(small_hg, parts, w_pop, k, eps, seed=9,
-                               path="loop")
-    np.testing.assert_array_equal(pb, pl)
-    np.testing.assert_array_equal(cb, cl)
+
+    def workload(combo):
+        return vcycle_population(
+            small_hg, parts, w_pop, k, eps, seed=9,
+            path=combo.mutate or "batch",
+            model_shard=combo.model_shard or "off")
+
+    return workload
+
+
+@pytest.fixture(scope="module")
+def vcycle_pop_baseline(vcycle_pop_workload):
+    return parity.run(vcycle_pop_workload, parity.BASELINE)
+
+
+@pytest.mark.parametrize("combo", parity.params(VCYCLE_GRID))
+def test_vcycle_population_paths_bit_equal(vcycle_pop_workload,
+                                           vcycle_pop_baseline, combo):
+    """The acceptance bar: bit-identical per-member partitions AND cuts
+    between the batched cohort V-cycle, the per-member loop, and the
+    model-sharded structure path."""
+    parity.assert_parity(parity.run(vcycle_pop_workload, combo),
+                         vcycle_pop_baseline, label=combo.id)
+
+
+def test_vcycle_population_batch_keeps_invariants(small_hg,
+                                                  vcycle_pop_baseline):
+    k, eps = 4, 0.08
+    parts, w_pop = _cohort(small_hg, k, eps, alpha=3, seed=5)
+    pb, cb = vcycle_pop_baseline
     # per-member elitism on each member's own reweighted objective
     hga = small_hg.arrays()
     warm = refine_mod.pad_parts(parts, hga.n_pad)
@@ -293,17 +321,17 @@ def test_mutate_population_paths_agree_and_keep_invariants(small_hg):
     # identical twins: all but the best copy must be flagged
     msets = similarity_sets(hga, list(parts), cuts, k, threshold=20.0)
     assert sum(1 for m in msets if m) == 2
-    results = {}
-    for path in MUTATE_PATHS:
-        os.environ["REPRO_MUTATE_PATH"] = path
-        try:
-            results[path] = mutate_population(
-                small_hg, parts, cuts, k, eps, threshold=20.0, seed=1)
-        finally:
-            os.environ.pop("REPRO_MUTATE_PATH", None)
-    (p_b, c_b), (p_l, c_l) = results["batch"], results["loop"]
-    np.testing.assert_array_equal(p_b, p_l)
-    np.testing.assert_array_equal(c_b, c_l)
+
+    def workload(combo):
+        # REPRO_MUTATE_PATH is pinned by combo.applied(); the structure
+        # axis rides through the explicit kwarg
+        return mutate_population(small_hg, parts, cuts, k, eps,
+                                 threshold=20.0, seed=1,
+                                 model_shard=combo.model_shard or "off")
+
+    grid = parity.grid(mutate=MUTATE_PATHS, model_shard=(None, "mesh"))
+    (p_b, c_b) = parity.check_grid(
+        workload, grid, baseline=parity.PathCombo(mutate="batch"))
     for p, c in zip(p_b, c_b):
         assert bool(metrics.is_balanced(
             hga, refine_mod.pad_part(p, hga.n_pad), k, eps))

@@ -20,6 +20,7 @@ import numpy as np
 import pytest
 
 from repro.core import metrics, popshard, refine
+from tests import parity
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 ALPHA = 5
@@ -77,21 +78,38 @@ def test_impart_config_validates_pop_shard():
 
 
 # --------------------------------------------------------------------------
-# parity (every path forced explicitly; device count = whatever the lane
-# exposes)
+# parity (every path forced explicitly through the tests/parity.py grid;
+# device count = whatever the lane exposes)
 # --------------------------------------------------------------------------
-def test_refine_population_parity_across_paths(small_hg):
+REFINE_GRID = parity.grid(pop_shard=popshard.POP_SHARD_PATHS,
+                          model_shard=(None, "mesh"))
+
+
+@pytest.fixture(scope="module")
+def refine_workload(small_hg):
     k, eps = 8, 0.08
     hga = small_hg.arrays()
     parts = _population(small_hg, k, eps, seed=3)
-    res = {p: refine.refine_population(
-        hga, [q.copy() for q in parts], k, eps, max_iters=6, shard=p)
-        for p in popshard.POP_SHARD_PATHS}
-    for p in ("mesh", "chunk"):
-        np.testing.assert_array_equal(res[p][0], res["off"][0],
-                                      err_msg=f"{p} partitions diverged")
-        np.testing.assert_array_equal(res[p][1], res["off"][1],
-                                      err_msg=f"{p} cuts diverged")
+
+    def workload(combo):
+        return refine.refine_population(
+            hga, [q.copy() for q in parts], k, eps, max_iters=6,
+            shard=combo.pop_shard or "off",
+            model_shard=combo.model_shard or "off")
+
+    return workload
+
+
+@pytest.fixture(scope="module")
+def refine_baseline(refine_workload):
+    return parity.run(refine_workload, parity.BASELINE)
+
+
+@pytest.mark.parametrize("combo", parity.params(REFINE_GRID))
+def test_refine_population_parity_across_paths(refine_workload,
+                                               refine_baseline, combo):
+    parity.assert_parity(parity.run(refine_workload, combo),
+                         refine_baseline, label=combo.id)
 
 
 def test_lp_tier_parity_with_override_weights(tiny_hg):

@@ -21,6 +21,7 @@ from repro.data.hypergraphs import _modular_netlist, request_stream
 from repro.serve.partition_service import (PartitionRequest,
                                            PartitionService, serve_buckets,
                                            serve_coalesce_s, serve_slots)
+from tests import parity
 
 ALPHA = 3
 
@@ -144,19 +145,28 @@ def parity_case():
     return entries, solos
 
 
-@pytest.mark.parametrize("path", popshard.POP_SHARD_PATHS)
-def test_refine_grouped_matches_solo(parity_case, path):
+GROUPED_GRID = parity.grid(pop_shard=popshard.POP_SHARD_PATHS,
+                           model_shard=(None, "mesh"))
+
+
+@pytest.mark.parametrize("combo", parity.params(GROUPED_GRID))
+def test_refine_grouped_matches_solo(parity_case, combo):
     entries, solos = parity_case
     # grid (1024,) forces every instance into one n bucket; the odd k mix
     # (3, 8, 5) still splits into k buckets 4 and 8, so both a stacked
     # group (k=8 with k=5 masked under it) and re-padding are exercised
-    outs = instances.refine_grouped(entries, grid=(1024,), max_iters=4,
-                                    shard=path)
-    for i, ((gp, gc), (sp, sc)) in enumerate(zip(outs, solos)):
-        np.testing.assert_array_equal(
-            gp, sp, err_msg=f"shard={path} instance {i} partitions")
-        np.testing.assert_array_equal(
-            gc, sc, err_msg=f"shard={path} instance {i} cuts")
+    def workload(c):
+        outs = instances.refine_grouped(
+            entries, grid=(1024,), max_iters=4,
+            shard=c.pop_shard or "off", model_shard=c.model_shard or "off")
+        # instances have ragged n: flatten to one comparable pair
+        return (np.concatenate([np.asarray(gp).ravel() for gp, _ in outs]),
+                np.concatenate([np.asarray(gc).ravel() for _, gc in outs]))
+
+    want = (np.concatenate([sp.ravel() for sp, _ in solos]),
+            np.concatenate([sc.ravel() for _, sc in solos]))
+    parity.assert_parity(parity.run(workload, combo), want,
+                         label=f"{combo.id} vs solo")
 
 
 # --------------------------------------------------------------------------
