@@ -1,0 +1,165 @@
+"""Operator-scheduler benchmark (``BENCH_sched.json``).
+
+Equal-wall-clock comparison of the bandit operator scheduler
+(``REPRO_SCHED=bandit``, DESIGN.md §16) against the fixed static
+ladder on small ISPD98-like / Titan23-like instances:
+
+1. run the static schedule, record its cut and wall-clock ``W``;
+2. run the bandit schedule on the same instance with
+   ``time_budget_s = W`` — same wall budget, adaptive operator menu;
+3. feed the logged :class:`SchedulerTrace` back through
+   ``ImpartConfig.sched_replay`` (after a JSON round-trip, the way a
+   trace rides a benchmark row) and assert the replay reproduces the
+   bandit's partition, cut and arm sequence bit-for-bit
+   (``replay_equal`` — check_bench's parity flag for this artifact).
+
+The summary is the paper-style norm-avg (geometric mean of
+``bandit_cut / static_cut``); the full run *asserts* it is `< 1` before
+writing, so a committed ``BENCH_sched.json`` is itself the evidence
+that the bandit beats the static ladder at equal wall-clock.
+``--smoke`` shrinks the instances for CI and additionally asserts the
+static path is byte-for-byte the default (``sched=None``) program; it
+does not assert the win (tiny instances are too noisy for that).
+``--json-dir DIR`` redirects the artifact.
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+import time
+import zlib
+
+import numpy as np
+
+from repro.core import ImpartConfig, impart_partition
+from repro.core.scheduler import SchedulerTrace
+from repro.data.hypergraphs import ispd_like, titan_like
+
+# (suite, design, scale, k): sizes chosen for the 2-core CI box — the
+# point is the schedule comparison, not instance scale
+FULL_CASES = [
+    ("ispd98", "ibm01_like", 0.05, 8),
+    ("ispd98", "ibm02_like", 0.05, 8),
+    ("titan23", "sparcT1_core_like", 0.02, 8),
+    ("titan23", "cholesky_mc_like", 0.02, 8),
+]
+SMOKE_CASES = [
+    ("ispd98", "ibm01_like", 0.02, 4),
+]
+
+
+def _load(suite: str, design: str, scale: float):
+    maker = ispd_like if suite == "ispd98" else titan_like
+    return maker(design, scale=scale)
+
+
+def _run(hg, cfg):
+    t0 = time.perf_counter()
+    res = impart_partition(hg, cfg)
+    return res, time.perf_counter() - t0
+
+
+def bench_sched(smoke: bool = False,
+                json_path: str | None = "BENCH_sched.json"):
+    """Emit BENCH_sched.json (schema: docs/reference.md)."""
+    cases = SMOKE_CASES if smoke else FULL_CASES
+    base_seed = zlib.crc32(b"sched-bench") % 1000
+    alpha, beta = (4, 3) if smoke else (5, 5)
+    rows = []
+    print("suite,design,k,method,cut,wall_s,decisions")
+    for suite, design, scale, k in cases:
+        hg = _load(suite, design, scale)
+        seed = (base_seed + zlib.crc32(design.encode())) % 100000
+        common = dict(k=k, eps=0.08, alpha=alpha, beta=beta, seed=seed,
+                      final_vcycles=0)
+        static, static_wall = _run(hg, ImpartConfig(sched="static",
+                                                    **common))
+        if smoke:
+            # the static path must be byte-for-byte the default program
+            default, _ = _run(hg, ImpartConfig(**common))
+            assert np.array_equal(default.part, static.part), \
+                "sched='static' diverged from the default schedule"
+            assert default.cut == static.cut
+        bandit, bandit_wall = _run(hg, ImpartConfig(
+            sched="bandit", time_budget_s=static_wall, **common))
+        trace = bandit.sched_trace
+        assert trace is not None and trace.decisions, \
+            "bandit run produced no decision trace"
+        # replay from the JSON form — the shape a trace has after riding
+        # a benchmark row — and demand bit-identity
+        replayed, _ = _run(hg, ImpartConfig(
+            sched="bandit",
+            sched_replay=SchedulerTrace.from_json(
+                json.loads(json.dumps(trace.to_json()))),
+            **common))
+        replay_equal = bool(
+            np.array_equal(replayed.part, bandit.part)
+            and replayed.cut == bandit.cut
+            and replayed.sched_trace.arm_sequence()
+            == trace.arm_sequence())
+        assert replay_equal, \
+            f"{design}: trace replay diverged from the live bandit run"
+        for method, res, wall in (("static", static, static_wall),
+                                  ("bandit", bandit, bandit_wall)):
+            nd = (len(res.sched_trace.decisions)
+                  if res.sched_trace else 0)
+            print(f"{suite},{design},{k},{method},{res.cut:.0f},"
+                  f"{wall:.1f},{nd}")
+        rows.append({
+            "suite": suite, "design": design, "n": hg.n, "m": hg.m,
+            "k": k, "eps": 0.08, "alpha": alpha, "beta": beta,
+            "seed": seed,
+            "static_cut": float(static.cut),
+            "static_wall_s": round(static_wall, 4),
+            "bandit_cut": float(bandit.cut),
+            "bandit_wall_s": round(bandit_wall, 4),
+            "bandit_degraded": bool(bandit.degraded),
+            "replay_equal": replay_equal,
+            "decisions": len(trace.decisions),
+            "histogram": trace.histogram(),
+            "trace": trace.to_json(),
+        })
+    ratios = [r["bandit_cut"] / max(r["static_cut"], 1e-9) for r in rows]
+    norm = float(np.exp(np.mean(np.log(ratios))))
+    summary = {"norm_avg_bandit_over_static": round(norm, 4),
+               "bandit_beats_static": bool(norm < 1.0),
+               "cases": len(rows)}
+    print(f"# norm-avg bandit/static = {norm:.4f}")
+    if not smoke:
+        assert norm < 1.0, (
+            f"bandit did not beat static at equal wall-clock "
+            f"(norm-avg {norm:.4f}); not writing the artifact")
+    record = {
+        "bench": "sched",
+        "policy": "ucb1",
+        "seed": base_seed,
+        "smoke": bool(smoke),
+        "rows": rows,
+        "summary": summary,
+        "note": ("equal wall-clock: bandit gets time_budget_s = the "
+                 "static run's measured wall; every row's trace replays "
+                 "bit-identically (replay_equal asserted before "
+                 "writing). Smoke rows additionally assert "
+                 "sched='static' is byte-for-byte the default program."),
+    }
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(record, f, indent=2)
+            f.write("\n")
+        print(f"# wrote {json_path} (norm-avg {norm:.4f}, "
+              f"{len(rows)} rows)")
+    return record
+
+
+if __name__ == "__main__":
+    json_dir = None
+    if "--json-dir" in sys.argv:
+        i = sys.argv.index("--json-dir") + 1
+        if i >= len(sys.argv):
+            sys.exit("--json-dir requires a directory argument")
+        json_dir = sys.argv[i]
+        os.makedirs(json_dir, exist_ok=True)
+    jp = ("BENCH_sched.json" if json_dir is None
+          else os.path.join(json_dir, "BENCH_sched.json"))
+    bench_sched(smoke="--smoke" in sys.argv, json_path=jp)

@@ -17,6 +17,8 @@ from .baselines import (multilevel_partition, multilevel_best_of,
                         external_memetic, MultilevelResult)
 from .recombine import recombine, ring_recombination, overlay_clustering
 from .mutate import mutate_population, mutate_path, similarity_sets
+from .scheduler import (OperatorScheduler, SchedulerDecision,
+                        SchedulerTrace, sched_path, resolve_sched)
 from .vcycle import vcycle, vcycle_population
 from .population import make_population_step, population_step_fn
 from .incremental import (incremental_partition, repartition_k_change,
@@ -35,7 +37,9 @@ __all__ = [
     "multilevel_partition", "multilevel_best_of", "external_memetic",
     "MultilevelResult", "recombine", "ring_recombination",
     "overlay_clustering", "mutate_population", "mutate_path",
-    "similarity_sets", "vcycle", "vcycle_population",
+    "similarity_sets", "OperatorScheduler", "SchedulerDecision",
+    "SchedulerTrace", "sched_path", "resolve_sched",
+    "vcycle", "vcycle_population",
     "make_population_step", "population_step_fn",
     "incremental_partition", "repartition_k_change", "IncrementalConfig",
     "IncrementalResult", "IncrementalState",

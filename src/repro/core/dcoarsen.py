@@ -81,6 +81,9 @@ def coarsen_path() -> str:
     env = os.environ.get("REPRO_COARSEN_PATH", "auto").strip().lower()
     if env in COARSEN_PATHS:
         return env
+    if env not in ("", "auto"):
+        from repro.env import warn_env_once
+        warn_env_once("REPRO_COARSEN_PATH", env, "auto routing")
     from repro.kernels import ops
     return "host" if ops.interpret_mode() else "device"
 

@@ -33,6 +33,8 @@ from . import refine as refine_mod
 from . import metrics
 from .recombine import ring_recombination
 from .mutate import mutate_population
+from .scheduler import (OperatorScheduler, POLICIES, REFINE_ARMS,
+                        SchedulerTrace, resolve_sched)
 from .vcycle import vcycle
 
 
@@ -69,6 +71,14 @@ class ImpartConfig:
     # structure sharding over the mesh "model" axis: "mesh"/"off"; None
     # defers to REPRO_MODEL_SHARD (auto = off — DESIGN.md §15)
     model_shard: Optional[str] = None
+    # operator scheduling (DESIGN.md §16): "bandit" adapts the ladder's
+    # operator menu per (level, phase); "static" is the fixed schedule
+    # above, byte-for-byte; None defers to REPRO_SCHED (auto = static)
+    sched: Optional[str] = None
+    sched_policy: str = "ucb1"   # "ucb1" / "egreedy"
+    # replay a logged decision trace instead of choosing live — the
+    # reproducibility contract for bandit runs (DESIGN.md §16)
+    sched_replay: Optional[SchedulerTrace] = None
 
     def __post_init__(self):
         # fail at construction, not minutes in at the first (or never-
@@ -101,6 +111,19 @@ class ImpartConfig:
                     f"unknown model_shard {self.model_shard!r}; expected "
                     f"one of {MODEL_SHARD_PATHS + ('auto',)} (or None for "
                     "REPRO_MODEL_SHARD routing)")
+        if self.sched is not None:
+            from .scheduler import SCHED_PATHS
+            self.sched = self.sched.strip().lower()
+            if self.sched not in SCHED_PATHS + ("auto",):
+                raise ValueError(
+                    f"unknown sched {self.sched!r}; expected one of "
+                    f"{SCHED_PATHS + ('auto',)} (or None for REPRO_SCHED "
+                    "routing)")
+        self.sched_policy = self.sched_policy.strip().lower()
+        if self.sched_policy not in POLICIES:
+            raise ValueError(
+                f"unknown sched_policy {self.sched_policy!r}; expected "
+                f"one of {POLICIES}")
 
 
 @dataclasses.dataclass
@@ -116,9 +139,15 @@ class ImpartResult:
     # fast-forwarded: the part is the valid best-so-far, not the
     # full-strength answer (DESIGN.md §13 degraded mode)
     degraded: bool = False
+    # the logged bandit decision trace (None for the static schedule);
+    # feeding it back through ``ImpartConfig.sched_replay`` reproduces
+    # the run exactly (DESIGN.md §16)
+    sched_trace: Optional[SchedulerTrace] = None
 
 
 def impart_partition(hg: Hypergraph, cfg: ImpartConfig) -> ImpartResult:
+    if resolve_sched(cfg.sched) == "bandit":
+        return _impart_partition_bandit(hg, cfg)
     t0 = time.perf_counter()
     k, eps = cfg.k, cfg.eps
     hier = build_hierarchy(hg, k, seed=cfg.seed,
@@ -214,6 +243,205 @@ def impart_partition(hg: Hypergraph, cfg: ImpartConfig) -> ImpartResult:
         degraded=degraded)
 
 
+def _sched_menu(cfg: ImpartConfig) -> tuple:
+    """The optional-slot arm menu under ``cfg``: the full operator menu
+    minus operators the config disables (and minus the population
+    operators when there is no population to cross — mutation's
+    similarity flagging and the recombination ring both need >= 2
+    members)."""
+    menu = list(REFINE_ARMS)
+    if cfg.mutation_enabled and cfg.alpha > 1:
+        menu.append("mutate")
+    if cfg.recombination_enabled and cfg.alpha > 1:
+        menu.append("recombine")
+    return tuple(menu)
+
+
+def _sched_pull(sch: OperatorScheduler, arm: str, level: int, phase: int,
+                hier, li: int, parts, cuts, cfg: ImpartConfig):
+    """Execute one bandit arm — each arm is exactly one of the static
+    schedule's parity-proven dispatches, with the decision index taking
+    the role the threshold counter plays in the static seeds — then
+    observe reward = best-cut improvement per second, computed from the
+    same cut values the dispatch itself reports."""
+    k, eps = cfg.k, cfg.eps
+    n_li = hier.level_n(li)
+    best_before = float(np.min(np.asarray(cuts)))
+    didx = len(sch.trace.decisions)
+    tA = time.perf_counter()
+    if arm == "lp":
+        parts, cuts = refine_mod.lp_refine_population(
+            hier.level_arrays(li), parts, k, eps, max_iters=cfg.lp_iters,
+            shard=cfg.pop_shard, model_shard=cfg.model_shard)
+    elif arm == "lp_fm":
+        parts, cuts = refine_mod.refine_population(
+            hier.level_arrays(li), parts, k, eps,
+            fm_node_limit=cfg.fm_node_limit, max_iters=cfg.lp_iters,
+            shard=cfg.pop_shard, model_shard=cfg.model_shard)
+    elif arm == "recombine":
+        parts, cuts = ring_recombination(
+            hier.level_host(li), np.asarray(parts)[:, : n_li], cuts, k,
+            eps, seed=cfg.seed * 31 + didx, shard=cfg.pop_shard,
+            model_shard=cfg.model_shard)
+    elif arm == "mutate":
+        parts, cuts = mutate_population(
+            hier.level_host(li), parts, cuts, k, eps,
+            threshold=cfg.similarity_threshold, mu=cfg.mutation_mu,
+            seed=cfg.seed * 17 + didx, path=cfg.mutation_path,
+            shard=cfg.pop_shard, model_shard=cfg.model_shard)
+    else:
+        raise ValueError(f"unknown arm {arm!r}")
+    improvement = best_before - float(np.min(np.asarray(cuts)))
+    sch.observe(level, phase, arm, improvement, time.perf_counter() - tA)
+    return parts, cuts
+
+
+# extra optional slots the wall-budget loop may add at the finest level
+# before the driver stops consulting the clock (a runaway backstop, far
+# above any real budget)
+_SCHED_MAX_EXTRA = 256
+
+
+def _impart_partition_bandit(hg: Hypergraph,
+                             cfg: ImpartConfig) -> ImpartResult:
+    """The bandit-scheduled ladder (DESIGN.md §16).  Identical hierarchy,
+    initial population, budgets and fast-forward mechanics as the static
+    ``impart_partition`` above; what changes is WHICH parity-proven
+    dispatch runs at each (level, phase) slot:
+
+    * phase 0 of every level is a mandatory refinement chosen from
+      {lp, lp_fm} (the ladder must refine every level);
+    * each beta-threshold crossing grants two optional slots (the static
+      schedule's recombine+mutate budget shape) chosen from the full
+      menu;
+    * at the finest level, a wall-clock budget keeps granting optional
+      slots until it is exhausted — this is where the bandit spends the
+      time the static schedule leaves on the table at equal budget.
+
+    Replay (``cfg.sched_replay``): the trace drives everything — arm
+    choices, how many optional slots ran, where a budget fast-forwarded
+    (the trace simply ends at that ladder position), and how many final
+    V-cycles ran — so the clock is never consulted and the replayed run
+    is bit-identical to the live one.
+    """
+    t0 = time.perf_counter()
+    k, eps = cfg.k, cfg.eps
+    hier = build_hierarchy(hg, k, seed=cfg.seed,
+                           contraction_limit_factor=cfg.contraction_limit_factor,
+                           model_shard=cfg.model_shard)
+    num_levels = hier.num_levels
+    n, n_c = hg.n, hier.level_n(num_levels - 1)
+    thresholds = recombination_thresholds(n, n_c, cfg.beta)
+    parts, cuts = initial_partition_population(
+        hier.level_host(num_levels - 1), k, eps,
+        seeds=[cfg.seed * 101 + i for i in range(cfg.alpha)],
+        tries_per_strategy=1, hga=hier.level_arrays(num_levels - 1))
+
+    trace: List[tuple] = [(n_c, list(cuts), "init")]
+    sch = OperatorScheduler(seed=cfg.seed, policy=cfg.sched_policy,
+                            replay=cfg.sched_replay)
+    menu = _sched_menu(cfg)
+    next_thr = 0
+    steps_done = 0
+    degraded = False
+
+    for li in range(num_levels - 1, -1, -1):
+        if sch.replaying and not sch.replay_has_level(li):
+            # the live run's budget tripped at this boundary: replay the
+            # identical fast-forward (project to finest + cheap LP sweep)
+            for lj in range(li, -1, -1):
+                parts = hier.project_pop(parts, lj + 1)
+            parts, cuts = refine_mod.lp_refine_population(
+                hier.level_arrays(0), parts, k, eps, max_iters=4,
+                shard=cfg.pop_shard, model_shard=cfg.model_shard)
+            trace.append((hg.n, list(cuts), "budget-exhausted"))
+            degraded = True
+            break
+        if li < num_levels - 1:
+            parts = hier.project_pop(parts, li + 1)
+        n_li = hier.level_n(li)
+        # phase 0: the mandatory refinement tier for this level
+        arm = sch.choose(li, 0, REFINE_ARMS)
+        parts, cuts = _sched_pull(sch, arm, li, 0, hier, li, parts,
+                                  cuts, cfg)
+        trace.append((n_li, list(cuts), f"sched:{arm}@0"))
+        phase = 1
+        if sch.replaying:
+            while sch.replay_pending(li, phase):
+                arm = sch.choose(li, phase, menu)
+                parts, cuts = _sched_pull(sch, arm, li, phase, hier, li,
+                                          parts, cuts, cfg)
+                trace.append((n_li, list(cuts), f"sched:{arm}@{phase}"))
+                phase += 1
+            continue
+        # optional slots: two per beta-threshold crossing (the static
+        # schedule's operator budget at this level)...
+        while next_thr < cfg.beta and n_li >= thresholds[next_thr] - 1e-9:
+            for _ in range(2):
+                arm = sch.choose(li, phase, menu)
+                parts, cuts = _sched_pull(sch, arm, li, phase, hier, li,
+                                          parts, cuts, cfg)
+                trace.append((n_li, list(cuts), f"sched:{arm}@{phase}"))
+                phase += 1
+            next_thr += 1
+        # ...plus, at the finest level, whatever the wall-clock budget
+        # still affords — exhausting the budget here is the natural end
+        # of a scheduled run, not degradation
+        if li == 0 and cfg.time_budget_s is not None:
+            while (not exhausted(t0, cfg.time_budget_s)
+                   and phase < 1 + 2 * cfg.beta + _SCHED_MAX_EXTRA):
+                arm = sch.choose(li, phase, menu)
+                parts, cuts = _sched_pull(sch, arm, li, phase, hier, li,
+                                          parts, cuts, cfg)
+                trace.append((n_li, list(cuts), f"sched:{arm}@{phase}"))
+                phase += 1
+        steps_done += 1
+        if li > 0 and (exhausted(t0, cfg.time_budget_s)
+                       or level_exhausted(steps_done, cfg.level_budget)):
+            for lj in range(li - 1, -1, -1):
+                parts = hier.project_pop(parts, lj + 1)
+            parts, cuts = refine_mod.lp_refine_population(
+                hier.level_arrays(0), parts, k, eps, max_iters=4,
+                shard=cfg.pop_shard, model_shard=cfg.model_shard)
+            trace.append((hg.n, list(cuts), "budget-exhausted"))
+            degraded = True
+            break
+
+    parts = np.asarray(parts)
+    best = int(np.argmin(cuts))
+    part, cut = parts[best][: hg.n], float(cuts[best])
+    if not degraded:
+        if sch.replaying:
+            n_vc = sch.replay_final_vcycles()
+            for v in range(n_vc):
+                part, cut = vcycle(hg, part, k, eps,
+                                   seed=cfg.seed * 997 + v,
+                                   shard=cfg.pop_shard,
+                                   model_shard=cfg.model_shard,
+                                   scheduler=sch)
+                trace.append((hg.n, [cut], f"final-vcycle@{v}"))
+            sch.trace.final_vcycles = n_vc
+        else:
+            n_vc = 0
+            for v in range(cfg.final_vcycles):
+                if exhausted(t0, cfg.time_budget_s):
+                    break
+                part, cut = vcycle(hg, part, k, eps,
+                                   seed=cfg.seed * 997 + v,
+                                   shard=cfg.pop_shard,
+                                   model_shard=cfg.model_shard,
+                                   scheduler=sch)
+                trace.append((hg.n, [cut], f"final-vcycle@{v}"))
+                n_vc += 1
+            sch.trace.final_vcycles = n_vc
+
+    return ImpartResult(
+        part=np.asarray(part, np.int32), cut=float(cut),
+        population_cuts=[float(c) for c in cuts], trace=trace,
+        wall_s=time.perf_counter() - t0, levels=hier.sizes(),
+        degraded=degraded, sched_trace=sch.trace)
+
+
 def impart_partition_instances(hgs: List[Hypergraph],
                                cfgs: List[ImpartConfig],
                                grid: Optional[List[int]] = None
@@ -248,6 +476,13 @@ def impart_partition_instances(hgs: List[Hypergraph],
     if len({(c.alpha, c.lp_iters, c.fm_node_limit) for c in cfgs}) > 1:
         raise ValueError("instance batching requires equal alpha / "
                          "lp_iters / fm_node_limit across configs")
+    modes = {resolve_sched(c.sched) for c in cfgs}
+    if "bandit" in modes:
+        if modes != {"bandit"}:
+            raise ValueError("instance batching requires a uniform sched "
+                             "mode across configs (got mixed "
+                             "bandit/static)")
+        return _impart_instances_bandit(hgs, cfgs, grid)
     t0 = time.perf_counter()
     nI = len(hgs)
     st = []  # per-request driver state
@@ -353,4 +588,188 @@ def impart_partition_instances(hgs: List[Hypergraph],
             population_cuts=[float(c) for c in cuts], trace=s["trace"],
             wall_s=time.perf_counter() - t0,
             levels=s["hier"].sizes(), degraded=s["degraded"]))
+    return results
+
+
+def _impart_instances_bandit(hgs: List[Hypergraph],
+                             cfgs: List[ImpartConfig],
+                             grid: Optional[List[int]] = None
+                             ) -> List[ImpartResult]:
+    """The bandit-scheduled grouped driver: every request keeps its OWN
+    scheduler (and its own trace — a request's trace replays through the
+    grouped driver or solo), the lockstep walk is unchanged, and the
+    per-step grouped refinement is partitioned by each request's chosen
+    mandatory arm — the ``lp`` group dispatches with ``fm_node_limit=0``
+    (which is exactly ``lp_refine_population`` per lane), the ``lp_fm``
+    group with the configured limit.  Optional slots and budgets are
+    per-request host work, identical to the solo bandit ladder.
+
+    Because reward walls are shared per dispatch group, a LIVE grouped
+    bandit may pull different arms than the same request would solo —
+    the bit-identity contract of the grouped driver is static-only; a
+    grouped bandit run is reproduced from its per-request traces.
+    """
+    t0 = time.perf_counter()
+    st = []
+    for hg, cfg in zip(hgs, cfgs):
+        hier = build_hierarchy(
+            hg, cfg.k, seed=cfg.seed,
+            contraction_limit_factor=cfg.contraction_limit_factor,
+            model_shard=cfg.model_shard)
+        num = hier.num_levels
+        parts, cuts = initial_partition_population(
+            hier.level_host(num - 1), cfg.k, cfg.eps,
+            seeds=[cfg.seed * 101 + i for i in range(cfg.alpha)],
+            tries_per_strategy=1, hga=hier.level_arrays(num - 1))
+        n_c = hier.level_n(num - 1)
+        st.append(dict(
+            hier=hier, parts=parts, cuts=cuts, next_thr=0,
+            thresholds=recombination_thresholds(hg.n, n_c, cfg.beta),
+            trace=[(n_c, list(cuts), "init")],
+            sch=OperatorScheduler(seed=cfg.seed, policy=cfg.sched_policy,
+                                  replay=cfg.sched_replay),
+            steps=0, degraded=False))
+    fm_limit = cfgs[0].fm_node_limit
+    lp_iters = cfgs[0].lp_iters
+
+    max_levels = max(s["hier"].num_levels for s in st)
+    for t in range(max_levels):
+        # choose each active request's mandatory arm, then dispatch the
+        # two refinement groups
+        groups = {"lp": [], "lp_fm": []}
+        for i, s in enumerate(st):
+            hier, cfg, sch = s["hier"], cfgs[i], s["sch"]
+            if s["degraded"] or t >= hier.num_levels:
+                continue
+            li = hier.num_levels - 1 - t
+            if sch.replaying and not sch.replay_has_level(li):
+                # the live run fast-forwarded at this boundary
+                for lj in range(li, -1, -1):
+                    s["parts"] = hier.project_pop(s["parts"], lj + 1)
+                s["parts"], s["cuts"] = refine_mod.lp_refine_population(
+                    hier.level_arrays(0), s["parts"], cfg.k, cfg.eps,
+                    max_iters=4, shard=cfg.pop_shard,
+                    model_shard=cfg.model_shard)
+                s["trace"].append(
+                    (hgs[i].n, list(s["cuts"]), "budget-exhausted"))
+                s["degraded"] = True
+                continue
+            if li < hier.num_levels - 1:
+                s["parts"] = hier.project_pop(s["parts"], li + 1)
+            s["before"] = float(np.min(np.asarray(s["cuts"])))
+            groups[sch.choose(li, 0, REFINE_ARMS)].append(i)
+        if not groups["lp"] and not groups["lp_fm"]:
+            break
+        for arm in ("lp", "lp_fm"):
+            idxs = groups[arm]
+            if not idxs:
+                continue
+            entries = []
+            for i in idxs:
+                s, cfg, hier = st[i], cfgs[i], st[i]["hier"]
+                li = hier.num_levels - 1 - t
+                entries.append((hier.level_arrays(li), s["parts"],
+                                cfg.k, cfg.eps))
+            tA = time.perf_counter()
+            outs = instances_mod.refine_grouped(
+                entries, grid=grid,
+                fm_node_limit=0 if arm == "lp" else fm_limit,
+                max_iters=lp_iters, shard=cfgs[0].pop_shard,
+                model_shard=cfgs[0].model_shard)
+            # the dispatch wall is shared by the group: each request's
+            # reward sees the wall its arm actually cost the batch
+            wall = time.perf_counter() - tA
+            for (rp, rc), i in zip(outs, idxs):
+                s, hier = st[i], st[i]["hier"]
+                li = hier.num_levels - 1 - t
+                s["parts"], s["cuts"] = rp, rc
+                imp = s["before"] - float(np.min(np.asarray(rc)))
+                s["sch"].observe(li, 0, arm, imp, wall)
+                s["trace"].append(
+                    (hier.level_n(li), list(rc), f"sched:{arm}@0"))
+        # optional slots + budgets: per-request host work, identical to
+        # the solo bandit ladder
+        for i, s in enumerate(st):
+            hier, cfg, sch = s["hier"], cfgs[i], s["sch"]
+            if s["degraded"] or t >= hier.num_levels:
+                continue
+            li = hier.num_levels - 1 - t
+            n_li = hier.level_n(li)
+            menu = _sched_menu(cfg)
+            phase = 1
+            if sch.replaying:
+                while sch.replay_pending(li, phase):
+                    arm = sch.choose(li, phase, menu)
+                    s["parts"], s["cuts"] = _sched_pull(
+                        sch, arm, li, phase, hier, li, s["parts"],
+                        s["cuts"], cfg)
+                    s["trace"].append(
+                        (n_li, list(s["cuts"]), f"sched:{arm}@{phase}"))
+                    phase += 1
+                continue
+            while (s["next_thr"] < cfg.beta
+                   and n_li >= s["thresholds"][s["next_thr"]] - 1e-9):
+                for _ in range(2):
+                    arm = sch.choose(li, phase, menu)
+                    s["parts"], s["cuts"] = _sched_pull(
+                        sch, arm, li, phase, hier, li, s["parts"],
+                        s["cuts"], cfg)
+                    s["trace"].append(
+                        (n_li, list(s["cuts"]), f"sched:{arm}@{phase}"))
+                    phase += 1
+                s["next_thr"] += 1
+            if li == 0 and cfg.time_budget_s is not None:
+                while (not exhausted(t0, cfg.time_budget_s)
+                       and phase < 1 + 2 * cfg.beta + _SCHED_MAX_EXTRA):
+                    arm = sch.choose(li, phase, menu)
+                    s["parts"], s["cuts"] = _sched_pull(
+                        sch, arm, li, phase, hier, li, s["parts"],
+                        s["cuts"], cfg)
+                    s["trace"].append(
+                        (n_li, list(s["cuts"]), f"sched:{arm}@{phase}"))
+                    phase += 1
+            s["steps"] += 1
+            if li > 0 and (exhausted(t0, cfg.time_budget_s)
+                           or level_exhausted(s["steps"],
+                                              cfg.level_budget)):
+                for lj in range(li - 1, -1, -1):
+                    s["parts"] = hier.project_pop(s["parts"], lj + 1)
+                s["parts"], s["cuts"] = refine_mod.lp_refine_population(
+                    hier.level_arrays(0), s["parts"], cfg.k, cfg.eps,
+                    max_iters=4, shard=cfg.pop_shard,
+                    model_shard=cfg.model_shard)
+                s["trace"].append(
+                    (hgs[i].n, list(s["cuts"]), "budget-exhausted"))
+                s["degraded"] = True
+
+    results = []
+    for i, (hg, cfg, s) in enumerate(zip(hgs, cfgs, st)):
+        sch = s["sch"]
+        parts = np.asarray(s["parts"])
+        cuts = s["cuts"]
+        best = int(np.argmin(cuts))
+        part, cut = parts[best][: hg.n], float(cuts[best])
+        if not s["degraded"]:
+            if sch.replaying:
+                n_vc = sch.replay_final_vcycles()
+            else:
+                n_vc = cfg.final_vcycles
+            done = 0
+            for v in range(n_vc):
+                if not sch.replaying and exhausted(t0, cfg.time_budget_s):
+                    break
+                part, cut = vcycle(hg, part, cfg.k, cfg.eps,
+                                   seed=cfg.seed * 997 + v,
+                                   shard=cfg.pop_shard,
+                                   model_shard=cfg.model_shard,
+                                   scheduler=sch)
+                s["trace"].append((hg.n, [cut], f"final-vcycle@{v}"))
+                done += 1
+            sch.trace.final_vcycles = done
+        results.append(ImpartResult(
+            part=np.asarray(part, np.int32), cut=float(cut),
+            population_cuts=[float(c) for c in cuts], trace=s["trace"],
+            wall_s=time.perf_counter() - t0,
+            levels=s["hier"].sizes(), degraded=s["degraded"],
+            sched_trace=sch.trace))
     return results

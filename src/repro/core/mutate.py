@@ -51,6 +51,9 @@ def mutate_path() -> str:
     env = os.environ.get("REPRO_MUTATE_PATH", "auto").strip().lower()
     if env in MUTATE_PATHS:
         return env
+    if env not in ("", "auto"):
+        from repro.env import warn_env_once
+        warn_env_once("REPRO_MUTATE_PATH", env, "batch (auto)")
     return "batch"
 
 

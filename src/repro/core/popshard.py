@@ -41,6 +41,8 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro.env import warn_env_once
+
 from ..jaxcompat import make_mesh, shard_map
 
 POP_SHARD_PATHS = ("mesh", "chunk", "off")
@@ -90,6 +92,8 @@ def pop_shard_path() -> str:
     env = os.environ.get("REPRO_POP_SHARD", "auto").strip().lower()
     if env in POP_SHARD_PATHS:
         return env
+    if env not in ("", "auto"):
+        warn_env_once("REPRO_POP_SHARD", env, "auto routing")
     return "mesh" if len(local_devices()) > 1 else "off"
 
 
@@ -110,9 +114,11 @@ def resolve(shard: str | None) -> str:
 def model_axis_size() -> int:
     """Size of the "model" mesh axis (``REPRO_POP_MESH_MODEL``, default 1).
     Values that do not divide the local device count fall back to 1."""
+    raw = os.environ.get("REPRO_POP_MESH_MODEL", "1")
     try:
-        s = int(os.environ.get("REPRO_POP_MESH_MODEL", "1"))
+        s = int(raw)
     except ValueError:
+        warn_env_once("REPRO_POP_MESH_MODEL", raw, "a model axis of 1")
         return 1
     return s if s >= 1 else 1
 
@@ -125,6 +131,8 @@ def model_shard_path() -> str:
     env = os.environ.get("REPRO_MODEL_SHARD", "auto").strip().lower()
     if env in MODEL_SHARD_PATHS:
         return env
+    if env not in ("", "auto"):
+        warn_env_once("REPRO_MODEL_SHARD", env, "off (auto)")
     return "off"
 
 
@@ -334,8 +342,13 @@ def device_mem_budget() -> int | None:
     try:
         b = int(raw)
     except ValueError:
+        warn_env_once("REPRO_DEVICE_MEM_BUDGET", raw, "no budget check")
         return None
-    return b if b > 0 else None
+    if b <= 0:
+        warn_env_once("REPRO_DEVICE_MEM_BUDGET", raw,
+                      "no budget check (must be > 0)")
+        return None
+    return b
 
 
 def structure_bytes_per_device(hga, nmodel: int) -> int:

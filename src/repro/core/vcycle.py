@@ -23,6 +23,7 @@ identical pipeline member-at-a-time (populations of one) — the
 """
 from __future__ import annotations
 
+import time as _time
 from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
@@ -40,13 +41,21 @@ def vcycle(hg: Hypergraph, part: np.ndarray, k: int, eps: float,
            contraction_limit_factor: int = 64,
            eval_weights: np.ndarray | None = None,
            shard: Optional[str] = None,
-           model_shard: Optional[str] = None
+           model_shard: Optional[str] = None,
+           scheduler=None
            ) -> Tuple[np.ndarray, float]:
     """One V-cycle: partition-aware coarsen, refine back up.
 
     ``eval_weights``: if given, the *returned* cut is measured with these
     weights (mutation optimises reweighted edges but reports true cut).
     Never returns a worse partition than the input (elitism on true cut).
+
+    ``scheduler`` (DESIGN.md §16): an ``OperatorScheduler`` threaded in
+    by a bandit-scheduled impart run — each level's refinement tier
+    ({lp, lp_fm}) is then chosen/observed through it (context phase
+    ``SCHED_VCYCLE_PHASE``, logged into the run's shared trace so replay
+    covers the final V-cycles too).  ``None`` (the default, and every
+    pre-existing caller) is the static pipeline, byte-for-byte.
     """
     part = np.asarray(part, np.int32)
     hier = build_hierarchy(hg, k, seed=seed, restrict_part=part,
@@ -61,14 +70,40 @@ def vcycle(hg: Hypergraph, part: np.ndarray, k: int, eps: float,
     # share the structural device arrays, so repeated V-cycles re-ship
     # nothing)
     cur = jnp.asarray(hier.level_part(num - 1), jnp.int32)[None, :]
+    prev_best = None
     for li in range(num - 1, -1, -1):
         if li < num - 1:
             cur = hier.project_pop(cur, li + 1)
         hga = hier.level_arrays(li)
-        cur, _ = refine_mod.refine_population(hga, cur, k, eps,
-                                              fm_node_limit=fm_node_limit,
-                                              shard=shard,
-                                              model_shard=model_shard)
+        if scheduler is None:
+            cur, _ = refine_mod.refine_population(hga, cur, k, eps,
+                                                  fm_node_limit=fm_node_limit,
+                                                  shard=shard,
+                                                  model_shard=model_shard)
+        else:
+            from .scheduler import REFINE_ARMS, SCHED_VCYCLE_PHASE
+            if prev_best is None:
+                # exact projection preserves the cut, so only the
+                # coarsest level needs a fresh before-measurement
+                prev_best = float(metrics.cutsize_jit(
+                    hga, _pad_part(np.asarray(cur[0],
+                                              np.int32)[: int(hga.n_pad)],
+                                   int(hga.n_pad)), k))
+            arm = scheduler.choose(li, SCHED_VCYCLE_PHASE, REFINE_ARMS)
+            tA = _time.perf_counter()
+            if arm == "lp":
+                cur, rc = refine_mod.lp_refine_population(
+                    hga, cur, k, eps, shard=shard,
+                    model_shard=model_shard)
+            else:
+                cur, rc = refine_mod.refine_population(
+                    hga, cur, k, eps, fm_node_limit=fm_node_limit,
+                    shard=shard, model_shard=model_shard)
+            new_best = float(np.min(np.asarray(rc)))
+            scheduler.observe(li, SCHED_VCYCLE_PHASE, arm,
+                              prev_best - new_best,
+                              _time.perf_counter() - tA)
+            prev_best = new_best
 
     out = np.asarray(cur[0])[: hg.n]
     # elitism on the true objective

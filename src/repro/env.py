@@ -1,0 +1,33 @@
+"""One-time warnings for unparsable ``REPRO_*`` environment values.
+
+Every routing/config env var in the stack parses through
+:func:`warn_env_once` instead of silently falling back (the PR 7
+satellite that started with the ``REPRO_SERVE_*`` family, extended to
+the whole ``REPRO_*`` namespace): an invalid value warns exactly once
+per (variable, value) pair and names the fallback it resolved to, so a
+typo in CI or a shell profile shows up in the logs instead of silently
+running the default engine.
+
+This module is a dependency leaf (stdlib only) so the kernel dispatchers
+(``kernels/ops.py``), the core dispatchers (``popshard``/``dcoarsen``/
+``mutate``/``scheduler``) and the serving layer can all share the same
+helper without import cycles.  ``serve.faults.warn_env_once`` re-exports
+it for the existing call sites.
+"""
+from __future__ import annotations
+
+import warnings
+
+_WARNED: set = set()
+
+
+def warn_env_once(var: str, raw: str, fallback: str) -> None:
+    """``warnings.warn`` exactly once per (variable, value) that a
+    ``REPRO_*`` value could not be parsed and what it fell back to —
+    instead of the silent default the early parsers used."""
+    key = (var, raw)
+    if key in _WARNED:
+        return
+    _WARNED.add(key)
+    warnings.warn(f"{var}={raw!r} is not a valid value; "
+                  f"falling back to {fallback}", stacklevel=3)

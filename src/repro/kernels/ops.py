@@ -52,6 +52,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.hypergraph import Hypergraph
+from repro.env import warn_env_once
 from . import ref
 from .common import (GAIN_TABLE_VMEM_BYTES, GAIN_STREAM_TILE_BYTES,  # noqa: F401 (re-exported)
                      KERNEL_MAX_K, RATING_KERNEL_MAX_C, VMEM_BUDGET_BYTES)
@@ -76,6 +77,9 @@ def interpret_mode() -> bool:
         return True
     if env in ("0", "false", "no"):
         return False
+    if env not in ("", "auto"):
+        warn_env_once("REPRO_PALLAS_INTERPRET", env,
+                      "auto (backend-detected)")
     if _INTERPRET_CACHE is None:
         _INTERPRET_CACHE = jax.default_backend() == "cpu"
     return _INTERPRET_CACHE
@@ -88,7 +92,11 @@ GAIN_PATHS = ("table", "stream", "segsum", "compact")
 
 
 def _gain_env() -> str:
-    return os.environ.get("REPRO_GAIN_PATH", "auto").strip().lower()
+    env = os.environ.get("REPRO_GAIN_PATH", "auto").strip().lower()
+    if env not in GAIN_PATHS and env not in ("", "auto"):
+        warn_env_once("REPRO_GAIN_PATH", env, "auto routing")
+        return "auto"
+    return env
 
 
 def gain_layout_enabled() -> bool:
@@ -163,6 +171,8 @@ def rating_path(c: int) -> str:
     env = os.environ.get("REPRO_RATING_PATH", "auto").strip().lower()
     if env in RATING_PATHS:
         return env
+    if env not in ("", "auto"):
+        warn_env_once("REPRO_RATING_PATH", env, "auto routing")
     if interpret_mode() or c > RATING_KERNEL_MAX_C:
         return "xla"
     return "pallas"

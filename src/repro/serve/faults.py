@@ -29,7 +29,6 @@ from __future__ import annotations
 
 import dataclasses
 import os
-import warnings
 from typing import Dict, List, Optional, Sequence
 
 import numpy as np
@@ -46,20 +45,11 @@ class InjectedCrash(RuntimeError):
 
 # --------------------------------------------------------------------------
 # one-time env warnings (satellite: no silent fallbacks in REPRO_* parsers)
+# — the helper itself now lives in the dependency-leaf ``repro.env`` so
+# kernel/core dispatchers share it without importing the serving layer;
+# re-exported here for the existing ``faults_mod.warn_env_once`` callers
 # --------------------------------------------------------------------------
-_WARNED: set = set()
-
-
-def warn_env_once(var: str, raw: str, fallback: str) -> None:
-    """``warnings.warn`` exactly once per (variable, value) that a
-    ``REPRO_*`` value could not be parsed and what it fell back to —
-    instead of the silent default the early parsers used."""
-    key = (var, raw)
-    if key in _WARNED:
-        return
-    _WARNED.add(key)
-    warnings.warn(f"{var}={raw!r} is not a valid value; "
-                  f"falling back to {fallback}", stacklevel=3)
+from repro.env import warn_env_once  # noqa: F401  (re-export)
 
 
 @dataclasses.dataclass

@@ -78,6 +78,8 @@ from repro.core import instances as instances_mod
 from repro.core import metrics as metrics_mod
 from repro.core import popshard
 from repro.core import refine as refine_mod
+from repro.core.scheduler import (OperatorScheduler, REFINE_ARMS,
+                                  resolve_sched)
 from repro.checkpoint import CheckpointManager
 from repro.runtime.elastic import StragglerWatchdog, simulate_device_loss
 from repro.serve import faults as faults_mod
@@ -259,6 +261,11 @@ class _Slot:
     # None for cold requests
     incs: Optional[List[np.ndarray]] = None
     buds: Optional[List[float]] = None
+    # bandit mode (DESIGN.md §16): the slot's per-request scheduler and
+    # its running best cut (the reward baseline); both snapshot through
+    # the checkpoint path and are vacated with the slot
+    scheduler: Optional[OperatorScheduler] = None
+    best_cut: Optional[float] = None
 
     @property
     def occupied(self) -> bool:
@@ -278,6 +285,8 @@ class _Slot:
         self.recovered = False
         self.incs = None
         self.buds = None
+        self.scheduler = None
+        self.best_cut = None
 
 
 class PartitionService:
@@ -309,7 +318,9 @@ class PartitionService:
                  ckpt_every: Optional[int] = None,
                  ckpt_dir: Optional[str] = None,
                  fault_plan: Optional[faults_mod.FaultPlan] = None,
-                 max_retries: int = 1):
+                 max_retries: int = 1,
+                 sched: Optional[str] = None,
+                 sched_policy: str = "ucb1"):
         self.n_slots = slots if slots is not None else serve_slots()
         if buckets is not None:
             buckets = tuple(buckets)
@@ -337,6 +348,15 @@ class PartitionService:
         self.fault_plan = (fault_plan if fault_plan is not None
                            else faults_mod.fault_plan_env())
         self.max_retries = max_retries
+        # per-slot operator scheduling (DESIGN.md §16): "bandit" picks
+        # each slot's refinement tier ({lp, lp_fm}) per tick through a
+        # per-request scheduler; "static" (the default; None defers to
+        # REPRO_SCHED) dispatches every slot with the configured
+        # fm_node_limit, byte-for-byte the pre-scheduler service.  The
+        # bit-identical-to-solo batching contract is static-only: a live
+        # bandit's rewards see shared dispatch walls.
+        self.sched = resolve_sched(sched)
+        self.sched_policy = sched_policy
         self.slots = [_Slot() for _ in range(self.n_slots)]
         self.queue: List[PartitionRequest] = []
         self.results: Dict[str, PartitionResult] = {}
@@ -358,7 +378,10 @@ class PartitionService:
             contraction_limit_factor=self.contraction_limit_factor,
             recombination_enabled=False, mutation_enabled=False,
             final_vcycles=0, pop_shard=self.shard,
-            model_shard=self.model_shard)
+            # the solo-reference pipeline is pinned static whatever
+            # REPRO_SCHED says: the service's own bandit lives in the
+            # slot loop, and the static parity baseline must not move
+            sched="static", model_shard=self.model_shard)
 
     def _icfg_for(self, req: PartitionRequest, seed_bump: int = 0
                   ) -> incremental_mod.IncrementalConfig:
@@ -465,20 +488,25 @@ class PartitionService:
             parts = incremental_mod.seed_incumbent_population(
                 hier, incs[-1], buds[-1], icfg)
             slot.incs, slot.buds = incs, buds
+            slot.best_cut = None  # baseline set by the first dispatch
         else:
             hier = build_hierarchy(
                 req.hg, cfg.k, seed=cfg.seed,
                 contraction_limit_factor=cfg.contraction_limit_factor,
                 model_shard=cfg.model_shard)
             num = hier.num_levels
-            parts, _ = initial_partition_population(
+            parts, init_cuts = initial_partition_population(
                 hier.level_host(num - 1), cfg.k, cfg.eps,
                 seeds=[cfg.seed * 101 + i for i in range(cfg.alpha)],
                 tries_per_strategy=1, hga=hier.level_arrays(num - 1))
             slot.incs, slot.buds = None, None
+            slot.best_cut = float(np.min(np.asarray(init_cuts)))
         slot.request, slot.cfg, slot.hier = req, cfg, hier
         slot.parts, slot.li = parts, hier.num_levels - 1
         slot.need_project = False
+        slot.scheduler = (OperatorScheduler(seed=cfg.seed,
+                                            policy=self.sched_policy)
+                          if self.sched == "bandit" else None)
 
     def _admit(self) -> None:
         for slot in self.slots:
@@ -507,7 +535,12 @@ class PartitionService:
             state[f"slot{i}.parts"] = np.asarray(s.parts)
             meta[str(i)] = {"name": s.request.name, "li": s.li,
                             "need_project": bool(s.need_project),
-                            "seed": s.cfg.seed, "retries": s.retries}
+                            "seed": s.cfg.seed, "retries": s.retries,
+                            # mid-flight bandit state rides the same
+                            # checkpoint (DESIGN.md §16)
+                            "sched": (None if s.scheduler is None
+                                      else s.scheduler.state_dict()),
+                            "best_cut": s.best_cut}
         if state:
             self._ckpt_manager().save(self.tick, state,
                                       extra={"slots": meta,
@@ -553,6 +586,9 @@ class PartitionService:
             s.parts = np.asarray(items[key], np.int32)
             s.li = int(m["li"])
             s.need_project = bool(m["need_project"])
+            if m.get("sched") is not None:
+                s.scheduler = OperatorScheduler.from_state(m["sched"])
+                s.best_cut = m.get("best_cut")
             s.recovered = True
             return True
         return False
@@ -774,10 +810,7 @@ class PartitionService:
                 if ev.kind == "crash":
                     raise faults_mod.InjectedCrash(
                         f"injected mid-tick crash at tick {self.tick}")
-            outs = instances_mod.refine_grouped(
-                entries, grid=self.grid, fm_node_limit=self.fm_node_limit,
-                max_iters=self.lp_iters, shard=self.shard,
-                model_shard=self.model_shard)
+            outs, pulls = self._dispatch_entries(dispatch, entries)
         except faults_mod.InjectedCrash as e:
             # slot state is consistent (projection is deterministic and
             # already recorded); the next tick simply retries the dispatch
@@ -796,12 +829,22 @@ class PartitionService:
                                     "kind": "corrupt_injected",
                                     "request": s.request.name,
                                     "mode": ev.mode})
-        for s, (rp, rc) in zip(dispatch, outs):
+        for s, (rp, rc), pull in zip(dispatch, outs, pulls):
             msg = self._validate(s, rp, rc)
             if msg is not None:
+                # a quarantined pull is never observed: poisoned cuts
+                # must not train the bandit
                 if self._quarantine(s, msg):
                     finished += 1
                 continue
+            if pull is not None:
+                arm, wall = pull
+                new_best = float(np.min(np.asarray(rc)))
+                before = (s.best_cut if s.best_cut is not None
+                          else new_best)
+                s.scheduler.observe(s.li, 0, arm, before - new_best,
+                                    wall)
+                s.best_cut = new_best
             s.parts = rp
             if s.li == 0:
                 self._finish(s, rp, rc)
@@ -813,6 +856,44 @@ class PartitionService:
             self._snapshot_slots()
         self._observe_tick(t_tick)
         return finished
+
+    def _dispatch_entries(self, dispatch: List[_Slot], entries: List
+                          ) -> Tuple[List, List]:
+        """Run the tick's grouped refinement.  Static mode: one dispatch
+        with the configured ``fm_node_limit`` — byte-for-byte the
+        pre-scheduler service.  Bandit mode (DESIGN.md §16): each slot's
+        scheduler picks its refinement tier, and the tick runs (up to)
+        two group dispatches — ``lp`` with ``fm_node_limit=0`` (exactly
+        the LP-only lanes) and ``lp_fm`` with the configured limit.
+        Returns ``(outs, pulls)`` in dispatch order; ``pulls[i]`` is
+        ``(arm, group_wall_s)`` for reward observation after validation
+        (None per slot in static mode)."""
+        if self.sched != "bandit":
+            outs = instances_mod.refine_grouped(
+                entries, grid=self.grid,
+                fm_node_limit=self.fm_node_limit,
+                max_iters=self.lp_iters, shard=self.shard,
+                model_shard=self.model_shard)
+            return outs, [None] * len(dispatch)
+        arms = [s.scheduler.choose(s.li, 0, REFINE_ARMS)
+                for s in dispatch]
+        outs: List = [None] * len(dispatch)
+        pulls: List = [None] * len(dispatch)
+        for arm in REFINE_ARMS:
+            idxs = [i for i, a in enumerate(arms) if a == arm]
+            if not idxs:
+                continue
+            tA = time.perf_counter()
+            sub = instances_mod.refine_grouped(
+                [entries[i] for i in idxs], grid=self.grid,
+                fm_node_limit=0 if arm == "lp" else self.fm_node_limit,
+                max_iters=self.lp_iters, shard=self.shard,
+                model_shard=self.model_shard)
+            wall = time.perf_counter() - tA
+            for j, i in enumerate(idxs):
+                outs[i] = sub[j]
+                pulls[i] = (arm, wall)
+        return outs, pulls
 
     def _observe_tick(self, t_tick: float) -> None:
         dt = time.perf_counter() - t_tick

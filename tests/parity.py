@@ -9,7 +9,11 @@ the work.  The axes:
 * ``pop_shard``   — ``REPRO_POP_SHARD`` (off / chunk / mesh), passed to
   the engines as the ``shard=`` override;
 * ``model_shard`` — ``REPRO_MODEL_SHARD`` (off / mesh), passed as the
-  ``model_shard=`` override.
+  ``model_shard=`` override;
+* ``sched``       — ``REPRO_SCHED`` (static / bandit).  Only ``static``
+  belongs in bit-identity grids (it must be byte-for-byte the pre-
+  scheduler program under every other axis); ``bandit`` is replay-
+  deterministic, not clock-free, and is pinned by its own trace tests.
 
 Before this harness every test file re-implemented the scaffolding
 (force one path, run the workload, compare partitions and cuts against
@@ -60,9 +64,10 @@ import pytest
 # axis name -> env var for the axes routed through the environment;
 # pop_shard/model_shard are explicit kwargs on every engine entry point,
 # so the workload reads those off the combo instead
-AXES = ("coarsen", "mutate", "pop_shard", "model_shard")
+AXES = ("coarsen", "mutate", "pop_shard", "model_shard", "sched")
 _ENV_AXES = {"coarsen": "REPRO_COARSEN_PATH",
-             "mutate": "REPRO_MUTATE_PATH"}
+             "mutate": "REPRO_MUTATE_PATH",
+             "sched": "REPRO_SCHED"}
 
 
 @dataclasses.dataclass(frozen=True)
@@ -74,6 +79,7 @@ class PathCombo:
     mutate: Optional[str] = None
     pop_shard: Optional[str] = None
     model_shard: Optional[str] = None
+    sched: Optional[str] = None
 
     @property
     def id(self) -> str:
@@ -109,11 +115,12 @@ Waiver = Tuple[Callable[[PathCombo], bool], str]
 def grid(coarsen: Sequence[Optional[str]] = (None,),
          mutate: Sequence[Optional[str]] = (None,),
          pop_shard: Sequence[Optional[str]] = (None,),
-         model_shard: Sequence[Optional[str]] = (None,)):
+         model_shard: Sequence[Optional[str]] = (None,),
+         sched: Sequence[Optional[str]] = (None,)):
     """Cartesian grid over the declared axes (undeclared axes stay at
     the engine default in every combo)."""
     return [PathCombo(*vals) for vals in itertools.product(
-        coarsen, mutate, pop_shard, model_shard)]
+        coarsen, mutate, pop_shard, model_shard, sched)]
 
 
 def params(combos: Iterable[PathCombo],

@@ -1,0 +1,242 @@
+"""Operator scheduler (DESIGN.md §16): env routing, replay determinism,
+static-path bit-identity, reward accounting, serving integration.
+
+The contract under test:
+
+* ``REPRO_SCHED=static`` (and ``auto``/unset) is byte-for-byte the
+  pre-scheduler program under every other path axis (the ``sched``
+  axis of ``tests/parity.py``);
+* a ``bandit`` run is wall-clock-adaptive but REPLAYABLE: feeding its
+  logged :class:`SchedulerTrace` back through
+  ``ImpartConfig.sched_replay`` reproduces partition, cut and arm
+  sequence exactly, with the clock never consulted;
+* rewards are an accounting identity (improvement per wall second, and
+  improvements telescope to the run's total cut gain);
+* scheduler state snapshots/restores exactly (same RNG stream, same
+  statistics) and rides the service's checkpoint path through a device
+  loss.
+"""
+import json
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.core import ImpartConfig, impart_partition
+from repro.core import scheduler as sched_mod
+from repro.core.hypergraph import Hypergraph
+from repro.core.scheduler import (OperatorScheduler, SchedulerTrace,
+                                  resolve_sched, sched_path,
+                                  sched_prng_seed)
+from tests import parity
+
+ALPHA, BETA, K = (3, 2, 4)
+
+
+def _hg(n=120, m=240, seed=1):
+    rng = np.random.default_rng(seed)
+    edges = [rng.choice(n, size=int(rng.integers(2, 5)), replace=False)
+             for _ in range(m)]
+    return Hypergraph.from_edge_lists(edges, n=n)
+
+
+def _cfg(**kw):
+    kw.setdefault("k", K)
+    kw.setdefault("eps", 0.10)
+    kw.setdefault("alpha", ALPHA)
+    kw.setdefault("beta", BETA)
+    kw.setdefault("seed", 0)
+    kw.setdefault("final_vcycles", 0)
+    return ImpartConfig(**kw)
+
+
+# --------------------------------------------------------------------------
+# env routing + one-time warnings
+# --------------------------------------------------------------------------
+def test_sched_env_routing(monkeypatch):
+    monkeypatch.delenv("REPRO_SCHED", raising=False)
+    assert sched_path() == "static"          # auto = static
+    monkeypatch.setenv("REPRO_SCHED", "bandit")
+    assert sched_path() == "bandit"
+    assert resolve_sched(None) == "bandit"   # None defers to env
+    assert resolve_sched("static") == "static"  # explicit wins
+    with pytest.raises(ValueError, match="unknown sched path"):
+        resolve_sched("roundrobin")
+
+
+def test_sched_env_warns_once(monkeypatch):
+    monkeypatch.setenv("REPRO_SCHED", "banditt")
+    with pytest.warns(UserWarning, match="REPRO_SCHED"):
+        assert sched_path() == "static"
+    with warnings.catch_warnings():          # warn-once per value
+        warnings.simplefilter("error")
+        assert sched_path() == "static"
+
+
+def test_sched_seed_env(monkeypatch):
+    monkeypatch.delenv("REPRO_SCHED_SEED", raising=False)
+    base = sched_prng_seed(7)
+    assert base == sched_prng_seed(7)        # crc32-derived, stable
+    assert base != sched_prng_seed(8)
+    monkeypatch.setenv("REPRO_SCHED_SEED", "12345")
+    import zlib
+    # explicit override replaces the config seed in the derivation
+    assert sched_prng_seed(7) == zlib.crc32(b"sched:12345")
+    monkeypatch.setenv("REPRO_SCHED_SEED", "not-an-int")
+    with pytest.warns(UserWarning, match="REPRO_SCHED_SEED"):
+        assert sched_prng_seed(7) == base    # bad value falls back
+
+
+# --------------------------------------------------------------------------
+# static path: byte-for-byte the pre-scheduler program (parity grid)
+# --------------------------------------------------------------------------
+HG_PARITY = _hg(seed=3)
+COMBOS = parity.grid(sched=(None, "static"), pop_shard=(None, "chunk"))
+
+
+def _workload(combo):
+    res = impart_partition(HG_PARITY, _cfg(pop_shard=combo.pop_shard))
+    return res.part, [res.cut]
+
+
+@pytest.fixture(scope="module")
+def parity_baseline():
+    return parity.run(_workload, parity.BASELINE)
+
+
+@pytest.mark.parametrize("combo", parity.params(COMBOS))
+def test_static_paths_bit_equal(parity_baseline, combo):
+    parity.assert_parity(parity.run(_workload, combo), parity_baseline,
+                         label=combo.id)
+
+
+# --------------------------------------------------------------------------
+# bandit: replay determinism + reward accounting
+# --------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def bandit_run():
+    hg = _hg(seed=2)
+    cfg = _cfg(sched="bandit", seed=5, final_vcycles=1)
+    return hg, cfg, impart_partition(hg, cfg)
+
+
+def test_bandit_trace_replays_bit_identical(bandit_run):
+    hg, cfg, live = bandit_run
+    trace = live.sched_trace
+    assert trace is not None and trace.decisions
+    # JSON round-trip: the wire shape a trace has on a benchmark row
+    wire = SchedulerTrace.from_json(json.loads(json.dumps(
+        trace.to_json())))
+    replay = impart_partition(hg, ImpartConfig(
+        k=cfg.k, eps=cfg.eps, alpha=cfg.alpha, beta=cfg.beta,
+        seed=cfg.seed, final_vcycles=cfg.final_vcycles,
+        sched="bandit", sched_replay=wire))
+    np.testing.assert_array_equal(replay.part, live.part)
+    assert replay.cut == live.cut
+    assert (replay.sched_trace.arm_sequence()
+            == trace.arm_sequence())
+    assert replay.sched_trace.final_vcycles == trace.final_vcycles
+
+
+def test_bandit_uses_vcycle_phase(bandit_run):
+    # final_vcycles=1: in-vcycle decisions log under the reserved
+    # negative phase so replay can never collide with ladder phases
+    _, _, live = bandit_run
+    phases = {d.phase for d in live.sched_trace.decisions}
+    assert sched_mod.SCHED_VCYCLE_PHASE in phases
+    assert all(p >= 0 or p == sched_mod.SCHED_VCYCLE_PHASE
+               for p in phases)
+
+
+def test_reward_accounting_telescopes():
+    hg = _hg(seed=4)
+    cfg = _cfg(sched="bandit", seed=9)      # final_vcycles=0, no budget
+    res = impart_partition(hg, cfg)
+    trace = res.sched_trace
+    assert trace.decisions
+    for d in trace.decisions:
+        assert d.reward == pytest.approx(
+            d.improvement / max(d.wall_s, 1e-9))
+    # re-derive the initial population's best cut the way the driver
+    # builds it: improvements telescope from there to the final best
+    from repro.core.dcoarsen import build_hierarchy
+    from repro.core.initial_partition import initial_partition_population
+    hier = build_hierarchy(
+        hg, cfg.k, seed=cfg.seed,
+        contraction_limit_factor=cfg.contraction_limit_factor)
+    num = hier.num_levels
+    _, init_cuts = initial_partition_population(
+        hier.level_host(num - 1), cfg.k, cfg.eps,
+        seeds=[cfg.seed * 101 + i for i in range(cfg.alpha)],
+        tries_per_strategy=1, hga=hier.level_arrays(num - 1))
+    total = sum(d.improvement for d in trace.decisions)
+    assert total == pytest.approx(float(np.min(init_cuts)) - res.cut)
+    # the histogram is the decisions, aggregated
+    hist = trace.histogram()
+    assert sum(v["pulls"] for v in hist.values()) == len(trace.decisions)
+
+
+# --------------------------------------------------------------------------
+# scheduler state: exact snapshot/restore
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("policy", sched_mod.POLICIES)
+def test_state_roundtrip_preserves_stream(policy):
+    menu = list(sched_mod.ARMS)
+    a = OperatorScheduler(seed=11, policy=policy)
+    for i in range(6):
+        arm = a.choose(i % 2, 0, menu)
+        a.observe(i % 2, 0, arm, improvement=float(i), wall_s=0.5)
+    state = json.loads(json.dumps(a.state_dict()))  # JSON-able
+    b = OperatorScheduler.from_state(state)
+    assert b.state_dict() == a.state_dict()
+    for i in range(6):                      # same stream from here on
+        arm_a = a.choose(i % 3, 1, menu)
+        arm_b = b.choose(i % 3, 1, menu)
+        assert arm_a == arm_b
+        a.observe(i % 3, 1, arm_a, improvement=1.0, wall_s=0.25)
+        b.observe(i % 3, 1, arm_b, improvement=1.0, wall_s=0.25)
+    assert b.state_dict() == a.state_dict()
+
+
+# --------------------------------------------------------------------------
+# serving: per-slot scheduler rides the checkpoint through device loss
+# --------------------------------------------------------------------------
+def test_service_bandit_snapshot_restore():
+    from repro.data.hypergraphs import _modular_netlist
+    from repro.runtime.elastic import restore_device_pool
+    from repro.serve import faults
+    from repro.serve.partition_service import (PartitionRequest,
+                                               PartitionService)
+    try:
+        plan = faults.FaultPlan.parse("2:device_loss:survivors=1")
+        svc = PartitionService(slots=2, alpha=2, lp_iters=4,
+                               contraction_limit_factor=16,
+                               ckpt_every=1, fault_plan=plan,
+                               sched="bandit")
+        reqs = []
+        for i in range(2):
+            hg = _modular_netlist(360 + 40 * i, 460 + 50 * i,
+                                  seed=20 + i, n_modules=5,
+                                  p_local=0.8, fanout_tail=1.5)
+            reqs.append(PartitionRequest(name=f"sched-svc-{i}", hg=hg,
+                                         k=3, eps=0.08, seed=i))
+            svc.submit(reqs[-1])
+        svc.drain()
+        losses = [e for e in svc.events if e["kind"] == "device_loss"]
+        assert losses and losses[0]["resumed_from_ckpt"] == 2
+        # the snapshot carried mid-flight scheduler state: the resumed
+        # slots kept training (decisions recorded before AND after the
+        # loss), and the answers are structurally valid
+        for i, req in enumerate(reqs):
+            res = svc.results[req.name]
+            assert res.status == "recovered"
+            assert res.part.shape == (req.hg.n,)
+            assert np.isfinite(res.cut)
+        # the checkpoint meta itself holds a restorable scheduler state
+        items, extra = svc._latest_snapshot()
+        metas = list(extra["slots"].values())
+        assert metas and all(m["sched"] is not None for m in metas)
+        restored = OperatorScheduler.from_state(metas[0]["sched"])
+        assert restored.trace.decisions  # it had trained mid-flight
+    finally:
+        restore_device_pool()
